@@ -1,0 +1,41 @@
+"""Paper §9: measured deviation vs the proven bounds (the paper's central
+quantitative claim).  One row per (m, method, profile-kind)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.deviation import max_deviation
+from repro.core.profile import quantize_profile, uniform_profile
+from repro.core.spray import SprayMethod
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    for ell in (6, 8, 10):
+        profiles = {
+            "uniform8": uniform_profile(8, ell),
+            "paper5": quantize_profile(
+                np.array([127, 400, 200, 173, 124], float), ell
+            ),
+            "skewed": quantize_profile(rng.random(12) ** 3 + 1e-3, ell),
+        }
+        for method, bound in (
+            (SprayMethod.SHUFFLE_1, ell),
+            (SprayMethod.SHUFFLE_2, 2 * ell),
+        ):
+            for pname, prof in profiles.items():
+                t0 = time.perf_counter()
+                dev = max_deviation(prof, method, 333 % prof.m, 735 % prof.m)
+                us = (time.perf_counter() - t0) * 1e6
+                emit(
+                    f"deviation/m{1 << ell}/method{int(method)}/{pname}",
+                    us,
+                    f"max_dev={dev:.3f};bound={bound};ok={dev <= bound}",
+                )
+
+
+if __name__ == "__main__":
+    main()

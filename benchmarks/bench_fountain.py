@@ -1,0 +1,38 @@
+"""Erasure transport substrate: LT encode throughput + decode overhead."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.kernels import ops
+from repro.net.fountain import decode_overhead_curve, sample_encoding
+
+import jax.numpy as jnp
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    K, P, R = 256, 256, 64  # 256 source symbols of 1 KiB, 64 repair/batch
+    payload = jnp.asarray(rng.integers(0, 2**32, (K, P), dtype=np.uint32))
+    neigh, valid = sample_encoding(K, R, rng, dmax=16)
+    neigh, valid = jnp.asarray(neigh), jnp.asarray(valid)
+
+    us = timeit(
+        lambda: ops.lt_encode(payload, neigh, valid, backend="reference")
+    )
+    mb = R * P * 4 / 1e6
+    emit(
+        "fountain/encode_jit_oracle", us,
+        f"encoded_MBps={mb / (us / 1e6):.1f}",
+    )
+
+    need = decode_overhead_curve(128, 3, rng)
+    emit(
+        "fountain/decode_overhead_K128", 0.0,
+        f"mean_overhead={float(need.mean() / 128 - 1):.3f};"
+        f"max={float(need.max() / 128 - 1):.3f}",
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Roofline table from the dry-run sweep JSONs (one row per cell).
+
+This is the bench harness face of EXPERIMENTS §Roofline: reads
+results/dryrun/*.json (produced by repro.launch.sweep) and emits the three
+terms + dominant bottleneck per (arch x shape x mesh).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+
+def main() -> None:
+    d = "results/dryrun_v2" if glob.glob("results/dryrun_v2/*.json") else "results/dryrun"
+    files = sorted(glob.glob(os.path.join(d, "*.json")))
+    if not files:
+        emit("roofline/missing", 0.0, "run repro.launch.sweep first")
+        return
+    for f in files:
+        r = json.load(open(f))
+        name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        if r.get("status") == "skipped":
+            emit(name, 0.0, "skipped=" + r["reason"][:60].replace(",", ";"))
+            continue
+        if r.get("status") != "ok":
+            emit(name, 0.0, f"status={r.get('status')}")
+            continue
+        ro = r["roofline"]
+        emit(
+            name,
+            r["timings"]["compile_s"] * 1e6,
+            f"t_comp={ro['t_compute_s']:.4g};t_mem={ro['t_memory_s']:.4g};"
+            f"t_coll={ro['t_collective_s']:.4g};dom={ro['dominant']};"
+            f"frac={ro['roofline_fraction']:.3f};useful={ro['useful_ratio']:.2f}",
+        )
+
+
+if __name__ == "__main__":
+    main()

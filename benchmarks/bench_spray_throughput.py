@@ -1,0 +1,52 @@
+"""Paper §1: 'low per-packet decision overhead'.  Decisions/second for the
+jit'd selection engine (batched), per method, plus the update primitives."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core.profile import quantize_profile
+from repro.core.spray import SprayMethod, make_spray_state, spray_paths
+from repro.core.updates import update_embodiment3
+from repro.kernels import ops
+
+BATCH = 1 << 16
+
+
+def main() -> None:
+    prof = quantize_profile(np.random.default_rng(0).random(16) + 0.1, 10)
+    for method in (SprayMethod.PLAIN, SprayMethod.SHUFFLE_1, SprayMethod.SHUFFLE_2):
+        st = make_spray_state(prof, method=method, sa=333, sb=735)
+        fn = jax.jit(lambda s: spray_paths(s, prof, BATCH))
+        us = timeit(fn, st)
+        emit(
+            f"spray_throughput/jit_ref/method{int(method)}",
+            us,
+            f"decisions_per_s={BATCH / (us / 1e6):.3e}",
+        )
+
+    counters = jnp.arange(BATCH, dtype=jnp.uint32)
+    fn = jax.jit(
+        lambda c: ops.spray_select(
+            c, prof.c, 333, 735, ell=10, method=1, backend="reference"
+        )
+    )
+    us = timeit(fn, counters)
+    emit(
+        "spray_throughput/kernel_oracle",
+        us,
+        f"decisions_per_s={BATCH / (us / 1e6):.3e}",
+    )
+
+    # profile update latency (the whack): embodiment 3, jit'd
+    b = prof.b
+    e = jnp.where(jnp.arange(16) == 3, b // 2, 0)
+    fn = jax.jit(lambda bb: update_embodiment3(bb, jnp.int32(0), e))
+    us = timeit(fn, b)
+    emit("spray_throughput/whack_update_emb3", us, "per_event")
+
+
+if __name__ == "__main__":
+    main()

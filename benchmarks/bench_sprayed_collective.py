@@ -1,0 +1,84 @@
+"""The TPU adaptation: WaM chunk-sprayed all-reduce vs native psum.
+
+Runs in a subprocess with 8 host devices; reports HLO collective wire bytes
+(the dry-run metric) and wall time on the host backend, plus the window-
+balance guarantee of the chunk schedule.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.profile import quantize_counts
+from repro.dist.sprayed_collectives import route_schedule
+
+_SUB = """
+import numpy as np, jax, jax.numpy as jnp, time
+from jax.sharding import PartitionSpec as P
+from repro.launch.mesh import make_test_mesh
+from repro.dist.sprayed_collectives import sprayed_psum
+from repro.analysis.hlo import summarize_collectives
+mesh = make_test_mesh((8,), ("data",))
+x = jnp.zeros((8, 1 << 16), jnp.float32)
+
+for name, fn in [
+    ("native_psum", lambda a: jax.lax.psum(a, "data")),
+    ("sprayed_16ch", lambda a: sprayed_psum(a, "data", n_chunks=16)),
+]:
+    f = jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=P("data"), out_specs=P("data")))
+    compiled = f.lower(x).compile()
+    cols = summarize_collectives(compiled.as_text(), 1)
+    f(x)[0].block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(5):
+        out = f(x)
+        jax.block_until_ready(out)
+    us = (time.perf_counter() - t0) / 5 * 1e6
+    print(f"RESULT,{name},{us:.1f},{cols['total']:.0f},{cols.get('n_ops', 0):.0f}")
+"""
+
+
+def main() -> None:
+    env = {
+        **os.environ,
+        "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+    }
+    proc = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(_SUB)],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    if proc.returncode != 0:
+        emit("sprayed_collective/error", 0.0, proc.stderr[-200:].replace("\n", " "))
+        return
+    for line in proc.stdout.splitlines():
+        if line.startswith("RESULT,"):
+            _, name, us, wire, nops = line.split(",")
+            emit(
+                f"sprayed_collective/{name}",
+                float(us),
+                f"wire_bytes_per_dev={wire};hlo_ops={nops}",
+            )
+
+    # window balance of the schedule itself (any window, any share split)
+    for shares in [(0.5, 0.5), (0.7, 0.3)]:
+        counts = quantize_counts(np.asarray(shares), 10)
+        routes = route_schedule(4096, (counts, 10), sa=333, sb=735)
+        worst = 0.0
+        cum = np.cumsum(routes == 0)
+        for w in (8, 64, 512):
+            win = cum[w:] - cum[:-w]
+            worst = max(worst, np.abs(win - shares[0] * w).max())
+        emit(
+            f"sprayed_collective/window_balance/{shares[0]:.1f}",
+            0.0,
+            f"max_window_dev={worst:.2f};bound=10",
+        )
+
+
+if __name__ == "__main__":
+    main()

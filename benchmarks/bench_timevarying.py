@@ -1,0 +1,39 @@
+"""Paper §8: time-varying profile completion-time table (10 Mbit, 2 paths)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit
+from repro.core.timevarying import (
+    PathSpec,
+    optimal_completion,
+    optimal_two_path_schedule,
+    static_profile_completion,
+)
+
+
+def main() -> None:
+    paths = [PathSpec(100.0, 100.0), PathSpec(10.0, 50.0)]
+    rows = {
+        "all_path1": lambda: static_profile_completion(10.0, paths, (1, 0)),
+        "all_path2": lambda: static_profile_completion(10.0, paths, (0, 1)),
+        "static_both": lambda: static_profile_completion(
+            10.0, paths, (2 / 3, 1 / 3)
+        ),
+        "hybrid_2phase": lambda: optimal_two_path_schedule(10.0, paths)[1],
+        "fluid_optimal": lambda: optimal_completion(10.0, paths),
+    }
+    paper = {"all_path1": 200, "all_path2": 210, "static_both": 167,
+             "hybrid_2phase": 137, "fluid_optimal": 137}
+    for name, fn in rows.items():
+        t0 = time.perf_counter()
+        ms = fn()
+        us = (time.perf_counter() - t0) * 1e6
+        emit(
+            f"sec8_timevarying/{name}", us,
+            f"completion_ms={ms:.2f};paper={paper[name]}",
+        )
+
+
+if __name__ == "__main__":
+    main()

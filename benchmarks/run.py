@@ -1,0 +1,43 @@
+"""Benchmark harness: one module per paper table/claim.
+Prints ``name,us_per_call,derived`` CSV (plus section separators)."""
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks import (
+    bench_arch_ettr,
+    bench_cct,
+    bench_deviation,
+    bench_example_discrepancy,
+    bench_fountain,
+    bench_roofline,
+    bench_sprayed_collective,
+    bench_spray_throughput,
+    bench_timevarying,
+)
+
+SECTIONS = [
+    ("sec9_deviation_bounds", bench_deviation.main),
+    ("sec4_worked_example", bench_example_discrepancy.main),
+    ("sec8_time_varying", bench_timevarying.main),
+    ("sec12_cct_ettr", bench_cct.main),
+    ("spray_throughput", bench_spray_throughput.main),
+    ("sprayed_collective_tpu", bench_sprayed_collective.main),
+    ("fountain_transport", bench_fountain.main),
+    ("arch_ettr_crosslayer", bench_arch_ettr.main),
+    ("roofline_table", bench_roofline.main),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for name, fn in SECTIONS:
+        print(f"# === {name} ===", file=sys.stderr)
+        t0 = time.time()
+        fn()
+        print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

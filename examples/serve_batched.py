@@ -1,0 +1,68 @@
+"""Batched serving example: prefill a batch of prompts, decode with a KV
+cache (ring buffer for SWA archs), report throughput.
+
+    PYTHONPATH=src python examples/serve_batched.py --arch h2o-danube-3-4b
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ARCH_IDS, get_smoke_config
+from repro.models import model as M
+from repro.train.step import build_decode_step, build_prefill_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b", choices=ARCH_IDS)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=64)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    B, S, G = args.batch, args.prompt_len, args.gen
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(1, cfg.vocab_size, (B, S)), jnp.int32)}
+    if cfg.frontend == "vision_patches":
+        s_img = min(cfg.prefix_tokens, S // 2)
+        batch = {"tokens": batch["tokens"][:, : S - s_img],
+                 "patches": jnp.zeros((B, s_img, cfg.d_model), jnp.bfloat16)}
+    if cfg.is_encdec:
+        batch["frames"] = jnp.zeros((B, S, cfg.d_model), jnp.bfloat16)
+
+    cache = M.make_cache(cfg, B, S + G)
+    if cfg.window:
+        print(f"SWA arch: ring-buffer KV cache capacity = "
+              f"{min(cfg.window, S + G)}")
+    prefill = jax.jit(build_prefill_step(cfg))
+    decode = jax.jit(build_decode_step(cfg), donate_argnums=3)
+
+    t0 = time.time()
+    tok, cache = prefill(params, batch, cache)
+    tok.block_until_ready()
+    print(f"prefill {B}x{S}: {(time.time() - t0) * 1e3:.0f} ms")
+
+    toks = [tok]
+    t0 = time.time()
+    for g in range(G - 1):
+        pos = jnp.full((B,), S + g, jnp.int32)
+        tok, cache = decode(params, tok[:, None], pos, cache)
+        toks.append(tok)
+    jax.block_until_ready(toks[-1])
+    dt = time.time() - t0
+    print(f"decode {G - 1} steps: {dt * 1e3:.0f} ms "
+          f"-> {B * (G - 1) / dt:.0f} tok/s (batch aggregate)")
+    gen = np.stack([np.asarray(t) for t in toks], 1)
+    print("sample generations (first 10 token ids):")
+    for row in gen[:3, :10]:
+        print("  ", row.tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Data-parallel training with Whack-a-Mole sprayed gradient reduction.
+
+The paper's engine, end to end in a trainer: gradients are bucketed, buckets
+released in bit-reversed order, and every bucket's all-reduce is chunk-sprayed
+across both ring directions by the seeded spray schedule (repro.dist).
+Numerically exact vs the plain GSPMD step (tested in tests/test_dist.py).
+
+Needs multiple devices:
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/sprayed_dp_train.py
+"""
+import os
+
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=8"
+    )
+
+import jax  # noqa: E402
+
+from repro.configs.registry import get_smoke_config  # noqa: E402
+from repro.data.pipeline import SyntheticLM, host_batch  # noqa: E402
+from repro.models import model as M  # noqa: E402
+from repro.optim.api import make_optimizer  # noqa: E402
+from repro.train.state import TrainState  # noqa: E402
+from repro.train.step import build_sprayed_dp_step  # noqa: E402
+
+
+def main():
+    print(f"devices: {jax.device_count()}")
+    mesh = jax.make_mesh(
+        (jax.device_count(),), ("data",),
+        axis_types=(jax.sharding.AxisType.Auto,),
+    )
+    cfg = get_smoke_config("starcoder2-3b")
+    opt = make_optimizer("adamw", lr=5e-3)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    state = TrainState.create(params, opt.init(params))
+    ds = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=64,
+                     global_batch=jax.device_count() * 2)
+    step = build_sprayed_dp_step(
+        cfg, opt, mesh, n_buckets=4, chunks_per_bucket=16, seed=(333, 735)
+    )
+    print("gradient buckets released in bit-reversed order; each bucket's")
+    print("all-reduce sprayed across both ring directions (WaM schedule)\n")
+    for i in range(30):
+        state, m = step(state, host_batch(ds, i))
+        if (i + 1) % 5 == 0:
+            print(f"step {i + 1:3d}  loss {float(m['loss']):.4f}")
+    print("\nsprayed-DP training converges — same math, paper's transport.")
+
+
+if __name__ == "__main__":
+    main()

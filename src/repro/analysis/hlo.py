@@ -1,0 +1,149 @@
+"""Post-SPMD HLO text analysis: collective inventory with wire-byte costs.
+
+`compiled.cost_analysis()` has two blind spots this module covers:
+  1. collective traffic is not reported at all;
+  2. `lax.scan` bodies are counted ONCE (trip count ignored) — measured in
+     the probes of DESIGN.md §6.
+
+We parse `compiled.as_text()`: every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute op, its result shapes,
+its replica-group size, and whether its `op_name` metadata places it inside
+a `while/body` (scan).  Callers multiply while-resident collectives by the
+known scan trip count (the layer stack is the only collective-bearing scan
+in this framework; the parser reports nesting depth so that assumption is
+checkable).
+
+Wire bytes per device use ring formulas (N = payload bytes, g = group):
+  all-gather       N * (g-1) / g      (N = output size)
+  reduce-scatter   N * (g-1)          (N = output size; input is N*g)
+  all-reduce       2 * N * (g-1) / g  (N = buffer size)
+  all-to-all       N * (g-1) / g
+  collective-permute  N
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List
+
+import numpy as np
+
+__all__ = ["Collective", "parse_collectives", "collective_wire_bytes",
+           "summarize_collectives"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|\S+)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_OPNAME_RE = re.compile(r'op_name="([^"]*)"')
+
+
+@dataclasses.dataclass
+class Collective:
+    kind: str
+    bytes: int          # result payload bytes
+    group: int          # replica group size
+    depth: int          # number of enclosing while/body levels (from op_name)
+    line: str
+
+
+def _result_bytes(line: str) -> int:
+    """Sum byte sizes of all shapes on the LHS of the op (tuple or single)."""
+    lhs = line.split(" = ", 1)
+    if len(lhs) != 2:
+        return 0
+    # shapes appear between '=' and the op kind token
+    m = _OP_RE.search(line)
+    head = line[: m.start() + 1] if m else lhs[0]
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(lhs[1][: m.end() if m else None] if m else lhs[1]):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            n = int(np.prod([int(x) for x in dims.split(",") if x]))
+        total += _DTYPE_BYTES[dt] * n
+    return total
+
+
+def parse_collectives(hlo_text: str) -> List[Collective]:
+    out: List[Collective] = []
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        nbytes = _result_bytes(line)
+        g = 1
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            g = int(gm.group(2))
+        else:
+            gl = _GROUPS_LIST_RE.search(line)
+            if gl:
+                g = len(gl.group(1).split(","))
+            elif kind == "collective-permute":
+                g = 2  # permute pairs
+        opname = ""
+        om = _OPNAME_RE.search(line)
+        if om:
+            opname = om.group(1)
+        depth = opname.count("/while/")
+        out.append(Collective(kind, nbytes, g, depth, line.strip()[:160]))
+    return out
+
+
+def collective_wire_bytes(c: Collective) -> float:
+    """Per-device wire bytes for one execution of this op."""
+    g = max(c.group, 1)
+    n = c.bytes
+    if c.kind == "all-gather":
+        return n * (g - 1) / g
+    if c.kind == "reduce-scatter":
+        return n * (g - 1)
+    if c.kind == "all-reduce":
+        return 2.0 * n * (g - 1) / g
+    if c.kind == "all-to-all":
+        return n * (g - 1) / g
+    if c.kind == "collective-permute":
+        return float(n)
+    raise ValueError(c.kind)
+
+
+def summarize_collectives(
+    hlo_text: str, while_trip_count=1
+) -> Dict[str, float]:
+    """Total per-device wire bytes, multiplying while-resident collectives by
+    the enclosing scans' trip counts.
+
+    `while_trip_count`: int (applied once at depth>=1) or a list indexed by
+    nesting depth, e.g. [1, mb, mb*n_layers] for a microbatch scan wrapping
+    a layer scan.  Returns per-kind totals + 'total' + diagnostics."""
+    if isinstance(while_trip_count, int):
+        mults = [1, while_trip_count]
+    else:
+        mults = list(while_trip_count)
+    cols = parse_collectives(hlo_text)
+    summary: Dict[str, float] = {}
+    total = 0.0
+    max_depth = 0
+    for c in cols:
+        mult = mults[min(c.depth, len(mults) - 1)]
+        w = collective_wire_bytes(c) * mult
+        summary[c.kind] = summary.get(c.kind, 0.0) + w
+        total += w
+        max_depth = max(max_depth, c.depth)
+    summary["total"] = total
+    summary["n_ops"] = float(len(cols))
+    summary["max_while_depth"] = float(max_depth)
+    return summary

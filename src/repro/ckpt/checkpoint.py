@@ -1,0 +1,163 @@
+"""Fault-tolerant checkpointing: atomic, async, elastic.
+
+Layout:  <dir>/step_<N>/arrays.npz + manifest.json  (+ <dir>/LATEST)
+
+  * Atomic: writes go to a temp dir, fsync'd, then os.replace()'d into
+    place and LATEST updated last — a crash mid-save never corrupts the
+    previous checkpoint (restart-safety for node failures).
+  * Async: `save_async` hands the host copy to a writer thread so the
+    train loop resumes immediately (checkpoint stalls don't idle the pod).
+  * Elastic: arrays are stored as full (unsharded) host arrays keyed by
+    pytree path; `restore` re-places them under ANY mesh/sharding template,
+    so a job can restart on a different pod count (data-axis rescaling) —
+    the skip-ahead data pipeline (repro.data) makes the stream line up.
+  * Integrity: manifest carries per-array SHA1s, verified on restore.
+
+At >10B params production would swap the npz container for a sharded
+tensorstore; the protocol (atomicity, manifest, elastic re-place) is the
+part this module demonstrates and tests.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["save", "save_async", "restore", "latest_step", "gc_checkpoints"]
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def _flatten(tree):
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return {(_path_str(p)): v for p, v in leaves}
+
+
+def save(tree: Any, ckpt_dir: str, step: int) -> str:
+    """Blocking atomic save.  Returns the checkpoint path."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = {k: np.asarray(v) for k, v in _flatten(tree).items()}
+    manifest = {
+        "step": step,
+        "arrays": {
+            k: {
+                "shape": list(v.shape),
+                "dtype": str(v.dtype),
+                "sha1": hashlib.sha1(v.tobytes()).hexdigest(),
+            }
+            for k, v in flat.items()
+        },
+    }
+    # npz can't represent ml_dtypes (bfloat16 etc.): store as same-width
+    # unsigned views; the manifest dtype restores the view on load.
+    def _storable(v: np.ndarray) -> np.ndarray:
+        try:
+            np.dtype(v.dtype.name)  # native?
+            if v.dtype.kind in "biufc":
+                return v
+        except TypeError:
+            pass
+        return v.view(f"u{v.dtype.itemsize}")
+
+    np.savez(
+        os.path.join(tmp, "arrays.npz"),
+        **{k: _storable(v) for k, v in flat.items()},
+    )
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    latest = os.path.join(ckpt_dir, "LATEST")
+    with open(latest + ".tmp", "w") as f:
+        f.write(str(step))
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(latest + ".tmp", latest)
+    return final
+
+
+def save_async(tree: Any, ckpt_dir: str, step: int) -> threading.Thread:
+    """Snapshot to host memory synchronously, write in the background."""
+    host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+    t = threading.Thread(target=save, args=(host_tree, ckpt_dir, step))
+    t.start()
+    return t
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    p = os.path.join(ckpt_dir, "LATEST")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return int(f.read().strip())
+
+
+def restore(
+    ckpt_dir: str,
+    template: Any,
+    step: Optional[int] = None,
+    *,
+    verify: bool = True,
+):
+    """Load into the structure (and shardings) of `template`.
+
+    `template` may hold arrays OR ShapeDtypeStructs with .sharding set —
+    restore places each array accordingly (elastic re-place on a new mesh).
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(d, "arrays.npz"))
+    flat_t = jax.tree_util.tree_flatten_with_path(template)
+    leaves, treedef = flat_t
+
+    out = []
+    for path, tmpl in leaves:
+        key = _path_str(path)
+        arr = data[key]
+        meta = manifest["arrays"][key]
+        want_dtype = jax.numpy.dtype(meta["dtype"])
+        if arr.dtype != want_dtype:
+            arr = arr.view(want_dtype)  # undo the unsigned storage view
+        if verify:
+            h = hashlib.sha1(arr.tobytes()).hexdigest()
+            if h != meta["sha1"]:
+                raise IOError(f"checksum mismatch for {key} in step {step}")
+        sharding = getattr(tmpl, "sharding", None)
+        if sharding is not None and not isinstance(
+            sharding, jax.sharding.SingleDeviceSharding
+        ):
+            out.append(jax.device_put(arr, sharding))
+        else:
+            out.append(jax.numpy.asarray(arr))
+    return treedef.unflatten(out)
+
+
+def gc_checkpoints(ckpt_dir: str, keep_last: int = 3) -> None:
+    steps = sorted(
+        int(n.split("_")[1])
+        for n in os.listdir(ckpt_dir)
+        if n.startswith("step_") and not n.endswith(".tmp")
+    )
+    for s in steps[:-keep_last]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"))

@@ -1,0 +1,54 @@
+"""Architecture registry: --arch <id> resolution + smoke variants."""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Callable
+
+from repro.configs.base import ArchConfig
+
+__all__ = ["ARCH_IDS", "get_config", "get_smoke_config", "all_configs"]
+
+ARCH_IDS = [
+    "arctic-480b",
+    "dbrx-132b",
+    "jamba-v0.1-52b",
+    "starcoder2-3b",
+    "qwen3-8b",
+    "qwen1.5-4b",
+    "h2o-danube-3-4b",
+    "xlstm-350m",
+    "llava-next-mistral-7b",
+    "whisper-large-v3",
+]
+
+_MODULES = {
+    "arctic-480b": "arctic_480b",
+    "dbrx-132b": "dbrx_132b",
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+    "starcoder2-3b": "starcoder2_3b",
+    "qwen3-8b": "qwen3_8b",
+    "qwen1.5-4b": "qwen1_5_4b",
+    "h2o-danube-3-4b": "h2o_danube_3_4b",
+    "xlstm-350m": "xlstm_350m",
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+    "whisper-large-v3": "whisper_large_v3",
+}
+
+
+def _module(arch_id: str):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    return _module(arch_id).CONFIG
+
+
+def get_smoke_config(arch_id: str) -> ArchConfig:
+    return _module(arch_id).smoke()
+
+
+def all_configs() -> dict[str, ArchConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

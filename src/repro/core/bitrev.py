@@ -1,0 +1,48 @@
+"""Bit-reversal permutation theta(j, ell) — the heart of Whack-a-Mole spraying.
+
+theta(j, ell) reverses the ell least significant bits of j and interprets the
+result as an integer (paper §4).  Example from the paper: ell=10, j=249
+(0011111001b) -> 1001111100b = 636.
+
+All functions are exact integer (uint32) computations, jit-compatible, and
+work elementwise on arrays.  ell is a static Python int (it is a system
+constant: m = 2**ell selection units).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["bit_reverse32", "theta", "theta_inverse"]
+
+_M1 = 0x55555555
+_M2 = 0x33333333
+_M4 = 0x0F0F0F0F
+_M8 = 0x00FF00FF
+
+
+def bit_reverse32(x):
+    """Reverse all 32 bits of a uint32 (elementwise)."""
+    x = jnp.asarray(x, dtype=jnp.uint32)
+    x = ((x >> 1) & _M1) | ((x & _M1) << 1)
+    x = ((x >> 2) & _M2) | ((x & _M2) << 2)
+    x = ((x >> 4) & _M4) | ((x & _M4) << 4)
+    x = ((x >> 8) & _M8) | ((x & _M8) << 8)
+    x = (x >> 16) | (x << 16)
+    return x
+
+
+def theta(j, ell: int):
+    """theta(j, ell): reverse the ell LSBs of j (paper §4).
+
+    Returns uint32 values in [0, 2**ell).
+    """
+    if not (1 <= ell <= 32):
+        raise ValueError(f"ell must be in [1, 32], got {ell}")
+    j = jnp.asarray(j, dtype=jnp.uint32)
+    mask = jnp.uint32((1 << ell) - 1) if ell < 32 else jnp.uint32(0xFFFFFFFF)
+    return bit_reverse32(j & mask) >> jnp.uint32(32 - ell)
+
+
+def theta_inverse(k, ell: int):
+    """theta is an involution on ell-bit integers: theta(theta(k)) == k."""
+    return theta(k, ell)

@@ -1,0 +1,208 @@
+"""Feedback-driven path-profile control (paper §5-6).
+
+Receivers report per-(path, sequence) events — ECN marks, measured RTT,
+losses (§5 headers carry a path id + per-path sequence number).  The source
+aggregates these into per-path severity weights w(i) and "whacks down"
+degraded paths: remove e(i) = alpha * b(i) balls and redistribute to healthy
+paths, with alpha scaled by severity (§6).  The control objective is to
+minimize sum_i w(i) * b(i).
+
+The controller is functional: (ControllerState, PathStats) -> ControllerState,
+with exact integer profile updates delegated to `repro.core.updates`
+(default: embodiment 3 — redistribute only to non-degraded paths;
+embodiment 4 available for proportional redistribution).  Recovery of a
+previously whacked path uses embodiment 3 in reverse: shave a fraction from
+every healthy path and hand it to the recovering one.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.profile import PathProfile, make_profile
+from repro.core.updates import update_embodiment3, update_embodiment4
+
+__all__ = [
+    "PathStats",
+    "severity_weights",
+    "alpha_for_severity",
+    "weighted_badness",
+    "ControllerState",
+    "make_controller",
+    "whack_down",
+    "restore_path",
+    "controller_step",
+]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PathStats:
+    """Aggregated per-path feedback over a reporting window (all float32[n])."""
+
+    ecn_rate: jax.Array   # fraction of packets ECN-marked
+    loss_rate: jax.Array  # fraction of packets lost
+    rtt: jax.Array        # smoothed RTT (ms)
+
+
+def severity_weights(
+    stats: PathStats,
+    *,
+    ecn_weight: float = 1.0,
+    loss_weight: float = 4.0,
+    rtt_weight: float = 1.0,
+) -> jax.Array:
+    """Per-path severity w(i) >= 0; 0 = healthy.  RTT contributes via its
+    elevation above the current best path (relative congestion signal)."""
+    rtt_floor = jnp.min(stats.rtt)
+    rtt_excess = jnp.where(
+        rtt_floor > 0, (stats.rtt - rtt_floor) / rtt_floor, 0.0
+    )
+    return (
+        ecn_weight * stats.ecn_rate
+        + loss_weight * stats.loss_rate
+        + rtt_weight * jnp.clip(rtt_excess, 0.0, 4.0) / 4.0
+    )
+
+
+def alpha_for_severity(w: jax.Array, cap: float = 0.5) -> jax.Array:
+    """Whack-a-mole adjustment factor alpha (§6): small for minor issues,
+    large for severe ones.  Saturates at `cap` per event — persistent trouble
+    triggers repeated whacks (geometric decay) rather than one cliff, which
+    keeps the controller stable when the send rate is near fabric capacity
+    (a full whack would concentrate load and cascade drops onto healthy
+    paths — the oscillation the gentle ramp avoids)."""
+    return jnp.clip(w, 0.0, 1.0) * cap
+
+
+def weighted_badness(b: jax.Array, w: jax.Array) -> jax.Array:
+    """The §6 objective sum_i w(i) * b(i) (lower is better)."""
+    return jnp.sum(w * b.astype(w.dtype))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ControllerState:
+    """Profile + persistent residual index r (global across updates, §7)."""
+
+    profile: PathProfile
+    r: jax.Array  # int32 scalar residual index
+    ewma_w: jax.Array  # float32[n] smoothed severities
+
+    @property
+    def n(self) -> int:
+        return self.profile.n
+
+
+def make_controller(profile: PathProfile) -> ControllerState:
+    return ControllerState(
+        profile=profile,
+        r=jnp.int32(0),
+        ewma_w=jnp.zeros((profile.n,), jnp.float32),
+    )
+
+
+def _rebuild(profile: PathProfile, b: jax.Array) -> PathProfile:
+    return make_profile(b, profile.ell)
+
+
+def whack_down(
+    state: ControllerState,
+    w: jax.Array,
+    *,
+    degraded_threshold: float = 0.05,
+    proportional: bool = False,
+    min_floor: int = 0,
+) -> ControllerState:
+    """One whack: remove alpha(w_i) * b(i) balls from every degraded path and
+    redistribute to the healthy set (embodiment 3, or 4 if proportional).
+
+    If every path is degraded (no healthy bin to receive), fall back to a
+    severity-proportional removal targeting the single least-bad path as the
+    receiver — the 'least bad mole' still gets the load.
+    """
+    profile = state.profile
+    b = profile.b
+    alpha = alpha_for_severity(w)
+    degraded = w > degraded_threshold
+    # Ensure at least one receiver: never whack the least-bad path.
+    best = jnp.argmin(w)
+    degraded = degraded.at[best].set(False)
+    e = jnp.where(degraded, (alpha * b).astype(jnp.int32), 0)
+    # keep an optional floor of balls on each path (probing traffic)
+    e = jnp.minimum(e, jnp.maximum(b - min_floor, 0))
+    any_removal = jnp.any(e > 0)
+
+    def do_update(args):
+        b0, r0, e0 = args
+        if proportional:
+            return update_embodiment4(b0, r0, e0)
+        return update_embodiment3(b0, r0, e0)
+
+    b_new, r_new = jax.lax.cond(
+        any_removal,
+        do_update,
+        lambda args: (args[0], args[1]),
+        (b, state.r, e),
+    )
+    return dataclasses.replace(
+        state, profile=_rebuild(profile, b_new), r=r_new
+    )
+
+
+def restore_path(
+    state: ControllerState, path: int | jax.Array, beta: float = 0.125
+) -> ControllerState:
+    """Graceful re-ramp of a recovered path (§1 'graceful adaptation'):
+    shave floor(beta * b(i)) from every other path, give to `path`
+    (embodiment 3 with Kbar = {path})."""
+    profile = state.profile
+    b = profile.b
+    n = profile.n
+    idx = jnp.arange(n)
+    e = jnp.where(idx != path, (beta * b).astype(jnp.int32), 0)
+    any_removal = jnp.any(e > 0)
+    b_new, r_new = jax.lax.cond(
+        any_removal,
+        lambda args: update_embodiment3(*args),
+        lambda args: (args[0], args[1]),
+        (b, state.r, e),
+    )
+    return dataclasses.replace(state, profile=_rebuild(profile, b_new), r=r_new)
+
+
+def controller_step(
+    state: ControllerState,
+    stats: PathStats,
+    *,
+    ewma: float = 0.5,
+    degraded_threshold: float = 0.05,
+    recovery_threshold: float = 0.01,
+    recovery_share: float = 0.02,
+    proportional: bool = False,
+) -> Tuple[ControllerState, jax.Array]:
+    """Full feedback tick: severities -> whack-down -> recovery probe.
+
+    Returns (new_state, severities).  Recovery: any path whose smoothed
+    severity fell below `recovery_threshold` but whose allocation is under
+    `recovery_share` of m gets one restore_path ramp.
+    """
+    w_inst = severity_weights(stats)
+    w = ewma * w_inst + (1.0 - ewma) * state.ewma_w
+    state = dataclasses.replace(state, ewma_w=w)
+    state = whack_down(
+        state, w, degraded_threshold=degraded_threshold, proportional=proportional
+    )
+    # Recovery: pick the most under-allocated healthy path, if any.
+    m = state.profile.m
+    share = state.profile.b.astype(jnp.float32) / m
+    starved = (w < recovery_threshold) & (share < recovery_share)
+
+    def do_restore(s):
+        return restore_path(s, jnp.argmax(starved))
+
+    state = jax.lax.cond(jnp.any(starved), do_restore, lambda s: s, state)
+    return state, w

@@ -1,0 +1,133 @@
+"""Discrete path profiles (paper §3).
+
+A path profile over n paths is represented by n bins holding m balls in total
+(m = 2**ell, the precision of the system).  b(i) balls in bin i means a
+fraction p(i) = b(i)/m of packets should use path i.  The cumulative form
+c(i) = sum_{j<=i} b(j) (with c(-1) = 0) supports O(log n) per-packet path
+selection: the path for selection point k is the smallest i with
+c(i-1) <= k < c(i).
+
+Everything here is exact integer arithmetic (int32), jit-compatible, and
+functional: profiles are immutable pytrees (ell is static aux data).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "PathProfile",
+    "make_profile",
+    "cumulative",
+    "from_cumulative",
+    "quantize_counts",
+    "quantize_profile",
+    "uniform_profile",
+    "validate_profile",
+]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PathProfile:
+    """Immutable discrete path profile.
+
+    Attributes:
+      b: int32[n] balls per bin; sum(b) == m.
+      c: int32[n] inclusive cumulative counts; c[-1] == m.
+      ell: static int; m = 2**ell.
+    """
+
+    b: jax.Array
+    c: jax.Array
+    ell: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def n(self) -> int:
+        return int(self.b.shape[0])
+
+    @property
+    def m(self) -> int:
+        return 1 << self.ell
+
+    @property
+    def fractions(self):
+        return np.asarray(self.b, dtype=np.float64) / self.m
+
+
+def cumulative(b: jax.Array) -> jax.Array:
+    """Inclusive cumulative counts c(i) = sum_{j<=i} b(j)."""
+    return jnp.cumsum(jnp.asarray(b, dtype=jnp.int32))
+
+
+def from_cumulative(c: jax.Array) -> jax.Array:
+    """Recover b from the cumulative form: b(i) = c(i) - c(i-1)."""
+    c = jnp.asarray(c, dtype=jnp.int32)
+    return jnp.diff(c, prepend=jnp.zeros((1,), jnp.int32))
+
+
+def make_profile(b, ell: int) -> PathProfile:
+    b = jnp.asarray(b, dtype=jnp.int32)
+    return PathProfile(b=b, c=cumulative(b), ell=ell)
+
+
+def uniform_profile(n: int, ell: int) -> PathProfile:
+    """As-even-as-possible integer split of m balls over n bins."""
+    m = 1 << ell
+    base, extra = divmod(m, n)
+    b = np.full((n,), base, dtype=np.int32)
+    b[:extra] += 1
+    return make_profile(b, ell)
+
+
+def quantize_counts(p, ell: int) -> np.ndarray:
+    """Largest-remainder quantization to integer balls (pure numpy: usable
+    at trace time for static collective schedules)."""
+    p = np.asarray(p, dtype=np.float64)
+    if p.ndim != 1 or p.size == 0:
+        raise ValueError("profile must be a non-empty 1-D array")
+    if np.any(p < 0):
+        raise ValueError("profile fractions must be nonnegative")
+    s = p.sum()
+    if s <= 0:
+        raise ValueError("profile must have positive mass")
+    p = p / s
+    m = 1 << ell
+    scaled = p * m
+    base = np.floor(scaled).astype(np.int64)
+    leftover = int(m - base.sum())
+    if leftover > 0:
+        remainders = scaled - base
+        # Stable: ties broken by lower index, matching round-robin fairness.
+        order = np.argsort(-remainders, kind="stable")
+        base[order[:leftover]] += 1
+    return base.astype(np.int32)
+
+
+def quantize_profile(p, ell: int) -> PathProfile:
+    """Quantize a real-valued profile to integer balls, exactly summing to m.
+
+    Uses the largest-remainder (Hamilton) method: floor allocations first,
+    then hand the leftover balls to the bins with the largest fractional
+    remainders.  This is the canonical way to enter the discrete-integer
+    domain the paper requires (§2: avoid cross-platform float inconsistency
+    *after* this single quantization point).
+    """
+    return make_profile(quantize_counts(p, ell), ell)
+
+
+def validate_profile(profile: PathProfile) -> None:
+    """Host-side invariant check (raises on violation)."""
+    b = np.asarray(profile.b)
+    c = np.asarray(profile.c)
+    if b.ndim != 1:
+        raise ValueError("b must be 1-D")
+    if np.any(b < 0):
+        raise ValueError(f"negative bin counts: {b}")
+    if int(b.sum()) != profile.m:
+        raise ValueError(f"sum(b)={int(b.sum())} != m={profile.m}")
+    if not np.array_equal(np.cumsum(b), c):
+        raise ValueError("cumulative array out of sync with bins")

@@ -1,0 +1,180 @@
+"""Whack-a-Mole packet spraying (paper §4).
+
+Given a discrete path profile (bins/balls, cumulative form c) and an ell-bit
+spray counter j, the path for packet j is the smallest index i with
+
+    c(i-1) <= key(j) < c(i)
+
+where key(j) depends on the spray method:
+
+  * PLAIN     : key = theta(j, ell)                       (§4, unseeded)
+  * SHUFFLE_1 : key = theta(sa + j*sb mod 2^ell, ell)     (§4, method 1)
+  * SHUFFLE_2 : key = (sa + sb*theta(j, ell)) mod 2^ell   (§4, method 2)
+
+with seed (sa, sb), sa in [0, m), sb odd in [1, m).  Deviation bounds (§9):
+<= ell for plain/method 1, <= 2*ell for method 2, over ANY window of packets.
+
+The spray state is a functional pytree.  Selection is memoryless: the path
+depends only on (j, seed, profile) — the property the paper highlights.  All
+arithmetic is exact uint32 (mod-2^ell ops are masks).
+
+Per-path sequence numbers (§5, packet headers) are maintained so receivers
+can report per-path loss/ECN/RTT keyed by (path, seq).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bitrev import theta
+from repro.core.profile import PathProfile
+
+__all__ = [
+    "SprayMethod",
+    "SprayState",
+    "make_spray_state",
+    "spray_key",
+    "select_path",
+    "spray_paths",
+    "spray_batch",
+    "reseed",
+]
+
+
+class SprayMethod(enum.IntEnum):
+    PLAIN = 0
+    SHUFFLE_1 = 1
+    SHUFFLE_2 = 2
+    # §4 "combinations of these methods ... two seeds can be used at each
+    # source": method 1's reversed linear walk fed through method 2's
+    # linear post-mix with an independent seed.  Still a bijection on
+    # [0, m) per period, so the §9 bounds continue to hold (method-2 form:
+    # <= 2*ell; verified empirically in tests/test_deviation.py).
+    COMBINED = 3
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SprayState:
+    """Functional spray-counter state for one source.
+
+    Attributes:
+      j: uint32 scalar — next packet's spray counter value.
+      sa, sb: uint32 scalars — seed pair; sb must be odd (coprime with m).
+      path_seq: int32[n] — next per-path sequence numbers (§5 headers).
+      ell: static precision; m = 2**ell.
+      method: static SprayMethod.
+    """
+
+    j: jax.Array
+    sa: jax.Array
+    sb: jax.Array
+    path_seq: jax.Array
+    ell: int = dataclasses.field(metadata=dict(static=True))
+    method: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def m(self) -> int:
+        return 1 << self.ell
+
+
+def make_spray_state(
+    profile: PathProfile,
+    *,
+    method: SprayMethod = SprayMethod.SHUFFLE_1,
+    sa: int = 0,
+    sb: int = 1,
+    j0: int = 0,
+) -> SprayState:
+    m = profile.m
+    if not (0 <= sa < m):
+        raise ValueError(f"sa must be in [0, m={m}), got {sa}")
+    if not (1 <= sb < m) or sb % 2 == 0:
+        raise ValueError(f"sb must be odd in [1, m={m}), got {sb}")
+    return SprayState(
+        j=jnp.uint32(j0),
+        sa=jnp.uint32(sa),
+        sb=jnp.uint32(sb),
+        path_seq=jnp.zeros((profile.n,), jnp.int32),
+        ell=profile.ell,
+        method=int(method),
+    )
+
+
+def spray_key(j, sa, sb, ell: int, method: int):
+    """Map spray counter value(s) j -> selection point(s) in [0, m)."""
+    mask = jnp.uint32((1 << ell) - 1)
+    j = jnp.asarray(j, jnp.uint32)
+    sa = jnp.asarray(sa, jnp.uint32)
+    sb = jnp.asarray(sb, jnp.uint32)
+    if method == SprayMethod.PLAIN:
+        return theta(j, ell)
+    if method == SprayMethod.SHUFFLE_1:
+        return theta((sa + j * sb) & mask, ell)
+    if method == SprayMethod.SHUFFLE_2:
+        return (sa + sb * theta(j, ell)) & mask
+    if method == SprayMethod.COMBINED:
+        # derive the second seed deterministically from the first (odd sb2):
+        # sources still decorrelate via (sa, sb); a fully independent second
+        # seed can be layered by calling spray_key twice explicitly.
+        sa2 = theta(sa, ell)
+        sb2 = (sb * jnp.uint32(0x9E37) | jnp.uint32(1)) & mask
+        inner = theta((sa + j * sb) & mask, ell)
+        return (sa2 + sb2 * inner) & mask
+    raise ValueError(f"unknown spray method {method}")
+
+
+def select_path(c: jax.Array, key) -> jax.Array:
+    """Smallest i with c(i-1) <= key < c(i) over inclusive cumulative c.
+
+    searchsorted(c, key, side='right') returns the first index whose
+    cumulative strictly exceeds key — exactly the paper's rule.  Bins with
+    b(i) == 0 (c(i-1) == c(i)) are never selected.
+    """
+    return jnp.searchsorted(
+        jnp.asarray(c, jnp.int32), jnp.asarray(key, jnp.int32), side="right"
+    ).astype(jnp.int32)
+
+
+def spray_paths(state: SprayState, profile: PathProfile, count: int) -> jax.Array:
+    """Paths for the next `count` packets (no state update) — memoryless."""
+    js = state.j + jnp.arange(count, dtype=jnp.uint32)
+    keys = spray_key(js, state.sa, state.sb, state.ell, state.method)
+    return select_path(profile.c, keys)
+
+
+def spray_batch(
+    state: SprayState, profile: PathProfile, count: int
+) -> Tuple[jax.Array, jax.Array, SprayState]:
+    """Spray a batch of `count` packets.
+
+    Returns (paths[count], seqs[count], new_state) where seqs are the per-path
+    sequence numbers stamped into packet headers (§5).  Exact and jittable;
+    `count` is static.
+    """
+    paths = spray_paths(state, profile, count)
+    onehot = jax.nn.one_hot(paths, profile.n, dtype=jnp.int32)  # [count, n]
+    # Occurrence index of each packet within its own path inside this batch.
+    occ = jnp.cumsum(onehot, axis=0) - onehot  # [count, n]
+    seqs = state.path_seq[paths] + jnp.take_along_axis(
+        occ, paths[:, None], axis=1
+    )[:, 0]
+    new_state = dataclasses.replace(
+        state,
+        j=state.j + jnp.uint32(count),
+        path_seq=state.path_seq + jnp.sum(onehot, axis=0),
+    )
+    return paths, seqs, new_state
+
+
+def reseed(state: SprayState, sa: int, sb: int) -> SprayState:
+    """Change the seed (paper §4: e.g. whenever j mod m == 0) to avoid
+    persistent collisions with other tightly synchronized sources."""
+    m = state.m
+    sa_a = jnp.asarray(sa, jnp.uint32) & jnp.uint32(m - 1)
+    sb_a = (jnp.asarray(sb, jnp.uint32) | jnp.uint32(1)) & jnp.uint32(m - 1)
+    return dataclasses.replace(state, sa=sa_a, sb=sb_a)

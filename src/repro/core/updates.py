@@ -1,0 +1,227 @@
+"""Dynamic path-profile updates (paper §7) — embodiments 1-4.
+
+All four updates preserve the invariant sum(b) == m exactly, using a
+persistent round-robin residual index r (a *global* across updates) so that
+bins are equally favored in residual distribution over the course of many
+updates.  Every function is a pure map
+
+    (b, r, removal-spec) -> (b', r')
+
+in exact int32 arithmetic, vectorized and jit-compatible (the paper's
+pseudocode loops are replaced by equivalent closed-form masked updates; the
+scalar pseudocode is kept as the numpy reference in `updates_ref` below and
+property-tested against this module).
+
+Embodiments:
+  1. remove e(j) balls from bin j, redistribute evenly over ALL bins.
+  2. remove e(i) from each bin, redistribute evenly over ALL bins.
+  3. remove e(i) from bins in K = {i : e(i) > 0}, redistribute evenly over
+     the complement Kbar; residuals walk r but only land on Kbar.
+  4. remove e(i) from bins in K, redistribute PROPORTIONALLY over all bins
+     (exact integer proportioning), residuals equally over Kbar.
+
+Overflow note: embodiment 4 computes (b(i) - e(i)) * m which requires
+m**2 < 2**31 => ell <= 15 under int32.  The framework default is ell = 10.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "update_embodiment1",
+    "update_embodiment2",
+    "update_embodiment3",
+    "update_embodiment4",
+]
+
+Array = jnp.ndarray
+
+
+def _residuals_all_bins(b: Array, r: Array, y: Array) -> Tuple[Array, Array]:
+    """Add 1 ball to each of y bins, walking round-robin from residual index r
+    (y < n guaranteed by construction: y = e mod n)."""
+    n = b.shape[0]
+    walk = (r + jnp.arange(n, dtype=jnp.int32)) % n
+    add = (jnp.arange(n, dtype=jnp.int32) < y).astype(jnp.int32)
+    b = b.at[walk].add(add)
+    return b, (r + y) % n
+
+
+def _residuals_kbar_only(
+    b: Array, r: Array, y: Array, in_kbar: Array
+) -> Tuple[Array, Array]:
+    """Paper §7 embodiment 3/4 residual loop:
+
+        while y > 0: if r in Kbar: b[r] += 1; y -= 1; r = (r+1) mod n
+
+    Walking n consecutive positions from r visits every Kbar bin exactly once
+    and y < |Kbar|, so a single masked pass over a length-n window suffices.
+    The loop exits immediately after the y-th Kbar hit, so the new r is one
+    past that position (r unchanged when y == 0).
+    """
+    n = b.shape[0]
+    walk = (r + jnp.arange(n, dtype=jnp.int32)) % n
+    kbar_on_walk = in_kbar[walk].astype(jnp.int32)
+    rank = jnp.cumsum(kbar_on_walk)  # 1-based count of Kbar hits so far
+    add = (kbar_on_walk == 1) & (rank <= y)
+    b = b.at[walk].add(add.astype(jnp.int32))
+    # Position (0-based offset) of the y-th Kbar hit along the walk.
+    is_yth = (rank == y) & (kbar_on_walk == 1)
+    yth_off = jnp.argmax(is_yth).astype(jnp.int32)
+    new_r = jnp.where(y > 0, (r + yth_off + 1) % n, r)
+    return b, new_r
+
+
+def update_embodiment1(b: Array, r: Array, j, e_j) -> Tuple[Array, Array]:
+    """Remove e(j) balls from bin j; redistribute evenly over all bins."""
+    b = jnp.asarray(b, jnp.int32)
+    r = jnp.asarray(r, jnp.int32)
+    j = jnp.asarray(j, jnp.int32)
+    e_j = jnp.asarray(e_j, jnp.int32)
+    n = b.shape[0]
+    x = e_j // n
+    y = e_j % n
+    b = b + x
+    b = b.at[j].add(-e_j)
+    return _residuals_all_bins(b, r, y)
+
+
+def update_embodiment2(b: Array, r: Array, e: Array) -> Tuple[Array, Array]:
+    """Remove e(i) from each bin; redistribute evenly over all bins."""
+    b = jnp.asarray(b, jnp.int32)
+    r = jnp.asarray(r, jnp.int32)
+    e = jnp.asarray(e, jnp.int32)
+    n = b.shape[0]
+    tot = jnp.sum(e)
+    x = tot // n
+    y = tot % n
+    b = b - e + x
+    return _residuals_all_bins(b, r, y)
+
+
+def update_embodiment3(b: Array, r: Array, e: Array) -> Tuple[Array, Array]:
+    """Remove e(i) from bins in K = {e > 0}; redistribute evenly over Kbar.
+
+    Requires at least one e(i) > 0 and at least one e(i) == 0 (paper §7).
+    """
+    b = jnp.asarray(b, jnp.int32)
+    r = jnp.asarray(r, jnp.int32)
+    e = jnp.asarray(e, jnp.int32)
+    in_kbar = e == 0
+    kbar = jnp.sum(in_kbar.astype(jnp.int32))
+    tot = jnp.sum(e)
+    x = tot // kbar
+    y = tot % kbar
+    b = b - e + jnp.where(in_kbar, x, 0)
+    return _residuals_kbar_only(b, r, y, in_kbar)
+
+
+def update_embodiment4(b: Array, r: Array, e: Array) -> Tuple[Array, Array]:
+    """Remove e(i) from bins in K; redistribute PROPORTIONALLY over all bins.
+
+    b'(i) = ((b(i) - e(i)) * m) div (m - e_tot); the integer-proportioning
+    remainders sum to an exact multiple of (m - e_tot) and the resulting
+    leftover balls go evenly to Kbar (residual walk as embodiment 3).
+    """
+    b = jnp.asarray(b, jnp.int32)
+    r = jnp.asarray(r, jnp.int32)
+    e = jnp.asarray(e, jnp.int32)
+    m = jnp.sum(b)  # invariant: the system's ball count
+    in_kbar = e == 0
+    kbar = jnp.sum(in_kbar.astype(jnp.int32))
+    e_tot = jnp.sum(e)
+    denom = m - e_tot
+    scaled = (b - e) * m
+    b_new = scaled // denom
+    rem = scaled % denom
+    leftover = jnp.sum(rem) // denom  # exact: sum(rem) = leftover * denom
+    x = leftover // kbar
+    y = leftover % kbar
+    b_new = b_new + jnp.where(in_kbar, x, 0)
+    return _residuals_kbar_only(b_new, r, y, in_kbar)
+
+
+# ---------------------------------------------------------------------------
+# Reference implementations: literal transcriptions of the paper's pseudocode
+# (scalar loops, numpy int64).  Property tests assert the vectorized jnp
+# versions above match these exactly.
+# ---------------------------------------------------------------------------
+
+
+def _ref_residuals_all(b, r, y):
+    for _ in range(int(y)):
+        b[r] += 1
+        r = (r + 1) % b.shape[0]
+    return b, r
+
+
+def ref_embodiment1(b, r, j, e_j):
+    b = np.array(b, dtype=np.int64)
+    n = b.shape[0]
+    x, y = int(e_j) // n, int(e_j) % n
+    for i in range(n):
+        if i != j:
+            b[i] += x
+    b[j] = b[j] - int(e_j) + x
+    return _ref_residuals_all(b, int(r), y)
+
+
+def ref_embodiment2(b, r, e):
+    b = np.array(b, dtype=np.int64)
+    e = np.asarray(e, dtype=np.int64)
+    n = b.shape[0]
+    tot = int(e.sum())
+    x, y = tot // n, tot % n
+    for i in range(n):
+        b[i] = b[i] - e[i] + x
+    return _ref_residuals_all(b, int(r), y)
+
+
+def ref_embodiment3(b, r, e):
+    b = np.array(b, dtype=np.int64)
+    e = np.asarray(e, dtype=np.int64)
+    n = b.shape[0]
+    kbar_set = [i for i in range(n) if e[i] == 0]
+    tot = int(e.sum())
+    x, y = tot // len(kbar_set), tot % len(kbar_set)
+    for i in range(n):
+        if e[i] > 0:
+            b[i] -= e[i]
+        else:
+            b[i] += x
+    r = int(r)
+    while y > 0:
+        if e[r] == 0:
+            b[r] += 1
+            y -= 1
+        r = (r + 1) % n
+    return b, r
+
+
+def ref_embodiment4(b, r, e):
+    b = np.array(b, dtype=np.int64)
+    e = np.asarray(e, dtype=np.int64)
+    n = b.shape[0]
+    m = int(b.sum())
+    kbar_set = [i for i in range(n) if e[i] == 0]
+    e_tot = int(e.sum())
+    denom = m - e_tot
+    rem = np.zeros(n, dtype=np.int64)
+    for i in range(n):
+        scaled = (b[i] - e[i]) * m
+        b[i] = scaled // denom
+        rem[i] = scaled % denom
+    leftover = int(rem.sum()) // denom
+    x, y = leftover // len(kbar_set), leftover % len(kbar_set)
+    for i in kbar_set:
+        b[i] += x
+    r = int(r)
+    while y > 0:
+        if e[r] == 0:
+            b[r] += 1
+            y -= 1
+        r = (r + 1) % n
+    return b, r

@@ -1,0 +1,79 @@
+"""Pallas TPU kernel: LT/fountain-code encoding (GF(2) XOR aggregation).
+
+The paper's transport pairs spraying with erasure coding ("compatibility with
+coding-based reliability such as fountain codes or LT3"): each encoded packet
+is the XOR of a small set of source symbols, so ANY sufficiently large subset
+of received packets decodes the message.  Encoding throughput is the compute
+hot-spot of a coded sender — this kernel streams source payloads resident in
+VMEM and produces encoded packets at VPU XOR rate.
+
+Layout: payload [K, P] uint32 (K source symbols, P words each), neighbor
+lists [R, dmax] int32 + validity mask (degree <= dmax).  Grid tiles the
+output rows (R) and payload words (P); each program XORs dmax dynamically-
+indexed payload rows into its [br, bp] output tile.  The row gather is a
+dynamic VMEM slice per (r, t) — on TPU this is a cheap sublane shuffle since
+rows are lane-contiguous.
+
+dmax is static: the robust-soliton tail is clipped by the host (degrees
+above dmax are re-sampled; see repro.net.fountain).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["lt_encode_pallas"]
+
+
+def _kernel(neigh_ref, valid_ref, payload_ref, out_ref, *, dmax: int, br: int):
+    def xor_row(r, acc):
+        def xor_one(t, acc_r):
+            idx = neigh_ref[r, t]
+            ok = valid_ref[r, t]
+            row = pl.load(payload_ref, (pl.dslice(idx, 1), slice(None)))[0]
+            return acc_r ^ jnp.where(ok, row, jnp.uint32(0))
+
+        acc_r = jax.lax.fori_loop(
+            0, dmax, xor_one, jnp.zeros_like(acc[r])
+        )
+        return acc.at[r].set(acc_r)
+
+    acc = jnp.zeros_like(out_ref)
+    acc = jax.lax.fori_loop(0, br, xor_row, acc)
+    out_ref[...] = acc
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_r", "block_p", "interpret")
+)
+def lt_encode_pallas(
+    payload: jax.Array,    # uint32[K, P]
+    neighbors: jax.Array,  # int32[R, dmax]
+    valid: jax.Array,      # bool[R, dmax]
+    *,
+    block_r: int = 8,
+    block_p: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    K, P = payload.shape
+    R, dmax = neighbors.shape
+    if R % block_r != 0 or P % block_p != 0:
+        raise ValueError(
+            f"R={R} must tile by {block_r} and P={P} by {block_p}"
+        )
+    grid = (R // block_r, P // block_p)
+    return pl.pallas_call(
+        functools.partial(_kernel, dmax=dmax, br=block_r),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_r, dmax), lambda r, p: (r, 0)),
+            pl.BlockSpec((block_r, dmax), lambda r, p: (r, 0)),
+            pl.BlockSpec((K, block_p), lambda r, p: (0, p)),
+        ],
+        out_specs=pl.BlockSpec((block_r, block_p), lambda r, p: (r, p)),
+        out_shape=jax.ShapeDtypeStruct((R, P), jnp.uint32),
+        interpret=interpret,
+    )(neighbors, valid, payload)

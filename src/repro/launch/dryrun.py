@@ -1,0 +1,540 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production mesh and extract memory / cost / collective analyses.
+
+    PYTHONPATH=src python -m repro.launch.dryrun \
+        --arch qwen3-8b --shape train_4k --mesh single --out results/...
+
+Proves (per brief): the sharding config is coherent (SPMD partitioning
+succeeds), the step fits (memory_analysis), and yields the roofline terms
+(cost_analysis + HLO collective parse, scan-corrected by a one-period probe
+compile — see DESIGN §6).
+"""
+import argparse
+import json
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis import costs as C
+from repro.analysis.hlo import summarize_collectives
+from repro.configs.base import ShapeSpec, shape_by_name
+from repro.configs.registry import get_config
+from repro.dist import sharding as shlib
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.models.transformer import stack_specs
+from repro.optim.api import make_optimizer
+from repro.train.state import TrainState
+from repro.train.step import build_decode_step, build_prefill_step, build_train_step
+
+__all__ = ["run_cell", "shape_rules"]
+
+
+# Sharding profiles — the §Perf hillclimb knobs.  Overrides applied on top
+# of the per-shape rules; see EXPERIMENTS.md §Perf for the iteration log.
+PROFILES: Dict[str, Dict[str, Any]] = {
+    # honest starting point: Megatron-style TP on model + FSDP on data
+    "baseline": {},
+    # pure FSDP / ZeRO-3: batch over EVERY mesh axis, parameters sharded over
+    # the same axes on their embed dim; no tensor parallelism -> activation
+    # all-reduces disappear, weight all-gathers (overlappable) remain.
+    "fsdp": {
+        "batch": ("pod", "data", "model"),
+        "embed_fsdp": ("data", "model"),
+        "heads": None, "kv_heads": None, "ff": None, "vocab": None,
+        "experts": "model", "ssm_inner": None,
+    },
+    # expert-parallel-major for MoE: experts over model, dense dims FSDP over
+    # data only (no per-microbatch cross-data expert-weight all-gathers).
+    "ep_major": {
+        "experts": "model",
+        "embed_fsdp": "data",
+        "ff": None,
+        "heads": "model", "kv_heads": "model",
+    },
+    # serving: weights resident (model-sharded only, no FSDP over data) —
+    # per-token weight all-gathers make no sense when the whole point is
+    # latency; an 8B model at bf16/16-way model sharding is ~1 GB/chip.
+    "serve": {
+        "embed_fsdp": None,
+    },
+}
+
+
+def shape_rules(shape: ShapeSpec) -> Dict[str, Any]:
+    """Full logical-rule table for this shape (defaults + overrides,
+    see DESIGN §5)."""
+    if shape.name == "long_500k":
+        # batch=1: sequence-parallel the KV cache over every DP axis instead
+        over = {"batch": None, "kv_seq": ("pod", "data")}
+    elif shape.kind in ("decode", "prefill"):
+        # batch shards over (pod, data); the KV cache seq dim shards over
+        # model (kv_heads like 8 or 20 don't divide a 16-way axis, so head
+        # sharding alone would replicate multi-TB caches).  Flash-decode's
+        # seq reduction then LSE-combines across model with O(B*H) traffic.
+        over = {"kv_seq": "model"}
+    else:
+        # train: batch is the sharded axis; kv_seq unused
+        over = {"kv_seq": None}
+    return {**shlib.DEFAULT_RULES, **over}
+
+
+def _axis_size(mesh, target) -> int:
+    if target is None:
+        return 1
+    if isinstance(target, (tuple, list)):
+        n = 1
+        for a in target:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[target]
+
+
+def _sds(tree_shapes, tree_axes, mesh, rules):
+    """ShapeDtypeStructs with NamedShardings attached.
+
+    Best-effort sharding: a dim whose size does not divide its mesh-axis
+    product falls back to replication for that dim (the logical-rule
+    fallback every production sharding table needs — e.g. kv_heads=8 on a
+    16-way model axis, or whisper's vocab 51866)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def one(sd, axes):
+        spec = []
+        used: set = set()
+        for dim, ax in zip(sd.shape, axes):
+            target = rules.get(ax) if ax is not None else None
+            if isinstance(target, (tuple, list)):
+                target = tuple(
+                    a for a in target
+                    if a in mesh.axis_names and a not in used
+                ) or None
+            elif target is not None and (
+                target not in mesh.axis_names or target in used
+            ):
+                target = None
+            if target is not None and dim % _axis_size(mesh, target) != 0:
+                target = None
+            if target is not None:
+                used.update(target if isinstance(target, tuple) else (target,))
+            spec.append(target)
+        sh = NamedSharding(mesh, P(*spec))
+        return jax.ShapeDtypeStruct(sd.shape, sd.dtype, sharding=sh)
+
+    return jax.tree.map(
+        one, tree_shapes, tree_axes,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+
+
+def _opt_state_axes(params_sds, params_axes, opt_name: str):
+    """Logical axes for optimizer state mirroring the param tree."""
+    from repro.optim.adamw import AdamWState
+    from repro.optim.adafactor import AdafactorState
+
+    if opt_name == "adamw":
+        return AdamWState(step=(), m=params_axes, v=params_axes)
+
+    def vr_axes(sd, axes):
+        from repro.optim.adafactor import _factored
+        return tuple(axes[:-1]) if _factored(sd) else tuple(axes)
+
+    def vc_axes(sd, axes):
+        from repro.optim.adafactor import _factored
+        return (tuple(axes[:-2]) + (axes[-1],)) if _factored(sd) else (None,)
+
+    vr = jax.tree.map(
+        vr_axes, params_sds, params_axes,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+    vc = jax.tree.map(
+        vc_axes, params_sds, params_axes,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+    return AdafactorState(step=(), vr=vr, vc=vc)
+
+
+def _cost_dict(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+    }
+
+
+def _memory_dict(compiled) -> Dict[str, float]:
+    ma = compiled.memory_analysis()
+    return {
+        k: float(getattr(ma, k))
+        for k in (
+            "argument_size_in_bytes",
+            "output_size_in_bytes",
+            "temp_size_in_bytes",
+            "alias_size_in_bytes",
+            "generated_code_size_in_bytes",
+        )
+    }
+
+
+def _probe_period(cfg, shape, mesh, rules, mb: int = 1) -> Optional[Dict[str, float]]:
+    """Compile ONE period (fwd+bwd for train, fwd for serve) at MICROBATCH
+    size with the same shardings: its cost_analysis is the scan-body term
+    that the full compile counts only once
+    (corrected = full + (mb*L - 1) * probe + (mb-1) * head-term)."""
+    from repro.models.transformer import (
+        init_stack, run_stack_train, run_stack_decode, init_stack_cache,
+    )
+
+    B, S = shape.global_batch // mb, shape.seq_len
+    one_cfg_layers = len(cfg.period)
+
+    period_params_sds = jax.eval_shape(
+        lambda: init_stack(
+            jax.random.PRNGKey(0), cfg, n_layers=one_cfg_layers
+        )
+    )
+    period_axes = stack_specs(cfg)
+    pp = _sds(period_params_sds, period_axes, mesh, rules)
+
+    if shape.kind == "decode":
+        x = jax.ShapeDtypeStruct(
+            (B, 1, cfg.d_model), jnp.bfloat16,
+            sharding=shlib.logical_sharding(("batch", None, "embed"), mesh, rules),
+        )
+        pos = jax.ShapeDtypeStruct(
+            (B,), jnp.int32,
+            sharding=shlib.logical_sharding(("batch",), mesh, rules),
+        )
+        cache_sds = jax.eval_shape(
+            lambda: init_stack_cache(
+                cfg, B, S, enc_len=S if cfg.is_encdec else 0
+            )
+        )
+        # one period only
+        cache_sds = jax.tree.map(
+            lambda sd: jax.ShapeDtypeStruct((1,) + sd.shape[1:], sd.dtype),
+            cache_sds,
+        )
+        cache_axes = M.cache_axes(cfg)
+        cc = _sds(cache_sds, cache_axes, mesh, rules)
+
+        def fn(p, xx, q, c):
+            with shlib.mesh_context(mesh, rules):
+                y, c2 = run_stack_decode(p, cfg, xx, q, c)
+            return y, c2
+
+        compiled = jax.jit(fn).lower(pp, x, pos, cc).compile()
+    else:
+        x = jax.ShapeDtypeStruct(
+            (B, S, cfg.d_model), jnp.bfloat16,
+            sharding=shlib.logical_sharding(("batch", None, "embed"), mesh, rules),
+        )
+        enc = (
+            jax.ShapeDtypeStruct(
+                (B, S, cfg.d_model), jnp.bfloat16,
+                sharding=shlib.logical_sharding(
+                    ("batch", None, "embed"), mesh, rules
+                ),
+            )
+            if cfg.is_encdec
+            else None
+        )
+
+        def fn(p, xx, ee):
+            positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+            with shlib.mesh_context(mesh, rules):
+                if shape.kind == "train":
+                    def inner(p_, x_):
+                        y, aux = run_stack_train(
+                            p_, cfg, x_, positions, encoder_out=ee
+                        )
+                        return jnp.sum(y.astype(jnp.float32) ** 2) + aux
+                    return jax.grad(inner)(p, xx)
+                y, _ = run_stack_train(
+                    p, cfg, xx, positions, encoder_out=ee, remat=False
+                )
+                return y
+
+        compiled = jax.jit(fn).lower(pp, x, enc).compile()
+    out = _cost_dict(compiled)
+    out["collectives"] = summarize_collectives(compiled.as_text(), 1)
+    return out
+
+
+def default_microbatch(cfg, shape, mesh, rules) -> int:
+    """Gradient-accumulation factor so one microbatch's activations fit HBM:
+    target <= 16k tokens per device-batch-shard per microbatch."""
+    if shape.kind != "train":
+        return 1
+    dp = _axis_size(mesh, tuple(
+        a for a in (rules.get("batch") or ()) if a in mesh.axis_names
+    ) or None)
+    tokens_per_shard = (shape.global_batch // max(dp, 1)) * shape.seq_len
+    mb = max(1, int(np.ceil(tokens_per_shard / 16384)))
+    # divisibility: microbatch must divide the per-shard batch
+    b_shard = shape.global_batch // max(dp, 1)
+    while b_shard % mb:
+        mb += 1
+    return mb
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    mesh_kind: str,
+    *,
+    probe: bool = True,
+    microbatch: Optional[int] = None,
+    save_hlo: Optional[str] = None,
+    profile: str = "baseline",
+    mesh_shape: Optional[tuple] = None,
+    param_dtype: Optional[str] = None,
+    unroll: bool = False,
+    remat_policy: Optional[str] = None,
+    kv_quant: bool = False,
+) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    import dataclasses as _dc
+    if param_dtype:
+        cfg = _dc.replace(cfg, param_dtype=param_dtype)
+    if kv_quant:
+        cfg = _dc.replace(cfg, kv_quant=True)
+    shape = shape_by_name(shape_name)
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return {
+            "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+            "status": "skipped",
+            "reason": "full quadratic attention at 500k context "
+                      "(see DESIGN.md §Arch-applicability)",
+        }
+    if mesh_shape is not None:
+        axes = (
+            ("pod", "data", "model") if len(mesh_shape) == 3
+            else ("data", "model")
+        )
+        mesh = jax.make_mesh(
+            mesh_shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+        )
+    else:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = int(np.prod(mesh.devices.shape))
+    rules = {**shape_rules(shape), **PROFILES[profile]}
+
+    t0 = time.time()
+    params_sds = jax.eval_shape(lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+    params_axes = M.param_specs(cfg)
+    pp = _sds(params_sds, params_axes, mesh, rules)
+
+    result: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "chips": chips, "status": "ok",
+        "n_params": float(
+            sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params_sds))
+        ),
+    }
+
+    mb = microbatch or default_microbatch(cfg, shape, mesh, rules)
+    result["microbatch"] = mb
+    result["profile"] = profile
+    result["mesh_shape"] = list(mesh.devices.shape)
+
+    with shlib.mesh_context(mesh, rules), jax.set_mesh(mesh):
+        if shape.kind == "train":
+            opt = make_optimizer(cfg.optimizer)
+            opt_sds = jax.eval_shape(opt.init, params_sds)
+            opt_axes = _opt_state_axes(params_sds, params_axes, cfg.optimizer)
+            oo = _sds(opt_sds, opt_axes, mesh, rules)
+            state = TrainState(
+                params=pp, opt_state=oo,
+                step=jax.ShapeDtypeStruct(
+                    (), jnp.int32, sharding=shlib.logical_sharding((), mesh, rules)
+                ),
+            )
+            batch = _sds(
+                M.batch_shapes(cfg, shape), M.batch_axes(cfg, shape), mesh, rules
+            )
+            if unroll:
+                mb = 1  # unrolled profiling runs use exact single-pass costs
+            step_fn = build_train_step(
+                cfg, opt, microbatch=mb, unroll=unroll,
+                remat_policy=remat_policy,
+            )
+            # donate the train state (buffers reused for outputs) and PIN the
+            # output sharding to the input sharding: without the explicit
+            # out_shardings, GSPMD all-reduces weight gradients to full and
+            # re-slices; with it, the reduction lowers to reduce-scatter
+            # (ZeRO-3 proper) — measured 2x gradient wire (EXPERIMENTS §Perf).
+            state_shardings = jax.tree.map(
+                lambda s: s.sharding, state,
+                is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+            )
+            lowered = jax.jit(
+                step_fn, donate_argnums=0,
+                out_shardings=(state_shardings, None),
+            ).lower(state, batch)
+        elif shape.kind == "prefill":
+            batch = _sds(
+                M.batch_shapes(cfg, shape), M.batch_axes(cfg, shape), mesh, rules
+            )
+            cache_sds = jax.eval_shape(
+                lambda: M.make_cache(cfg, shape.global_batch, shape.seq_len)
+            )
+            cc = _sds(cache_sds, _stack_cache_axes(cfg), mesh, rules)
+            step_fn = build_prefill_step(cfg)
+            lowered = jax.jit(step_fn).lower(pp, batch, cc)
+        else:  # decode
+            batch = _sds(
+                M.batch_shapes(cfg, shape), M.batch_axes(cfg, shape), mesh, rules
+            )
+            cache_sds = jax.eval_shape(
+                lambda: M.make_cache(cfg, shape.global_batch, shape.seq_len)
+            )
+            cc = _sds(cache_sds, _stack_cache_axes(cfg), mesh, rules)
+            step_fn = build_decode_step(cfg)
+            # donate the KV cache (updated in place across decode steps)
+            lowered = jax.jit(step_fn, donate_argnums=3).lower(
+                pp, batch["tokens"], batch["pos"], cc
+            )
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+        result["timings"] = {"lower_s": t_lower, "compile_s": t_compile}
+        result["memory"] = _memory_dict(compiled)
+        result["cost"] = _cost_dict(compiled)
+        hlo = compiled.as_text()
+        n_periods = cfg.n_periods
+        if shape.kind == "train" and mb > 1:
+            mults = [1, mb, mb * n_periods]
+        else:
+            mults = [1, n_periods]
+        result["collectives"] = summarize_collectives(hlo, mults)
+        # XLA-CPU legalizes bf16 dots to f32, so every compute-path
+        # collective in the host HLO carries f32 payloads (verified with a
+        # minimal case — see EXPERIMENTS §Dry-run).  All models compute in
+        # bf16 on the TPU target, so logical wire bytes are HALF the
+        # measured ones (f32 exceptions — scalar loss reductions, the f32
+        # MoE router — are <1% by bytes).
+        result["collectives"]["total_bf16_adjusted"] = (
+            0.5 * result["collectives"]["total"]
+        )
+        if save_hlo:
+            with open(save_hlo, "w") as f:
+                f.write(hlo)
+
+        if unroll:
+            # unrolled HLO: cost_analysis and collective parse are exact
+            result["corrected"] = {
+                "flops_per_device": result["cost"]["flops"],
+                "bytes_per_device": result["cost"]["bytes_accessed"],
+            }
+            probe = False
+        if probe:
+            try:
+                pr = _probe_period(cfg, shape, mesh, rules, mb)
+                result["probe"] = pr
+                body_reps = mb * n_periods if shape.kind == "train" else n_periods
+                # head/loss runs once per microbatch but is counted once
+                head_flops_dev = 0.0
+                head_bytes_dev = 0.0
+                if shape.kind == "train" and mb > 1:
+                    tokens_mb = shape.global_batch // mb * shape.seq_len
+                    head_flops_dev = (
+                        6.0 * tokens_mb * cfg.d_model * cfg.vocab_size / chips
+                    )
+                    head_bytes_dev = 2.0 * C.param_bytes(cfg) / chips
+                corr_flops = (
+                    result["cost"]["flops"]
+                    + (body_reps - 1) * pr["flops"]
+                    + (mb - 1) * head_flops_dev
+                )
+                corr_bytes = (
+                    result["cost"]["bytes_accessed"]
+                    + (body_reps - 1) * pr["bytes_accessed"]
+                    + (mb - 1) * head_bytes_dev
+                )
+                result["corrected"] = {
+                    "flops_per_device": corr_flops,
+                    "bytes_per_device": corr_bytes,
+                }
+            except Exception as e:  # probe is best-effort diagnostics
+                result["probe_error"] = repr(e)
+
+    # roofline terms (global flops = per-device * chips)
+    corr = result.get("corrected", None)
+    measured_flops = corr["flops_per_device"] * chips if corr else None
+    measured_bytes = corr["bytes_per_device"] if corr else None
+    result["roofline"] = C.roofline_terms(
+        cfg, shape, chips,
+        measured_flops=measured_flops,
+        measured_bytes=measured_bytes,
+        collective_bytes_per_dev=result["collectives"]["total_bf16_adjusted"],
+    )
+    result["analytic"] = {
+        "train_flops": C.train_flops(cfg, shape),
+        "model_flops": C.model_flops(cfg, shape),
+        "param_bytes": C.param_bytes(cfg),
+        "hbm_bytes_per_dev": C.hbm_bytes(cfg, shape, chips),
+    }
+    return result
+
+
+def _stack_cache_axes(cfg):
+    return M.cache_axes(cfg)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--no-probe", action="store_true")
+    ap.add_argument("--save-hlo", default=None)
+    ap.add_argument("--profile", default="baseline", choices=list(PROFILES))
+    ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--mesh-shape", default=None,
+                    help="e.g. 64,4 or 2,64,4 (overrides the default mesh)")
+    ap.add_argument("--param-dtype", default=None,
+                    help="override cfg.param_dtype (e.g. bfloat16)")
+    ap.add_argument("--unroll", action="store_true",
+                    help="python-loop layers (exact costs, slower compile)")
+    ap.add_argument("--remat-policy", default=None,
+                    help="e.g. save_ffn (skip FFN recompute + its re-AG)")
+    ap.add_argument("--kv-quant", action="store_true",
+                    help="int8 KV cache (halves decode HBM reads)")
+    args = ap.parse_args()
+
+    mesh_shape = (
+        tuple(int(x) for x in args.mesh_shape.split(","))
+        if args.mesh_shape else None
+    )
+    res = run_cell(
+        args.arch, args.shape, args.mesh,
+        probe=not args.no_probe, save_hlo=args.save_hlo,
+        profile=args.profile, microbatch=args.microbatch,
+        mesh_shape=mesh_shape, param_dtype=args.param_dtype,
+        unroll=args.unroll, remat_policy=args.remat_policy,
+        kv_quant=args.kv_quant,
+    )
+    js = json.dumps(res, indent=1, default=str)
+    print(js)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out), exist_ok=True)
+        with open(args.out, "w") as f:
+            f.write(js)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""Roofline report generator: dryrun JSONs -> markdown tables.
+
+    PYTHONPATH=src python -m repro.launch.roofline --dir results/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import ARCH_IDS
+
+
+def load_cells(d: str) -> Dict[tuple, dict]:
+    out = {}
+    for f in glob.glob(os.path.join(d, "*.json")):
+        r = json.load(open(f))
+        out[(r["arch"], r["shape"], r["mesh"])] = r
+    return out
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def table(cells: Dict[tuple, dict], mesh: str) -> List[str]:
+    rows = [
+        "| arch | shape | compute | memory | collective | dominant | "
+        "roofline frac | useful (6ND/HLO) | HBM args/dev | compile |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            r = cells.get((arch, shape, mesh))
+            if r is None:
+                continue
+            if r.get("status") == "skipped":
+                rows.append(
+                    f"| {arch} | {shape} | — | — | — | *skipped: full "
+                    f"attention at 500k* | — | — | — | — |"
+                )
+                continue
+            if r.get("status") != "ok":
+                rows.append(f"| {arch} | {shape} | ERROR {r.get('status')} |")
+                continue
+            ro = r["roofline"]
+            mem = r["memory"]
+            rows.append(
+                f"| {arch} | {shape} | {fmt_s(ro['t_compute_s'])} | "
+                f"{fmt_s(ro['t_memory_s'])} | {fmt_s(ro['t_collective_s'])} | "
+                f"**{ro['dominant']}** | {ro['roofline_fraction']:.3f} | "
+                f"{ro['useful_ratio']:.2f} | "
+                f"{mem['argument_size_in_bytes'] / 1e9:.2f}GB | "
+                f"{r['timings']['compile_s']:.0f}s |"
+            )
+    return rows
+
+
+def summary(cells) -> List[str]:
+    ok = sum(1 for r in cells.values() if r.get("status") == "ok")
+    sk = sum(1 for r in cells.values() if r.get("status") == "skipped")
+    bad = len(cells) - ok - sk
+    lines = [f"cells: {ok} ok, {sk} skipped, {bad} failed"]
+    # worst roofline fraction & most collective-bound among train cells
+    worst = min(
+        (r for r in cells.values() if r.get("status") == "ok"),
+        key=lambda r: r["roofline"]["roofline_fraction"],
+    )
+    lines.append(
+        f"worst roofline fraction: {worst['arch']}/{worst['shape']}/"
+        f"{worst['mesh']} = {worst['roofline']['roofline_fraction']:.3f}"
+    )
+    coll = max(
+        (r for r in cells.values() if r.get("status") == "ok"),
+        key=lambda r: r["roofline"]["t_collective_s"]
+        / max(r["roofline"]["t_compute_s"], 1e-12),
+    )
+    lines.append(
+        f"most collective-bound: {coll['arch']}/{coll['shape']}/{coll['mesh']}"
+        f" (t_coll/t_comp = "
+        f"{coll['roofline']['t_collective_s'] / max(coll['roofline']['t_compute_s'], 1e-12):.1f}x)"
+    )
+    return lines
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    cells = load_cells(args.dir)
+    lines = []
+    for mesh in ("single", "multi"):
+        lines.append(f"\n### Mesh: {mesh} "
+                     f"({'2x16x16=512' if mesh == 'multi' else '16x16=256'} chips)\n")
+        lines.extend(table(cells, mesh))
+    lines.append("\n### Summary\n")
+    lines.extend("- " + s for s in summary(cells))
+    text = "\n".join(lines)
+    print(text)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text)
+
+
+if __name__ == "__main__":
+    main()

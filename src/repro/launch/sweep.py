@@ -1,0 +1,90 @@
+"""Dry-run sweep driver: every (arch x shape x mesh) cell, one subprocess
+each (isolates XLA memory growth; resumable — existing JSONs are skipped).
+
+    PYTHONPATH=src python -m repro.launch.sweep --mesh both --out results/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import ARCH_IDS
+
+
+def cell_path(out_dir: str, arch: str, shape: str, mesh: str) -> str:
+    return os.path.join(out_dir, f"{arch}_{shape}_{mesh}.json")
+
+
+def run_sweep(out_dir: str, meshes, archs=None, shapes=None, force=False,
+              timeout: int = 1200):
+    os.makedirs(out_dir, exist_ok=True)
+    archs = archs or ARCH_IDS
+    shapes = shapes or list(SHAPES)
+    results = []
+    for mesh in meshes:
+        for arch in archs:
+            for shape in shapes:
+                path = cell_path(out_dir, arch, shape, mesh)
+                if os.path.exists(path) and not force:
+                    print(f"skip (exists): {arch} {shape} {mesh}")
+                    continue
+                t0 = time.time()
+                cmd = [
+                    sys.executable, "-m", "repro.launch.dryrun",
+                    "--arch", arch, "--shape", shape, "--mesh", mesh,
+                    "--out", path,
+                ]
+                print(f"RUN {arch} {shape} {mesh} ...", flush=True)
+                try:
+                    proc = subprocess.run(
+                        cmd, capture_output=True, text=True, timeout=timeout,
+                        env={**os.environ},
+                    )
+                    ok = proc.returncode == 0 and os.path.exists(path)
+                    if not ok:
+                        err = {
+                            "arch": arch, "shape": shape, "mesh": mesh,
+                            "status": "error",
+                            "stderr": proc.stderr[-4000:],
+                        }
+                        with open(path, "w") as f:
+                            json.dump(err, f, indent=1)
+                except subprocess.TimeoutExpired:
+                    ok = False
+                    with open(path, "w") as f:
+                        json.dump(
+                            {"arch": arch, "shape": shape, "mesh": mesh,
+                             "status": "timeout"}, f, indent=1,
+                        )
+                dt = time.time() - t0
+                status = json.load(open(path)).get("status")
+                print(f"  -> {status} in {dt:.0f}s", flush=True)
+                results.append((arch, shape, mesh, status, dt))
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--archs", default=None, help="comma-separated subset")
+    ap.add_argument("--shapes", default=None)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    archs = args.archs.split(",") if args.archs else None
+    shapes = args.shapes.split(",") if args.shapes else None
+    res = run_sweep(args.out, meshes, archs, shapes, args.force)
+    bad = [r for r in res if r[3] not in ("ok", "skipped")]
+    print(f"\n{len(res)} cells run, {len(bad)} failures")
+    for r in bad:
+        print("  FAIL:", r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,311 @@
+"""Top-level model API shared by all 10 assigned architectures.
+
+  init_params / param_specs      — parameter pytree + logical-axis mirror
+  train_loss                     — next-token CE (+ MoE aux), modality-aware
+  prefill / decode_step          — serving paths with functional caches
+  batch_shapes / batch_axes      — input ShapeDtypeStruct descriptions
+  cache_axes                     — logical axes for the decode cache tree
+
+Families: decoder-only LM (dense/moe/hybrid/ssm/vlm) and encoder-decoder
+(audio).  Modality frontends are STUBS per the brief: the batch carries
+pre-computed patch/frame embeddings; a small learned projector maps them
+into the backbone (realistic last-mile of a production frontend).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, LayerSpec, ShapeSpec
+from repro.dist.sharding import shard
+from repro.models.layers import COMPUTE_DTYPE, rms_norm
+from repro.models.transformer import (
+    cache_len_for,
+    init_stack,
+    init_stack_cache,
+    run_stack_decode,
+    run_stack_prefill,
+    run_stack_train,
+    stack_specs,
+)
+
+__all__ = [
+    "ENC_PERIOD",
+    "init_params",
+    "param_specs",
+    "train_loss",
+    "prefill",
+    "decode_step",
+    "batch_shapes",
+    "batch_axes",
+    "make_cache",
+    "cache_axes",
+]
+
+# whisper-style encoder period: non-causal self-attention + MLP
+ENC_PERIOD = (LayerSpec("attn", "mlp"),)
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+def init_params(key, cfg: ArchConfig) -> dict:
+    ks = jax.random.split(key, 8)
+    dt = jnp.dtype(cfg.param_dtype)
+    d, v = cfg.d_model, cfg.vocab_size
+    p: Dict[str, Any] = {
+        "embed": jax.random.normal(ks[0], (v, d), dt) * float(1.0 / np.sqrt(d)),
+        "final_norm": jnp.ones((d,), dt),
+        "layers": init_stack(ks[1], cfg),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = jax.random.normal(ks[2], (d, v), dt) * float(1.0 / np.sqrt(d))
+    if cfg.is_encdec:
+        p["encoder"] = {
+            "layers": init_stack(
+                ks[3], cfg, period=ENC_PERIOD, n_layers=cfg.encoder_layers
+            ),
+            "final_norm": jnp.ones((d,), dt),
+            "frontend_proj": jax.random.normal(ks[4], (d, d), dt) * float(1.0 / np.sqrt(d)),
+        }
+    if cfg.frontend == "vision_patches":
+        # llava-style 2-layer MLP projector
+        p["mm_proj"] = {
+            "w1": jax.random.normal(ks[5], (d, d), dt) * float(1.0 / np.sqrt(d)),
+            "w2": jax.random.normal(ks[6], (d, d), dt) * float(1.0 / np.sqrt(d)),
+        }
+    return p
+
+
+def param_specs(cfg: ArchConfig) -> dict:
+    s: Dict[str, Any] = {
+        "embed": ("vocab", "embed_fsdp"),
+        "final_norm": ("embed",),
+        "layers": stack_specs(cfg),
+    }
+    if not cfg.tie_embeddings:
+        s["head"] = ("embed_fsdp", "vocab")
+    if cfg.is_encdec:
+        s["encoder"] = {
+            "layers": stack_specs(cfg, period=ENC_PERIOD),
+            "final_norm": ("embed",),
+            "frontend_proj": ("embed_fsdp", "embed"),
+        }
+    if cfg.frontend == "vision_patches":
+        s["mm_proj"] = {
+            "w1": ("embed_fsdp", "embed"),
+            "w2": ("embed", "embed_fsdp"),
+        }
+    return s
+
+
+# ---------------------------------------------------------------------------
+# shared pieces
+# ---------------------------------------------------------------------------
+def _embed_tokens(p: dict, cfg: ArchConfig, tokens: jax.Array) -> jax.Array:
+    x = p["embed"][tokens].astype(COMPUTE_DTYPE)
+    return shard(x, "batch", "seq", "embed")
+
+
+def _unembed(p: dict, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    x = rms_norm(x, p["final_norm"], cfg.norm_eps)
+    w = p.get("head", None)
+    if w is None:
+        w = p["embed"].T
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x.astype(jnp.float32), w.astype(jnp.float32)
+    )
+    return shard(logits, "batch", "seq", "vocab")
+
+
+def _sinusoidal(positions: jax.Array, d: int) -> jax.Array:
+    """[..., S] -> [..., S, d] (whisper-style fixed positional signal)."""
+    half = d // 2
+    freqs = np.exp(-np.log(10000.0) * np.arange(half) / max(half - 1, 1))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _encode(p: dict, cfg: ArchConfig, frames: jax.Array) -> jax.Array:
+    """Whisper encoder over stub frame embeddings [B, S_enc, D]."""
+    x = jnp.einsum(
+        "bsd,de->bse", frames.astype(COMPUTE_DTYPE),
+        p["encoder"]["frontend_proj"].astype(COMPUTE_DTYPE),
+    )
+    pos = jnp.broadcast_to(
+        jnp.arange(frames.shape[1]), frames.shape[:2]
+    )
+    x = x + _sinusoidal(pos, cfg.d_model).astype(COMPUTE_DTYPE)
+    x = shard(x, "batch", "seq", "embed")
+    enc_period = ENC_PERIOD
+    x, _ = run_stack_train(
+        p["encoder"]["layers"], cfg, x, pos, period=enc_period,
+        causal=False, remat=True,
+    )
+    return rms_norm(x, p["encoder"]["final_norm"], cfg.norm_eps)
+
+
+def _backbone_inputs(
+    p: dict, cfg: ArchConfig, batch: Dict[str, jax.Array]
+) -> Tuple[jax.Array, jax.Array, Optional[jax.Array], jax.Array]:
+    """-> (x [B,S,D], positions [B,S], encoder_out | None, loss_mask [B,S])."""
+    tokens = batch["tokens"]
+    x = _embed_tokens(p, cfg, tokens)
+    enc_out = None
+    if cfg.frontend == "vision_patches":
+        pp = p["mm_proj"]
+        patches = batch["patches"].astype(COMPUTE_DTYPE)
+        proj = jnp.einsum("bpd,de->bpe", patches, pp["w1"].astype(COMPUTE_DTYPE))
+        proj = jnp.einsum(
+            "bpe,ef->bpf", jax.nn.gelu(proj), pp["w2"].astype(COMPUTE_DTYPE)
+        )
+        x = jnp.concatenate([proj, x], axis=1)
+        mask = jnp.concatenate(
+            [
+                jnp.zeros(patches.shape[:2], jnp.float32),
+                jnp.ones(tokens.shape, jnp.float32),
+            ],
+            axis=1,
+        )
+    else:
+        mask = jnp.ones(tokens.shape, jnp.float32)
+    if cfg.is_encdec:
+        enc_out = _encode(p, cfg, batch["frames"])
+        # whisper decoder: fixed sinusoidal positions, no rope
+        x = x + _sinusoidal(
+            jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2]), cfg.d_model
+        ).astype(COMPUTE_DTYPE)
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+    return shard(x, "batch", "seq", "embed"), positions, enc_out, mask
+
+
+# ---------------------------------------------------------------------------
+# training
+# ---------------------------------------------------------------------------
+def train_loss(
+    p: dict, cfg: ArchConfig, batch: Dict[str, jax.Array],
+    *, aux_weight: float = 0.01, remat: bool = True, unroll: bool = False,
+    remat_policy=None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    x, positions, enc_out, mask = _backbone_inputs(p, cfg, batch)
+    x, aux = run_stack_train(
+        p["layers"], cfg, x, positions, encoder_out=enc_out, remat=remat,
+        unroll=unroll, remat_policy=remat_policy,
+    )
+    logits = _unembed(p, cfg, x)                       # [B, S, V] f32
+    tokens = batch["tokens"]
+    prefix = x.shape[1] - tokens.shape[1]              # vlm patch prefix
+    # next-token targets within the text region
+    tgt = tokens[:, 1:]
+    lg = logits[:, prefix : prefix + tokens.shape[1] - 1]
+    msk = mask[:, prefix + 1 :]
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, tgt[..., None], axis=-1)[..., 0]
+    ce = jnp.sum((lse - gold) * msk) / jnp.maximum(jnp.sum(msk), 1.0)
+    n_moe = sum(1 for s in cfg.period if s.ffn == "moe")
+    loss = ce + (aux_weight * aux / max(n_moe * cfg.n_periods, 1) if n_moe else 0.0)
+    return loss, {"ce": ce, "moe_aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+def make_cache(cfg: ArchConfig, batch: int, seq_len: int) -> dict:
+    enc_len = seq_len if cfg.is_encdec else 0
+    return init_stack_cache(cfg, batch, seq_len, enc_len=enc_len)
+
+
+def prefill(
+    p: dict, cfg: ArchConfig, batch: Dict[str, jax.Array], cache: dict
+) -> Tuple[jax.Array, dict]:
+    """Run the full prompt; returns (last-position logits [B, V], cache)."""
+    x, positions, enc_out, _ = _backbone_inputs(p, cfg, batch)
+    x, cache = run_stack_prefill(
+        p["layers"], cfg, x, positions, cache, encoder_out=enc_out
+    )
+    logits = _unembed(p, cfg, x[:, -1:])
+    return logits[:, 0], cache
+
+
+def decode_step(
+    p: dict, cfg: ArchConfig, tokens: jax.Array, pos: jax.Array, cache: dict
+) -> Tuple[jax.Array, dict]:
+    """One token for every sequence.  tokens [B,1], pos int32[B]."""
+    x = _embed_tokens(p, cfg, tokens)
+    if cfg.is_encdec:
+        x = x + _sinusoidal(pos[:, None], cfg.d_model).astype(COMPUTE_DTYPE)
+    x, cache = run_stack_decode(p["layers"], cfg, x, pos, cache)
+    logits = _unembed(p, cfg, x)
+    return logits[:, 0], cache
+
+
+# ---------------------------------------------------------------------------
+# dry-run shape descriptions
+# ---------------------------------------------------------------------------
+def batch_shapes(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStructs for the *host* batch of this (arch, shape) cell."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        out = {
+            "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((B,), jnp.int32),
+        }
+        return out
+    if cfg.frontend == "vision_patches":
+        s_img = min(cfg.prefix_tokens, S // 2)
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, S - s_img), jnp.int32),
+            "patches": jax.ShapeDtypeStruct((B, s_img, cfg.d_model), COMPUTE_DTYPE),
+        }
+    if cfg.is_encdec:
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), COMPUTE_DTYPE),
+        }
+    return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+
+
+def batch_axes(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Logical axes mirroring batch_shapes."""
+    if shape.kind == "decode":
+        return {"tokens": ("batch", None), "pos": ("batch",)}
+    out = {"tokens": ("batch", None)}
+    if cfg.frontend == "vision_patches":
+        out["patches"] = ("batch", None, "embed")
+    if cfg.is_encdec:
+        out["frames"] = ("batch", None, "embed")
+    return out
+
+
+def _sublayer_cache_axes(cfg: ArchConfig, spec: LayerSpec) -> dict:
+    if spec.kind in ("attn", "xattn"):
+        t = ("stack", "batch", "kv_seq", "kv_heads", None)
+        if cfg.kv_quant and spec.kind == "attn":
+            ts = ("stack", "batch", "kv_seq", "kv_heads")
+            return {"k": t, "v": t, "k_scale": ts, "v_scale": ts}
+        return {"k": t, "v": t}
+    if spec.kind == "mamba":
+        return {
+            "h": ("stack", "batch", "ssm_inner", None),
+            "conv": ("stack", "batch", None, "ssm_inner"),
+        }
+    if spec.kind == "mlstm":
+        return {
+            "C": ("stack", "batch", "heads", None, None),
+            "n": ("stack", "batch", "heads", None),
+            "m": ("stack", "batch", "heads"),
+        }
+    if spec.kind == "slstm":
+        t = ("stack", "batch", None)
+        return {"c": t, "n": t, "m": t, "h": t}
+    raise ValueError(spec.kind)
+
+
+def cache_axes(cfg: ArchConfig) -> dict:
+    return {
+        f"sub{i}": _sublayer_cache_axes(cfg, s)
+        for i, s in enumerate(cfg.period)
+    }

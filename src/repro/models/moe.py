@@ -1,0 +1,129 @@
+"""Mixture-of-Experts layer: token-choice top-k routing with capacity.
+
+Implementation is the capacity-bounded dispatch used by production JAX
+stacks: tokens pick their top-k experts, each expert then accepts its top-C
+tokens by router score (C = ceil(T * k * capacity_factor / E)); accepted
+tokens are gathered per expert, transformed, and scatter-added back weighted
+by the (normalized) router gate.  Overflow tokens are dropped (standard
+capacity semantics; the residual stream carries them unchanged).
+
+FLOP-realism matters here for the roofline: compute is E * C * d * ff per
+projection, i.e. ~capacity_factor x the active-token compute — there is no
+dense-all-experts blow-up.  Experts shard over the `model` mesh axis (EP),
+the d_model dim of each expert over `data` (FSDP).
+
+An auxiliary load-balancing loss (Switch-style) is returned for training.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.dist.sharding import shard
+from repro.models.layers import COMPUTE_DTYPE
+
+__all__ = ["init_moe", "moe_specs", "moe"]
+
+
+def _cast(x):
+    return x.astype(COMPUTE_DTYPE)
+
+
+def init_moe(key, cfg: ArchConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.moe_experts
+    dt = jnp.dtype(cfg.param_dtype)
+    std = float(1.0 / np.sqrt(d))
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": jax.random.normal(ks[0], (d, e), jnp.float32) * std,
+        "w_up": jax.random.normal(ks[2], (e, d, f), dt) * std,
+        "w_down": jax.random.normal(ks[3], (e, f, d), dt)
+        * float(std / np.sqrt(cfg.n_layers)),
+    }
+    if cfg.mlp_kind == "swiglu":
+        p["w_gate"] = jax.random.normal(ks[1], (e, d, f), dt) * std
+    return p
+
+
+def moe_specs(cfg: ArchConfig) -> dict:
+    s = {
+        "router": ("embed_fsdp", "experts"),
+        "w_up": ("experts", "embed_fsdp", None),
+        "w_down": ("experts", None, "embed_fsdp"),
+    }
+    if cfg.mlp_kind == "swiglu":
+        s["w_gate"] = ("experts", "embed_fsdp", None)
+    return s
+
+
+def moe(
+    p: dict, cfg: ArchConfig, x: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, S, D] -> (y [B, S, D], aux_loss scalar).
+
+    Dispatch is blocked into G groups aligned with the data shards
+    (G = batch_shard_count()): routing, capacity top-k, gather and combine
+    all happen within a group, so under GSPMD every step stays local to its
+    data shard and the expert einsums shard over (data, experts) — without
+    this, global-index gathers force an all-gather of the whole token
+    buffer and replicate expert compute across the data axis (measured
+    2.3x FLOP bloat on arctic-480b; see EXPERIMENTS §Dry-run)."""
+    from repro.dist.sharding import batch_shard_count
+
+    B, S, D = x.shape
+    E, K = cfg.moe_experts, cfg.moe_top_k
+    T = B * S
+    G = batch_shard_count()
+    if B % G:
+        G = 1  # tiny smoke batches: fall back to one group
+    Tg = T // G
+    xt = x.reshape(G, Tg, D)
+
+    logits = jnp.einsum(
+        "gtd,de->gte", xt.astype(jnp.float32), p["router"]
+    )                                                   # [G, Tg, E] f32
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_ids = jax.lax.top_k(probs, K)            # [G, Tg, K]
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+
+    # token-choice mask -> per-expert score matrix
+    one_hot = jax.nn.one_hot(top_ids, E, dtype=jnp.float32)   # [G, Tg, K, E]
+    tok_gate = jnp.einsum("gtk,gtke->gte", top_w, one_hot)    # [G, Tg, E]
+
+    # Switch-style load-balance aux loss
+    frac_tokens = jnp.mean(jnp.sum(one_hot, axis=2), axis=(0, 1))  # [E]
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(frac_tokens * frac_probs)
+
+    # expert-side capacity selection among the token-chosen, per group
+    C = int(np.ceil(Tg * K * cfg.capacity_factor / E))
+    C = min(max(C, 8), Tg)  # floor of 8 for tiny shards, never above Tg
+    scores_et = tok_gate.swapaxes(1, 2)                       # [G, E, Tg]
+    gate_ec, idx_ec = jax.lax.top_k(scores_et, C)             # [G, E, C]
+    gate_ec = jnp.where(gate_ec > 0, gate_ec, 0.0)            # drop empties
+
+    xe = jax.vmap(lambda xg, ig: xg[ig])(xt, idx_ec)          # [G, E, C, D]
+    xe = shard(xe, "batch", "experts", None, "embed")
+    if "w_gate" in p:
+        g = jnp.einsum("gecd,edf->gecf", xe, _cast(p["w_gate"]))
+        u = jnp.einsum("gecd,edf->gecf", xe, _cast(p["w_up"]))
+        h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.gelu(jnp.einsum("gecd,edf->gecf", xe, _cast(p["w_up"])))
+    h = checkpoint_name(h, "ffn_h")
+    ye = jnp.einsum("gecf,efd->gecd", h, _cast(p["w_down"]))  # [G, E, C, D]
+    ye = checkpoint_name(ye, "ffn_out")
+    ye = ye * gate_ec[..., None].astype(ye.dtype)
+
+    y = jax.vmap(
+        lambda yg, ig: jnp.zeros((Tg, D), ye.dtype)
+        .at[ig.reshape(-1)]
+        .add(yg.reshape(E * C, D))
+    )(ye, idx_ec)                                             # [G, Tg, D]
+    y = y.reshape(B, S, D)
+    return shard(y, "batch", "seq", "embed"), aux.astype(jnp.float32)

@@ -1,0 +1,474 @@
+"""State-space and recurrent blocks: Mamba (Jamba) and xLSTM (mLSTM/sLSTM).
+
+Training-time Mamba uses a chunked selective scan: `lax.scan` over sequence
+chunks with an `associative_scan` inside each chunk — O(S) memory in chunk
+units, log-depth within a chunk (TPU-friendly), exact.  Decode is the O(1)
+recurrent update; both paths share parameters, and decode-vs-train
+equivalence is property-tested.
+
+xLSTM follows the paper's exponentially-gated recurrences with the
+log-space stabilizer state m:  mLSTM carries a matrix memory C[dk, dv] per
+head (linear-attention-like, O(1) decode state); sLSTM carries scalar
+memories with a recurrent h connection, making it inherently sequential
+(scanned) — the reason the assigned xlstm-350m interleaves it 1:1 with
+mLSTM rather than using it everywhere.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.dist.sharding import shard
+from repro.models.layers import COMPUTE_DTYPE, rms_norm
+
+__all__ = [
+    "init_mamba", "mamba_specs", "mamba", "mamba_prefill", "mamba_decode",
+    "mamba_init_state",
+    "init_mlstm", "mlstm_specs", "mlstm", "mlstm_prefill", "mlstm_decode",
+    "mlstm_init_state",
+    "init_slstm", "slstm_specs", "slstm", "slstm_prefill", "slstm_decode",
+    "slstm_init_state",
+]
+
+_CHUNK = 64  # sequence chunk for the selective scan
+
+
+def _cast(x):
+    return x.astype(COMPUTE_DTYPE)
+
+
+def chunked_scan(step_fn, carry, xs, chunk: int):
+    """Time-dimension gradient checkpointing for recurrences.
+
+    lax.scan's reverse pass saves EVERY per-step residual — for a matrix-
+    memory recurrence (mLSTM C is [B,H,dk,dv]) over 4k steps that is tens of
+    GB.  Scanning over chunks with a checkpointed inner scan stores only one
+    carry per chunk and recomputes inside the chunk during backward:
+    memory O(S/chunk * |carry|), extra compute one forward of the chunk.
+    """
+    nc_total = jax.tree.leaves(xs)[0].shape[0]
+    assert nc_total % chunk == 0, (nc_total, chunk)
+    nc = nc_total // chunk
+
+    def resh(t):
+        return t.reshape(nc, chunk, *t.shape[1:])
+
+    xs_c = jax.tree.map(resh, xs)
+
+    @jax.checkpoint
+    def chunk_body(c, xc):
+        return jax.lax.scan(step_fn, c, xc)
+
+    carry, ys_c = jax.lax.scan(chunk_body, carry, xs_c)
+    ys = jax.tree.map(
+        lambda t: t.reshape(nc_total, *t.shape[2:]), ys_c
+    )
+    return carry, ys
+
+
+def _dt_rank(cfg: ArchConfig) -> int:
+    return cfg.ssm_dt_rank or int(np.ceil(cfg.d_model / 16))
+
+
+# ===========================================================================
+# Mamba
+# ===========================================================================
+def init_mamba(key, cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    inner = cfg.ssm_expand * d
+    n = cfg.ssm_d_state
+    r = _dt_rank(cfg)
+    kc = cfg.ssm_conv
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    std = float(1.0 / np.sqrt(d))
+    a = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None], (inner, 1))
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, 2 * inner), dt) * std,
+        "conv_w": jax.random.normal(ks[1], (kc, inner), dt) * float(1.0 / np.sqrt(kc)),
+        "conv_b": jnp.zeros((inner,), dt),
+        "x_proj": jax.random.normal(ks[2], (inner, r + 2 * n), dt)
+        * float(1.0 / np.sqrt(inner)),
+        "dt_proj": jax.random.normal(ks[3], (r, inner), dt) * float(1.0 / np.sqrt(r)),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((inner,), 0.01))).astype(dt),
+        "a_log": jnp.log(a),                       # f32: selective dynamics
+        "d_skip": jnp.ones((inner,), jnp.float32),
+        "out_proj": jax.random.normal(ks[4], (inner, d), dt)
+        * float(std / np.sqrt(cfg.n_layers)),
+    }
+
+
+def mamba_specs(cfg: ArchConfig) -> dict:
+    return {
+        "in_proj": ("embed_fsdp", "ssm_inner"),
+        "conv_w": ("conv_k", "ssm_inner"),
+        "conv_b": ("ssm_inner",),
+        "x_proj": ("ssm_inner", None),
+        "dt_proj": (None, "ssm_inner"),
+        "dt_bias": ("ssm_inner",),
+        "a_log": ("ssm_inner", "state"),
+        "d_skip": ("ssm_inner",),
+        "out_proj": ("ssm_inner", "embed_fsdp"),
+    }
+
+
+def _mamba_gates(p: dict, cfg: ArchConfig, xc: jax.Array):
+    """xc: [..., I] conv-activated input -> (dt [...,I], B [...,N], C [...,N])."""
+    n = cfg.ssm_d_state
+    r = _dt_rank(cfg)
+    proj = jnp.einsum("...i,ij->...j", xc, _cast(p["x_proj"]))
+    dt_r, b, c = jnp.split(proj, [r, r + n], axis=-1)
+    dt = jnp.einsum("...r,ri->...i", dt_r, _cast(p["dt_proj"]))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    return dt, b.astype(jnp.float32), c.astype(jnp.float32)
+
+
+def _causal_conv(p: dict, x: jax.Array, carry: jax.Array | None):
+    """Depthwise causal conv over seq.  x: [B, S, I]; carry: [B, kc-1, I]."""
+    kc = p["conv_w"].shape[0]
+    if carry is None:
+        carry = jnp.zeros((x.shape[0], kc - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([carry, x], axis=1)
+    out = jnp.zeros_like(x)
+    w = _cast(p["conv_w"])
+    for t in range(kc):
+        out = out + xp[:, t : t + x.shape[1]] * w[t]
+    new_carry = xp[:, -(kc - 1):] if kc > 1 else carry
+    return out + _cast(p["conv_b"]), new_carry
+
+
+def mamba_init_state(cfg: ArchConfig, batch: int) -> dict:
+    inner = cfg.ssm_expand * cfg.d_model
+    return {
+        "h": jnp.zeros((batch, inner, cfg.ssm_d_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, inner), COMPUTE_DTYPE),
+    }
+
+
+def mamba(p: dict, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    """Full-sequence selective SSM.  x: [B, S, D] -> [B, S, D]."""
+    y, _ = _mamba_impl(p, cfg, x)
+    return y
+
+
+def mamba_prefill(p: dict, cfg: ArchConfig, x: jax.Array):
+    """Full sequence + final recurrent state for decode continuation."""
+    return _mamba_impl(p, cfg, x)
+
+
+def _mamba_impl(p: dict, cfg: ArchConfig, x: jax.Array):
+    B, S, D = x.shape
+    xz = jnp.einsum("bsd,di->bsi", x, _cast(p["in_proj"]))
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs = shard(xs, "batch", "seq", "ssm_inner")
+    xc, conv_carry = _causal_conv(p, xs, None)
+    xc = jax.nn.silu(xc)
+    dt, bmat, cmat = _mamba_gates(p, cfg, xc)
+    a = -jnp.exp(p["a_log"])                                  # [I, N]
+
+    chunk = min(_CHUNK, S)
+    assert S % chunk == 0, f"S={S} must tile by {chunk}"
+    nc = S // chunk
+
+    def resh(t):  # [B, S, ...] -> [nc, B, chunk, ...]
+        return t.reshape(B, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    xcs, dts, bs, cs = map(resh, (xc.astype(jnp.float32), dt, bmat, cmat))
+
+    # checkpointed: the reverse pass recomputes each chunk's [B,c,I,N]
+    # internals rather than saving them for all chunks at once.
+    @jax.checkpoint
+    def chunk_step(h0, args):
+        xck, dtk, bk, ck = args                                # [B, chunk, ...]
+        da = jnp.exp(dtk[..., None] * a)                       # [B, c, I, N]
+        db = (dtk * xck)[..., None] * bk[:, :, None, :]        # [B, c, I, N]
+
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, bl * ar + br
+
+        a_cum, b_cum = jax.lax.associative_scan(combine, (da, db), axis=1)
+        h = a_cum * h0[:, None] + b_cum                        # [B, c, I, N]
+        yk = jnp.einsum("bcin,bcn->bci", h, ck)
+        return h[:, -1], yk
+
+    h_last, ys = jax.lax.scan(
+        chunk_step, jnp.zeros((B, a.shape[0], a.shape[1]), jnp.float32),
+        (xcs, dts, bs, cs),
+    )
+    y = ys.swapaxes(0, 1).reshape(B, S, -1)                    # [B, S, I]
+    y = y + xc.astype(jnp.float32) * p["d_skip"]
+    y = (y.astype(COMPUTE_DTYPE)) * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, _cast(p["out_proj"]))
+    state = {"h": h_last, "conv": conv_carry}
+    return shard(out, "batch", "seq", "embed"), state
+
+
+def mamba_decode(
+    p: dict, cfg: ArchConfig, x: jax.Array, state: dict
+) -> Tuple[jax.Array, dict]:
+    """One token.  x: [B, 1, D] -> (y [B, 1, D], state')."""
+    xz = jnp.einsum("bsd,di->bsi", x, _cast(p["in_proj"]))
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_carry = _causal_conv(p, xs, state["conv"])
+    xc = jax.nn.silu(xc)                                       # [B, 1, I]
+    dt, bmat, cmat = _mamba_gates(p, cfg, xc)
+    a = -jnp.exp(p["a_log"])
+    da = jnp.exp(dt[:, 0, :, None] * a)                        # [B, I, N]
+    db = (dt[:, 0] * xc[:, 0].astype(jnp.float32))[..., None] * bmat[:, 0, None, :]
+    h = da * state["h"] + db
+    y = jnp.einsum("bin,bn->bi", h, cmat[:, 0])
+    y = y + xc[:, 0].astype(jnp.float32) * p["d_skip"]
+    y = (y[:, None].astype(COMPUTE_DTYPE)) * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, _cast(p["out_proj"]))
+    return out, {"h": h, "conv": conv_carry}
+
+
+# ===========================================================================
+# xLSTM: mLSTM
+# ===========================================================================
+def init_mlstm(key, cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    inner = int(cfg.xlstm_proj_factor * d)
+    dh = inner // h
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 7)
+    std = float(1.0 / np.sqrt(d))
+    return {
+        "up": jax.random.normal(ks[0], (d, 2 * inner), dt) * std,
+        "wq": jax.random.normal(ks[1], (inner, h, dh), dt) * float(1 / np.sqrt(inner)),
+        "wk": jax.random.normal(ks[2], (inner, h, dh), dt) * float(1 / np.sqrt(inner)),
+        "wv": jax.random.normal(ks[3], (inner, h, dh), dt) * float(1 / np.sqrt(inner)),
+        "w_if": jax.random.normal(ks[4], (inner, 2 * h), dt) * float(1 / np.sqrt(inner)),
+        "b_if": jnp.concatenate(
+            [jnp.zeros((h,)), jnp.full((h,), 3.0)]
+        ).astype(jnp.float32),
+        "norm": jnp.ones((inner,), dt),
+        "down": jax.random.normal(ks[5], (inner, d), dt)
+        * float(std / np.sqrt(cfg.n_layers)),
+    }
+
+
+def mlstm_specs(cfg: ArchConfig) -> dict:
+    return {
+        "up": ("embed_fsdp", "ssm_inner"),
+        "wq": ("ssm_inner", "heads", "head_dim"),
+        "wk": ("ssm_inner", "heads", "head_dim"),
+        "wv": ("ssm_inner", "heads", "head_dim"),
+        "w_if": ("ssm_inner", "heads"),
+        "b_if": ("heads",),
+        "norm": ("ssm_inner",),
+        "down": ("ssm_inner", "embed_fsdp"),
+    }
+
+
+def mlstm_init_state(cfg: ArchConfig, batch: int) -> dict:
+    h = cfg.n_heads
+    inner = int(cfg.xlstm_proj_factor * cfg.d_model)
+    dh = inner // h
+    return {
+        "C": jnp.zeros((batch, h, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, h, dh), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+    }
+
+
+def _mlstm_qkvg(p, x):
+    """x: [B, S, inner] -> q, k, v [B,S,H,dh] f32; log i/f gates [B,S,H]."""
+    q = jnp.einsum("bsi,ihk->bshk", x, _cast(p["wq"])).astype(jnp.float32)
+    k = jnp.einsum("bsi,ihk->bshk", x, _cast(p["wk"])).astype(jnp.float32)
+    v = jnp.einsum("bsi,ihk->bshk", x, _cast(p["wv"])).astype(jnp.float32)
+    gif = jnp.einsum("bsi,ih->bsh", x, _cast(p["w_if"])).astype(jnp.float32)
+    gif = gif + p["b_if"]
+    h = q.shape[2]
+    log_i, f_raw = gif[..., :h], gif[..., h:]
+    log_f = -jax.nn.softplus(-f_raw)  # log sigmoid
+    k = k / np.sqrt(k.shape[-1])
+    return q, k, v, log_i, log_f
+
+
+def _mlstm_step(carry, t):
+    """Single-step stabilized mLSTM recurrence (shared by train scan/decode)."""
+    C, n, m = carry
+    q_t, k_t, v_t, li_t, lf_t = t
+    m_new = jnp.maximum(lf_t + m, li_t)
+    i_p = jnp.exp(li_t - m_new)
+    f_p = jnp.exp(lf_t + m - m_new)
+    C_new = f_p[..., None, None] * C + i_p[..., None, None] * (
+        k_t[..., :, None] * v_t[..., None, :]
+    )
+    n_new = f_p[..., None] * n + i_p[..., None] * k_t
+    num = jnp.einsum("bhk,bhkv->bhv", q_t, C_new)
+    den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhk,bhk->bh", q_t, n_new)), 1.0
+    )
+    h_t = num / den[..., None]
+    return (C_new, n_new, m_new), h_t
+
+
+def mlstm(p: dict, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    """Full-sequence mLSTM block.  x: [B, S, D]."""
+    y, _ = _mlstm_impl(p, cfg, x)
+    return y
+
+
+def mlstm_prefill(p: dict, cfg: ArchConfig, x: jax.Array):
+    return _mlstm_impl(p, cfg, x)
+
+
+def _mlstm_impl(p: dict, cfg: ArchConfig, x: jax.Array):
+    B, S, D = x.shape
+    up = jnp.einsum("bsd,di->bsi", x, _cast(p["up"]))
+    xin, z = jnp.split(up, 2, axis=-1)
+    q, k, v, li, lf = _mlstm_qkvg(p, xin)
+    state0 = (
+        jnp.zeros((B, q.shape[2], q.shape[3], q.shape[3]), jnp.float32),
+        jnp.zeros((B, q.shape[2], q.shape[3]), jnp.float32),
+        jnp.full((B, q.shape[2]), -1e30, jnp.float32),
+    )
+    sw = lambda t: t.swapaxes(0, 1)  # [S, B, ...]
+    (C, n, m), hs = chunked_scan(
+        _mlstm_step, state0, (sw(q), sw(k), sw(v), sw(li), sw(lf)),
+        chunk=min(_CHUNK, S),
+    )
+    h = hs.swapaxes(0, 1).reshape(B, S, -1)                    # [B, S, inner]
+    h = rms_norm(h.astype(COMPUTE_DTYPE), p["norm"], cfg.norm_eps)
+    h = h * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", h, _cast(p["down"]))
+    return shard(out, "batch", "seq", "embed"), {"C": C, "n": n, "m": m}
+
+
+def mlstm_decode(
+    p: dict, cfg: ArchConfig, x: jax.Array, state: dict
+) -> Tuple[jax.Array, dict]:
+    up = jnp.einsum("bsd,di->bsi", x, _cast(p["up"]))
+    xin, z = jnp.split(up, 2, axis=-1)
+    q, k, v, li, lf = _mlstm_qkvg(p, xin)
+    carry = (state["C"], state["n"], state["m"])
+    (C, n, m), h = _mlstm_step(
+        carry, (q[:, 0], k[:, 0], v[:, 0], li[:, 0], lf[:, 0])
+    )
+    h = h.reshape(x.shape[0], 1, -1)
+    h = rms_norm(h.astype(COMPUTE_DTYPE), p["norm"], cfg.norm_eps)
+    h = h * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", h, _cast(p["down"]))
+    return out, {"C": C, "n": n, "m": m}
+
+
+# ===========================================================================
+# xLSTM: sLSTM
+# ===========================================================================
+def init_slstm(key, cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    std = float(1.0 / np.sqrt(d))
+    f_ff = int(d * 4 / 3)
+    return {
+        # input weights for (z, i, f, o) stacked
+        "w_x": jax.random.normal(ks[0], (d, 4 * d), dt) * std,
+        # per-head recurrent weights (block-diagonal): [H, dh, 4*dh]
+        "w_h": jax.random.normal(ks[1], (h, dh, 4 * dh), dt) * float(1 / np.sqrt(dh)),
+        "bias": jnp.concatenate(
+            [jnp.zeros((2 * d,)), jnp.full((d,), 3.0), jnp.zeros((d,))]
+        ).astype(jnp.float32),
+        "norm": jnp.ones((d,), dt),
+        # post-block gated FFN (proj factor 4/3)
+        "ffn_gate": jax.random.normal(ks[2], (d, f_ff), dt) * std,
+        "ffn_down": jax.random.normal(ks[3], (f_ff, d), dt)
+        * float(std / np.sqrt(cfg.n_layers)),
+    }
+
+
+def slstm_specs(cfg: ArchConfig) -> dict:
+    return {
+        "w_x": ("embed_fsdp", "ssm_inner"),
+        "w_h": ("heads", None, None),
+        "bias": (None,),
+        "norm": ("embed",),
+        "ffn_gate": ("embed_fsdp", "ff"),
+        "ffn_down": ("ff", "embed_fsdp"),
+    }
+
+
+def slstm_init_state(cfg: ArchConfig, batch: int) -> dict:
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.ones((batch, d), jnp.float32),
+        "m": jnp.zeros((batch, d), jnp.float32),
+        "h": jnp.zeros((batch, d), jnp.float32),
+    }
+
+
+def _slstm_step(p, cfg, carry, xw_t):
+    """xw_t: [B, 4D] pre-computed input contribution for this step."""
+    c, n, m, h = carry
+    B = h.shape[0]
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    hr = h.reshape(B, H, dh).astype(COMPUTE_DTYPE)
+    rec = jnp.einsum("bhk,hkj->bhj", hr, _cast(p["w_h"])).reshape(B, 4 * cfg.d_model)
+    pre = (xw_t + rec).astype(jnp.float32) + p["bias"]
+    z_r, i_r, f_r, o_r = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(z_r)
+    o = jax.nn.sigmoid(o_r)
+    log_f = -jax.nn.softplus(-f_r)
+    m_new = jnp.maximum(log_f + m, i_r)
+    i_p = jnp.exp(i_r - m_new)
+    f_p = jnp.exp(log_f + m - m_new)
+    c_new = f_p * c + i_p * z
+    n_new = f_p * n + i_p
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, m_new, h_new), h_new
+
+
+def slstm(p: dict, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    """Full-sequence sLSTM block (sequential over S).  x: [B, S, D]."""
+    y, _ = _slstm_impl(p, cfg, x)
+    return y
+
+
+def slstm_prefill(p: dict, cfg: ArchConfig, x: jax.Array):
+    return _slstm_impl(p, cfg, x)
+
+
+def _slstm_impl(p: dict, cfg: ArchConfig, x: jax.Array):
+    B, S, D = x.shape
+    xw = jnp.einsum("bsd,dj->bsj", x, _cast(p["w_x"]))         # [B, S, 4D]
+    state0 = (
+        jnp.zeros((B, D), jnp.float32),
+        jnp.ones((B, D), jnp.float32),
+        jnp.zeros((B, D), jnp.float32),
+        jnp.zeros((B, D), jnp.float32),
+    )
+    step = lambda carry, t: _slstm_step(p, cfg, carry, t)
+    (c, n, m, hf), hs = chunked_scan(
+        step, state0, xw.swapaxes(0, 1), chunk=min(_CHUNK, S)
+    )
+    h = hs.swapaxes(0, 1)                                      # [B, S, D] f32
+    h = rms_norm(h.astype(COMPUTE_DTYPE), p["norm"], cfg.norm_eps)
+    g = jnp.einsum("bsd,df->bsf", h, _cast(p["ffn_gate"]))
+    out = jnp.einsum("bsf,fd->bsd", jax.nn.silu(g), _cast(p["ffn_down"]))
+    state = {"c": c, "n": n, "m": m, "h": hf}
+    return shard(out, "batch", "seq", "embed"), state
+
+
+def slstm_decode(
+    p: dict, cfg: ArchConfig, x: jax.Array, state: dict
+) -> Tuple[jax.Array, dict]:
+    xw = jnp.einsum("bsd,dj->bsj", x, _cast(p["w_x"]))
+    carry = (state["c"], state["n"], state["m"], state["h"])
+    (c, n, m, h), h_out = _slstm_step(p, cfg, carry, xw[:, 0])
+    hh = rms_norm(h_out[:, None].astype(COMPUTE_DTYPE), p["norm"], cfg.norm_eps)
+    g = jnp.einsum("bsd,df->bsf", hh, _cast(p["ffn_gate"]))
+    out = jnp.einsum("bsf,fd->bsd", jax.nn.silu(g), _cast(p["ffn_down"]))
+    return out, {"c": c, "n": n, "m": m, "h": h}

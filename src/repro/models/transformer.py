@@ -1,0 +1,439 @@
+"""Generic layer-stack assembly for every assigned architecture.
+
+A model is `embed -> scan(periods) -> final_norm -> unembed`, where one
+*period* is the repeating sublayer pattern from the ArchConfig (e.g. Jamba:
+7 mamba + 1 attn, MoE on odd sublayers; dense archs: a single attn+mlp).
+Period parameters are stacked on a leading axis and the stack runs as one
+`lax.scan`, keeping HLO size (and 512-device SPMD compile time) independent
+of depth.
+
+Three execution modes share parameters:
+  * train    — full sequence, remat'd period body, returns (x, moe_aux)
+  * prefill  — full sequence + returns per-sublayer decode caches
+  * decode   — one token against ring-buffer KV / recurrent states
+
+Sublayer kinds: attn (self), xattn (cross, enc-dec), mamba, mlstm, slstm.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, LayerSpec
+from repro.dist.sharding import shard
+from repro.models import moe as moe_mod
+from repro.models import ssm
+from repro.models.layers import (
+    COMPUTE_DTYPE,
+    attention,
+    attention_decode,
+    attention_specs,
+    init_attention,
+    init_mlp,
+    mlp,
+    mlp_specs,
+    rms_norm,
+)
+
+__all__ = [
+    "init_stack",
+    "stack_specs",
+    "run_stack_train",
+    "run_stack_prefill",
+    "run_stack_decode",
+    "init_stack_cache",
+    "cache_len_for",
+]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _init_sublayer(key, cfg: ArchConfig, spec: LayerSpec) -> dict:
+    k1, k2 = jax.random.split(key)
+    dt = jnp.dtype(cfg.param_dtype)
+    p: dict[str, Any] = {"norm1": jnp.ones((cfg.d_model,), dt)}
+    if spec.kind in ("attn", "xattn"):
+        p["mixer"] = init_attention(k1, cfg)
+    elif spec.kind == "mamba":
+        p["mixer"] = ssm.init_mamba(k1, cfg)
+    elif spec.kind == "mlstm":
+        p["mixer"] = ssm.init_mlstm(k1, cfg)
+    elif spec.kind == "slstm":
+        p["mixer"] = ssm.init_slstm(k1, cfg)
+    else:
+        raise ValueError(spec.kind)
+    if spec.ffn != "none":
+        p["norm2"] = jnp.ones((cfg.d_model,), dt)
+        if spec.ffn == "moe":
+            p["ffn"] = moe_mod.init_moe(k2, cfg)
+            if cfg.moe_dense_ff:  # arctic: parallel dense residual branch
+                p["ffn_dense"] = init_mlp(k2, cfg, d_ff=cfg.moe_dense_ff)
+        else:
+            p["ffn"] = init_mlp(k2, cfg)
+    return p
+
+
+def init_stack(key, cfg: ArchConfig, period=None, n_layers=None) -> dict:
+    """Stacked period params: every leaf gets leading dim n_periods."""
+    period = period or cfg.period
+    n_p = (n_layers or cfg.n_layers) // len(period)
+
+    def one_period(k):
+        ks = jax.random.split(k, len(period))
+        return {
+            f"sub{i}": _init_sublayer(ks[i], cfg, s)
+            for i, s in enumerate(period)
+        }
+
+    keys = jax.random.split(key, n_p)
+    per = [one_period(k) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+
+
+def _sublayer_specs(cfg: ArchConfig, spec: LayerSpec) -> dict:
+    s: dict[str, Any] = {"norm1": ("embed",)}
+    if spec.kind in ("attn", "xattn"):
+        s["mixer"] = attention_specs(cfg)
+    elif spec.kind == "mamba":
+        s["mixer"] = ssm.mamba_specs(cfg)
+    elif spec.kind == "mlstm":
+        s["mixer"] = ssm.mlstm_specs(cfg)
+    elif spec.kind == "slstm":
+        s["mixer"] = ssm.slstm_specs(cfg)
+    if spec.ffn != "none":
+        s["norm2"] = ("embed",)
+        if spec.ffn == "moe":
+            s["ffn"] = moe_mod.moe_specs(cfg)
+            if cfg.moe_dense_ff:
+                s["ffn_dense"] = mlp_specs(cfg)
+        else:
+            s["ffn"] = mlp_specs(cfg)
+    return s
+
+
+def stack_specs(cfg: ArchConfig, period=None) -> dict:
+    """Logical-axis spec tree mirroring init_stack (leading 'stack' axis)."""
+    period = period or cfg.period
+    base = {
+        f"sub{i}": _sublayer_specs(cfg, s) for i, s in enumerate(period)
+    }
+    return jax.tree.map(
+        lambda t: ("stack", *t), base, is_leaf=lambda t: isinstance(t, tuple)
+    )
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+def cache_len_for(cfg: ArchConfig, seq_len: int) -> int:
+    """KV capacity for attention sublayers: the sliding window bounds it."""
+    return min(cfg.window, seq_len) if cfg.window else seq_len
+
+
+def _init_sublayer_cache(
+    cfg: ArchConfig, spec: LayerSpec, batch: int, seq_len: int,
+    enc_len: int = 0,
+) -> dict:
+    if spec.kind == "attn":
+        L = cache_len_for(cfg, seq_len)
+        kvh, dh = cfg.n_kv_heads, cfg.head_dim
+        if cfg.kv_quant:
+            return {
+                "k": jnp.zeros((batch, L, kvh, dh), jnp.int8),
+                "v": jnp.zeros((batch, L, kvh, dh), jnp.int8),
+                "k_scale": jnp.zeros((batch, L, kvh), jnp.float32),
+                "v_scale": jnp.zeros((batch, L, kvh), jnp.float32),
+            }
+        return {
+            "k": jnp.zeros((batch, L, kvh, dh), COMPUTE_DTYPE),
+            "v": jnp.zeros((batch, L, kvh, dh), COMPUTE_DTYPE),
+        }
+    if spec.kind == "xattn":
+        kvh, dh = cfg.n_kv_heads, cfg.head_dim
+        return {
+            "k": jnp.zeros((batch, enc_len, kvh, dh), COMPUTE_DTYPE),
+            "v": jnp.zeros((batch, enc_len, kvh, dh), COMPUTE_DTYPE),
+        }
+    if spec.kind == "mamba":
+        return ssm.mamba_init_state(cfg, batch)
+    if spec.kind == "mlstm":
+        return ssm.mlstm_init_state(cfg, batch)
+    if spec.kind == "slstm":
+        return ssm.slstm_init_state(cfg, batch)
+    raise ValueError(spec.kind)
+
+
+def init_stack_cache(
+    cfg: ArchConfig, batch: int, seq_len: int, period=None, enc_len: int = 0
+) -> dict:
+    period = period or cfg.period
+    n_p = cfg.n_layers // len(period)
+    one = {
+        f"sub{i}": _init_sublayer_cache(cfg, s, batch, seq_len, enc_len)
+        for i, s in enumerate(period)
+    }
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n_p, *x.shape)), one
+    )
+
+
+# ---------------------------------------------------------------------------
+# forward modes
+# ---------------------------------------------------------------------------
+def _ffn_apply(p: dict, cfg: ArchConfig, spec: LayerSpec, x: jax.Array):
+    """Post-mixer FFN with residual.  Returns (x, aux)."""
+    aux = jnp.float32(0.0)
+    if spec.ffn == "none":
+        return x, aux
+    h = rms_norm(x, p["norm2"], cfg.norm_eps)
+    if spec.ffn == "moe":
+        y, aux = moe_mod.moe(p["ffn"], cfg, h)
+        if cfg.moe_dense_ff:
+            y = y + mlp(p["ffn_dense"], cfg, h)
+    else:
+        y = mlp(p["ffn"], cfg, h)
+    return x + y, aux
+
+
+def _mixer_train(
+    p, cfg: ArchConfig, spec: LayerSpec, x, positions, encoder_out, causal
+):
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    if spec.kind == "attn":
+        y = attention(p["mixer"], cfg, h, positions, causal=causal)
+    elif spec.kind == "xattn":
+        kx = jnp.einsum("bsd,dhk->bshk", encoder_out, p["mixer"]["wk"].astype(COMPUTE_DTYPE))
+        vx = jnp.einsum("bsd,dhk->bshk", encoder_out, p["mixer"]["wv"].astype(COMPUTE_DTYPE))
+        y = attention(
+            p["mixer"], cfg, h, positions, causal=False, rotary=False,
+            kv=(kx, vx),
+        )
+    elif spec.kind == "mamba":
+        y = ssm.mamba(p["mixer"], cfg, h)
+    elif spec.kind == "mlstm":
+        y = ssm.mlstm(p["mixer"], cfg, h)
+    elif spec.kind == "slstm":
+        y = ssm.slstm(p["mixer"], cfg, h)
+    else:
+        raise ValueError(spec.kind)
+    return x + y
+
+
+def run_stack_train(
+    params: dict,
+    cfg: ArchConfig,
+    x: jax.Array,           # [B, S, D]
+    positions: jax.Array,   # [B, S]
+    period=None,
+    encoder_out: Optional[jax.Array] = None,
+    causal: bool = True,
+    remat: bool = True,
+    unroll: bool = False,
+    remat_policy: Optional[str] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """remat_policy='save_ffn' keeps the named FFN dot outputs resident so
+    the backward remat pass does not redo them — which also skips their
+    FSDP weight re-all-gather (one of three gather passes; §Perf arctic).
+
+    unroll=True replaces the layer scan with a python loop: ~L x larger
+    HLO and slower compiles, but gradient reduce-scatter propagates per
+    layer (the scan transpose pins gradients to all-reduce + slice) and
+    cost_analysis becomes exact — the §Perf profiles use it."""
+    period = period or cfg.period
+
+    policy = None
+    if remat_policy == "save_ffn":
+        policy = jax.checkpoint_policies.save_only_these_names(
+            "ffn_h", "ffn_out"
+        )
+
+    def sublayer(i, spec):
+        def run(p, xx):
+            xx = _mixer_train(p, cfg, spec, xx, positions, encoder_out, causal)
+            return _ffn_apply(p, cfg, spec, xx)
+        # checkpoint per SUBLAYER, not per period: a period may hold many
+        # sublayers (Jamba: 8) and rematting them jointly keeps every
+        # sublayer's internals live during backward.
+        return jax.checkpoint(run, policy=policy) if remat else run
+
+    subs = [sublayer(i, spec) for i, spec in enumerate(period)]
+
+    def body(x_in, p_period):
+        xx = x_in
+        aux = jnp.float32(0.0)
+        for i, spec in enumerate(period):
+            xx, a = subs[i](p_period[f"sub{i}"], xx)
+            aux = aux + a
+        return xx, aux
+
+    if unroll:
+        n_p = jax.tree.leaves(params)[0].shape[0]
+        aux_total = jnp.float32(0.0)
+        for i in range(n_p):
+            p_i = jax.tree.map(lambda t: t[i], params)
+            x, aux = body(x, p_i)
+            aux_total = aux_total + aux
+        return x, aux_total
+
+    def scan_fn(carry, p_period):
+        x_in, aux_in = carry
+        xx, aux = body(x_in, p_period)
+        return (xx, aux_in + aux), None
+
+    (x, aux_total), _ = jax.lax.scan(scan_fn, (x, jnp.float32(0.0)), params)
+    return x, aux_total
+
+
+def _mixer_prefill(
+    p, cfg: ArchConfig, spec: LayerSpec, x, positions, encoder_out,
+    cache, causal,
+):
+    """Full-sequence forward that also fills this sublayer's decode cache."""
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    if spec.kind == "attn":
+        y = attention(p["mixer"], cfg, h, positions, causal=causal)
+        # recompute k/v and write them into the FULL cache buffer at their
+        # (ring) slots — slicing would shrink capacity and make the next
+        # decode step overwrite a live entry.
+        from repro.models.layers import _qkv  # local import, shared math
+        _, k, v = _qkv(p["mixer"], cfg, h, positions)
+        S_in = k.shape[1]
+        L = cache["k"].shape[1]
+        take = min(S_in, L)
+        if cfg.window:
+            # ring layout: absolute position p lives at slot p % L
+            idx = jnp.asarray(
+                [(S_in - take + i) % L for i in range(take)], jnp.int32
+            )
+            k_take, v_take = k[:, -take:], v[:, -take:]
+        else:
+            idx = jnp.arange(take, dtype=jnp.int32)
+            k_take, v_take = k[:, :take], v[:, :take]
+        if cfg.kv_quant:
+            from repro.models.layers import kv_quantize
+            qk, sk = kv_quantize(k_take)
+            qv, sv = kv_quantize(v_take)
+            return x + y, {
+                "k": cache["k"].at[:, idx].set(qk),
+                "v": cache["v"].at[:, idx].set(qv),
+                "k_scale": cache["k_scale"].at[:, idx].set(sk),
+                "v_scale": cache["v_scale"].at[:, idx].set(sv),
+            }
+        return x + y, {
+            "k": cache["k"].at[:, idx].set(k_take),
+            "v": cache["v"].at[:, idx].set(v_take),
+        }
+    if spec.kind == "xattn":
+        kx = jnp.einsum("bsd,dhk->bshk", encoder_out, p["mixer"]["wk"].astype(COMPUTE_DTYPE))
+        vx = jnp.einsum("bsd,dhk->bshk", encoder_out, p["mixer"]["wv"].astype(COMPUTE_DTYPE))
+        y = attention(p["mixer"], cfg, h, positions, causal=False,
+                      rotary=False, kv=(kx, vx))
+        return x + y, {"k": kx, "v": vx}
+    if spec.kind == "mamba":
+        y, state = ssm.mamba_prefill(p["mixer"], cfg, h)
+        return x + y, state
+    if spec.kind == "mlstm":
+        y, state = ssm.mlstm_prefill(p["mixer"], cfg, h)
+        return x + y, state
+    if spec.kind == "slstm":
+        y, state = ssm.slstm_prefill(p["mixer"], cfg, h)
+        return x + y, state
+    raise ValueError(spec.kind)
+
+
+def run_stack_prefill(
+    params: dict,
+    cfg: ArchConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    cache: dict,
+    period=None,
+    encoder_out: Optional[jax.Array] = None,
+    causal: bool = True,
+) -> Tuple[jax.Array, dict]:
+    period = period or cfg.period
+
+    def scan_fn(x_in, scanned):
+        p_period, c_period = scanned
+        xx = x_in
+        new_c = {}
+        for i, spec in enumerate(period):
+            xx, new_c[f"sub{i}"] = _mixer_prefill(
+                p_period[f"sub{i}"], cfg, spec, xx, positions, encoder_out,
+                c_period[f"sub{i}"], causal,
+            )
+            xx, _ = _ffn_apply(p_period[f"sub{i}"], cfg, spec, xx)
+        return xx, new_c
+
+    x, new_cache = jax.lax.scan(scan_fn, x, (params, cache))
+    return x, new_cache
+
+
+def _mixer_decode(
+    p, cfg: ArchConfig, spec: LayerSpec, x, pos, cache,
+):
+    """x: [B, 1, D]; pos: int32[B] absolute position of this token."""
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    if spec.kind == "attn":
+        L = cache["k"].shape[1]
+        if cfg.window:
+            write_idx = pos % L
+            kv_len = jnp.minimum(pos + 1, L)
+        else:
+            write_idx = jnp.minimum(pos, L - 1)
+            kv_len = jnp.minimum(pos + 1, L)
+        y, new_cache = attention_decode(
+            p["mixer"], cfg, h, pos, cache, kv_len, write_idx=write_idx
+        )
+        return x + y, new_cache
+    if spec.kind == "xattn":
+        from repro.kernels import ops as kops
+        from repro.models.layers import _qkv, _cast
+        q = jnp.einsum("bsd,dhk->bshk", h, _cast(p["mixer"]["wq"]))
+        if cfg.qkv_bias:
+            q = q + _cast(p["mixer"]["bq"])
+        enc_len = cache["k"].shape[1]
+        lens = jnp.full((x.shape[0],), enc_len, jnp.int32)
+        out = kops.flash_decode(q[:, 0], cache["k"], cache["v"], lens)
+        y = jnp.einsum("bhk,hkd->bd", out, _cast(p["mixer"]["wo"]))[:, None]
+        return x + y, cache
+    if spec.kind == "mamba":
+        y, state = ssm.mamba_decode(p["mixer"], cfg, h, cache)
+        return x + y, state
+    if spec.kind == "mlstm":
+        y, state = ssm.mlstm_decode(p["mixer"], cfg, h, cache)
+        return x + y, state
+    if spec.kind == "slstm":
+        y, state = ssm.slstm_decode(p["mixer"], cfg, h, cache)
+        return x + y, state
+    raise ValueError(spec.kind)
+
+
+def run_stack_decode(
+    params: dict,
+    cfg: ArchConfig,
+    x: jax.Array,     # [B, 1, D]
+    pos: jax.Array,   # int32[B]
+    cache: dict,
+    period=None,
+) -> Tuple[jax.Array, dict]:
+    period = period or cfg.period
+
+    def scan_fn(x_in, scanned):
+        p_period, c_period = scanned
+        xx = x_in
+        new_c = {}
+        for i, spec in enumerate(period):
+            xx, new_c[f"sub{i}"] = _mixer_decode(
+                p_period[f"sub{i}"], cfg, spec, xx, pos, c_period[f"sub{i}"]
+            )
+            xx, _ = _ffn_apply(p_period[f"sub{i}"], cfg, spec, xx)
+        return xx, new_c
+
+    x, new_cache = jax.lax.scan(scan_fn, x, (params, cache))
+    return x, new_cache

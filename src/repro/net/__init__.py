@@ -1,0 +1,20 @@
+"""Multipath network substrate: fabric model, transports, collectives, coding."""
+from repro.net.fabric import FabricParams, FabricState, fabric_tick, init_fabric
+from repro.net.transport import Policy, SimResult, TransportConfig, simulate_message
+from repro.net.collectives import (
+    CollectiveConfig,
+    allgather_cct,
+    allreduce_cct,
+    ettr,
+    ideal_step_ticks,
+    step_cct,
+)
+from repro.net.fountain import (
+    decode_overhead_curve,
+    encode,
+    peel_decode,
+    robust_soliton,
+    sample_encoding,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,122 @@
+"""Collective workloads over the multipath fabric: CCT and ETTR (§1).
+
+AllReduce/AllGather are modeled as their ring schedules: W workers, each
+step every worker sends one shard (G/W bytes) to its neighbor concurrently;
+the step completes when the SLOWEST worker's shard lands (synchronous
+barrier — exactly why tail latency dominates CCT).  Worker links are
+independent multipath bundles with independent degradation processes, all
+simulated in one vectorized pass (workers = lead dim of the fabric state).
+
+  CCT(allreduce) = sum over 2(W-1) steps of max-over-workers step time
+  CCT(allgather) = sum over (W-1) steps of the same
+
+ETTR (effective training time ratio) for a training job with per-iteration
+compute time C:  ETTR = sum_i (C + CCT_ideal) / sum_i (C + CCT_i), where
+CCT_ideal is the no-degradation, perfectly-balanced fluid bound.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.net.fabric import FabricParams
+from repro.net.transport import Policy, TransportConfig, simulate_message
+
+__all__ = [
+    "CollectiveConfig",
+    "step_cct",
+    "allreduce_cct",
+    "allgather_cct",
+    "ideal_step_ticks",
+    "ettr",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveConfig:
+    workers: int = 8
+    shard_packets: int = 512   # packets per ring-step shard (G / W / pkt_size)
+    horizon: int = 4096
+
+
+def ideal_step_ticks(params: FabricParams, shard_packets: int, rate: int) -> float:
+    """Fluid lower bound for one ring step: all paths healthy, perfect
+    balance, sender rate-limited."""
+    agg_cap = float(np.sum(np.asarray(params.capacity)))
+    send_rate = min(agg_cap, float(rate))
+    serialize = shard_packets / send_rate
+    return serialize + float(np.min(np.asarray(params.latency)))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "tcfg", "workers"))
+def _step_ccts(
+    params: FabricParams,
+    cfg_key: jax.Array,
+    tcfg: TransportConfig,
+    cfg: CollectiveConfig,
+    workers: int,
+):
+    """CCT of one synchronous step for each of `workers` concurrent flows."""
+    keys = jax.random.split(cfg_key, workers)
+    sim = jax.vmap(
+        lambda k: simulate_message(
+            params, tcfg, cfg.shard_packets, k, horizon=cfg.horizon
+        ).cct
+    )
+    return sim(keys)
+
+
+def step_cct(
+    params: FabricParams,
+    tcfg: TransportConfig,
+    cfg: CollectiveConfig,
+    key: jax.Array,
+) -> jax.Array:
+    """Barrier time of one ring step = max over workers."""
+    return jnp.max(_step_ccts(params, key, tcfg, cfg, cfg.workers))
+
+
+def allreduce_cct(
+    params: FabricParams,
+    tcfg: TransportConfig,
+    cfg: CollectiveConfig,
+    key: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    """(total CCT, per-step barrier times) for a ring all-reduce."""
+    steps = 2 * (cfg.workers - 1)
+    keys = jax.random.split(key, steps)
+    per_step = jnp.stack(
+        [step_cct(params, tcfg, cfg, keys[s]) for s in range(steps)]
+    )
+    return jnp.sum(per_step), per_step
+
+
+def allgather_cct(
+    params: FabricParams,
+    tcfg: TransportConfig,
+    cfg: CollectiveConfig,
+    key: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    steps = cfg.workers - 1
+    keys = jax.random.split(key, steps)
+    per_step = jnp.stack(
+        [step_cct(params, tcfg, cfg, keys[s]) for s in range(steps)]
+    )
+    return jnp.sum(per_step), per_step
+
+
+def ettr(
+    compute_ticks: float,
+    ccts: jax.Array,
+    ideal_cct: float,
+) -> float:
+    """Effective training time ratio across iterations."""
+    ccts = np.asarray(ccts, dtype=np.float64)
+    total = np.sum(compute_ticks + ccts)
+    ideal = len(ccts) * (compute_ticks + ideal_cct)
+    return float(ideal / total)

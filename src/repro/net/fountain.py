@@ -1,0 +1,127 @@
+"""LT-style fountain code: the erasure transport the paper sprays for (§1-2).
+
+A message of K source symbols is expanded into a potentially unbounded stream
+of encoded symbols; each is the XOR of d source symbols, d drawn from the
+robust-soliton distribution.  Any set of ~K(1+eps) distinct received symbols
+decodes with high probability via belief-propagation peeling.  This is the
+property the transport relies on: losses need no retransmission, and spraying
+feeds the decoder from whichever paths happen to deliver.
+
+Encoding (XOR aggregation) is the sender hot-spot and runs through the
+Pallas kernel (repro.kernels.lt_encode); degree/neighbor sampling and the
+peeling decoder are host-side numpy (receiver/control-plane).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+from repro.kernels import ops as kops
+
+__all__ = [
+    "robust_soliton",
+    "sample_encoding",
+    "encode",
+    "peel_decode",
+    "decode_overhead_curve",
+]
+
+
+def robust_soliton(K: int, c: float = 0.05, delta: float = 0.05) -> np.ndarray:
+    """Robust-soliton degree distribution over degrees 1..K."""
+    d = np.arange(1, K + 1, dtype=np.float64)
+    rho = np.zeros(K)
+    rho[0] = 1.0 / K
+    rho[1:] = 1.0 / (d[1:] * (d[1:] - 1.0))
+    R = c * np.log(K / delta) * np.sqrt(K)
+    tau = np.zeros(K)
+    pivot = int(np.floor(K / R)) if R > 0 else K
+    pivot = max(1, min(pivot, K))
+    idx = np.arange(1, pivot)
+    tau[idx - 1] = R / (idx * K)
+    tau[pivot - 1] = R * np.log(R / delta) / K if R > 0 else 0.0
+    mu = rho + np.maximum(tau, 0.0)
+    return mu / mu.sum()
+
+
+def sample_encoding(
+    K: int, R: int, rng: np.random.Generator, dmax: int = 32,
+    c: float = 0.05, delta: float = 0.05,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Sample (neighbors int32[R, dmax], valid bool[R, dmax]) for R encoded
+    symbols.  Degrees above dmax are re-sampled (clipping the soliton tail:
+    negligible probability mass for K >= 64, keeps the kernel static)."""
+    probs = robust_soliton(K, c, delta)
+    probs = probs[:dmax] / probs[:dmax].sum()
+    degrees = rng.choice(np.arange(1, dmax + 1), size=R, p=probs)
+    neighbors = np.zeros((R, dmax), dtype=np.int32)
+    valid = np.zeros((R, dmax), dtype=bool)
+    for r in range(R):
+        d = int(degrees[r])
+        neighbors[r, :d] = rng.choice(K, size=d, replace=False)
+        valid[r, :d] = True
+    return neighbors, valid
+
+
+def encode(payload, neighbors, valid, backend: str = "auto"):
+    """Encoded symbols uint32[R, P] (Pallas kernel or oracle)."""
+    return kops.lt_encode(payload, neighbors, valid, backend=backend)
+
+
+def peel_decode(
+    encoded: np.ndarray,    # uint32[R, P] received symbols
+    neighbors: np.ndarray,  # int32[R, dmax]
+    valid: np.ndarray,      # bool[R, dmax]
+    K: int,
+) -> np.ndarray | None:
+    """Belief-propagation peeling decoder.  Returns uint32[K, P] or None if
+    the received set is insufficient."""
+    R, P = encoded.shape
+    eqs = [set(neighbors[r, valid[r]].tolist()) for r in range(R)]
+    vals = [encoded[r].copy() for r in range(R)]
+    decoded = np.zeros((K, P), dtype=np.uint32)
+    known = np.zeros(K, dtype=bool)
+    # index: symbol -> list of equations containing it
+    ripple = [r for r in range(R) if len(eqs[r]) == 1]
+    while ripple:
+        r = ripple.pop()
+        if not eqs[r]:
+            continue
+        (s,) = tuple(eqs[r])
+        if known[s]:
+            eqs[r].clear()
+            continue
+        decoded[s] = vals[r]
+        known[s] = True
+        eqs[r].clear()
+        for r2 in range(R):
+            if s in eqs[r2]:
+                eqs[r2].discard(s)
+                vals[r2] ^= decoded[s]
+                if len(eqs[r2]) == 1:
+                    ripple.append(r2)
+    return decoded if known.all() else None
+
+
+def decode_overhead_curve(
+    K: int, trials: int, rng: np.random.Generator, dmax: int = 32
+) -> np.ndarray:
+    """For each trial: the minimal number of received symbols that decoded
+    (bisection over prefixes of a fresh encoded stream)."""
+    out = np.zeros(trials, dtype=np.int64)
+    payload = rng.integers(0, 2**32, (K, 8), dtype=np.uint32)
+    for t in range(trials):
+        R = int(K * 1.6) + 32
+        neigh, valid = sample_encoding(K, R, rng, dmax=dmax)
+        enc = np.asarray(encode(payload, neigh, valid, backend="reference"))
+        lo, hi = K, R
+        while lo < hi:
+            mid = (lo + hi) // 2
+            ok = peel_decode(enc[:mid], neigh[:mid], valid[:mid], K) is not None
+            if ok:
+                hi = mid
+            else:
+                lo = mid + 1
+        out[t] = lo
+    return out

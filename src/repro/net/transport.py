@@ -1,0 +1,224 @@
+"""Multipath transports over the fabric: the paper's senders and baselines.
+
+Policies (§2, §4 + the baselines the paper positions against):
+
+  * ECMP          — flow-hash: every packet of the flow on one fixed path.
+  * RR            — round-robin across all paths, health-blind.
+  * RAND_STATIC   — uniform random path per packet (stochastic spraying).
+  * RAND_ADAPTIVE — random per the *adaptive* profile (same feedback
+                    controller as WaM; isolates determinism from adaptivity).
+  * WAM           — Whack-a-Mole: bit-reversal deterministic spray over the
+                    adaptive profile (the paper's algorithm).
+
+Reliability modes:
+  * coded   — fountain/LT transport: the flow completes when ANY
+              need = ceil(K * (1+overhead)) distinct packets arrive (§1-2);
+              losses are never retransmitted.
+  * arq     — uncoded: drops become retransmission debt after the feedback
+              delay (selective-repeat accounting).
+
+`simulate_message` scans a fixed horizon and reports the first completion
+tick (inf-like sentinel if the horizon was insufficient).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.feedback import ControllerState, PathStats, controller_step, make_controller
+from repro.core.profile import PathProfile, uniform_profile
+from repro.core.spray import SprayMethod, SprayState, make_spray_state, spray_key, select_path
+from repro.net.fabric import FabricParams, FabricState, fabric_tick, init_fabric
+
+__all__ = ["Policy", "TransportConfig", "simulate_message", "SimResult"]
+
+
+class Policy(enum.IntEnum):
+    ECMP = 0
+    RR = 1
+    RAND_STATIC = 2
+    RAND_ADAPTIVE = 3
+    WAM = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class TransportConfig:
+    policy: Policy
+    coded: bool = True
+    code_overhead: float = 0.05   # fountain reception overhead epsilon
+    rate: int = 32                # sender emit budget per tick (packets)
+    ell: int = 10                 # profile precision (m = 2**ell)
+    ctrl_interval: int = 4        # controller cadence (ticks)
+    method: SprayMethod = SprayMethod.SHUFFLE_1
+    seed: Tuple[int, int] = (333, 735)
+    # Uncoded (ARQ) mode only: cap packets in flight (sent - known delivered -
+    # known lost) at `cwnd` — the windowed pacing every retransmission-based
+    # transport needs to avoid self-induced congestion collapse.  The coded
+    # sender needs no window: completion is oblivious to which packets land.
+    cwnd: float = 256.0
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SimResult:
+    cct: jax.Array            # float32 — completion tick (or horizon sentinel)
+    sent_total: jax.Array     # float32[n]
+    dropped_total: jax.Array  # float32[n]
+    final_b: jax.Array        # int32[n] final profile allocation
+    received: jax.Array       # float32
+
+
+def _assign_paths(
+    cfg: TransportConfig,
+    n: int,
+    spray: SprayState,
+    profile: PathProfile,
+    k_emit: jax.Array,
+    key: jax.Array,
+    ecmp_path: jax.Array,
+):
+    """Choose a path for each of up to cfg.rate packets (first k_emit valid).
+
+    Returns (arrivals[n] float32, spray') — spray counter advances by k_emit
+    so the WaM sequence is exactly the paper's (no holes)."""
+    rate = cfg.rate
+    live = jnp.arange(rate) < k_emit  # [rate]
+    if cfg.policy == Policy.ECMP:
+        paths = jnp.full((rate,), ecmp_path, jnp.int32)
+    elif cfg.policy == Policy.RR:
+        paths = ((spray.j + jnp.arange(rate, dtype=jnp.uint32)) % n).astype(jnp.int32)
+    elif cfg.policy == Policy.RAND_STATIC:
+        paths = jax.random.randint(key, (rate,), 0, n, jnp.int32)
+    elif cfg.policy == Policy.RAND_ADAPTIVE:
+        u = jax.random.randint(key, (rate,), 0, profile.m, jnp.int32)
+        paths = select_path(profile.c, u)
+    elif cfg.policy == Policy.WAM:
+        js = spray.j + jnp.arange(rate, dtype=jnp.uint32)
+        keys = spray_key(js, spray.sa, spray.sb, spray.ell, spray.method)
+        paths = select_path(profile.c, keys)
+    else:
+        raise ValueError(cfg.policy)
+    onehot = jax.nn.one_hot(paths, n, dtype=jnp.float32)
+    arrivals = jnp.sum(onehot * live[:, None], axis=0)
+    spray = dataclasses.replace(spray, j=spray.j + k_emit.astype(jnp.uint32))
+    return arrivals, spray
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "n_packets", "horizon"))
+def simulate_message(
+    params: FabricParams,
+    cfg: TransportConfig,
+    n_packets: int,
+    key: jax.Array,
+    horizon: int = 4096,
+) -> SimResult:
+    """Single-flow message transfer; returns completion statistics."""
+    n = params.n
+    need = (
+        int(n_packets * (1.0 + cfg.code_overhead)) + 1
+        if cfg.coded
+        else n_packets
+    )
+    # fluid-model float residue guard on the completion threshold
+    need = need - 0.25
+    profile0 = uniform_profile(n, cfg.ell)
+    ctrl0 = make_controller(profile0)
+    spray0 = make_spray_state(
+        profile0, method=cfg.method, sa=cfg.seed[0], sb=cfg.seed[1]
+    )
+    k_hash, k_loop = jax.random.split(key)
+    ecmp_path = jax.random.randint(k_hash, (), 0, n, jnp.int32)
+    fabric0 = init_fabric(params)
+
+    adaptive = cfg.policy in (Policy.RAND_ADAPTIVE, Policy.WAM)
+
+    def tick(carry, tk):
+        (fabric, ctrl, spray, sent_sched, debt, done_at, sent_pp, known) = carry
+        t = fabric.t
+        key_t = jax.random.fold_in(k_loop, t)
+        ka, kb = jax.random.split(key_t)
+
+        # --- how many packets to emit this tick ---
+        if cfg.coded:
+            # keep the pipe full until completion
+            k_emit = jnp.where(done_at >= 0, 0, cfg.rate).astype(jnp.int32)
+        else:
+            outstanding = jnp.maximum(n_packets - sent_sched, 0.0) + debt
+            known_delivered, known_dropped = known
+            in_flight = (
+                jnp.sum(sent_pp) - known_delivered - known_dropped
+            )
+            room = jnp.maximum(cfg.cwnd - in_flight, 0.0)
+            # ceil: the fabric is a fluid model (fractional service during
+            # degradation), but the sender emits whole packets — rounding debt
+            # down would strand a fractional residue short of completion.
+            k_emit = jnp.ceil(
+                jnp.minimum(jnp.minimum(outstanding, room), float(cfg.rate))
+            ).astype(jnp.int32)
+
+        arrivals, spray = _assign_paths(
+            cfg, n, spray, ctrl.profile, k_emit, ka, ecmp_path
+        )
+        sent_pp = sent_pp + arrivals
+        fabric, fb = fabric_tick(params, fabric, arrivals, kb)
+
+        # --- retransmission debt (uncoded): NACKed drops re-enter the stream
+        new_debt = debt + jnp.sum(fb["dropped"]) - (
+            jnp.maximum(k_emit - jnp.maximum(n_packets - sent_sched, 0.0), 0.0)
+        )
+        new_debt = jnp.maximum(new_debt, 0.0)
+        sent_sched = sent_sched + k_emit
+
+        # --- feedback -> profile controller (adaptive policies only) ---
+        if adaptive:
+            sent = jnp.maximum(fb["sent"], 1e-6)
+            stats = PathStats(
+                ecn_rate=fb["marked"] / sent * jnp.minimum(fb["sent"], 1.0),
+                loss_rate=fb["dropped"] / sent * jnp.minimum(fb["sent"], 1.0),
+                rtt=params.latency.astype(jnp.float32) + fb["qdelay"],
+            )
+
+            def do_ctrl(c):
+                c2, _ = controller_step(c, stats)
+                return c2
+
+            ctrl = jax.lax.cond(
+                (t % cfg.ctrl_interval) == 0, do_ctrl, lambda c: c, ctrl
+            )
+
+        known = (
+            known[0] + jnp.sum(fb["landed"]),
+            known[1] + jnp.sum(fb["dropped"]),
+        )
+        done_now = (fabric.received >= need) & (done_at < 0)
+        done_at = jnp.where(done_now, t.astype(jnp.int32) + 1, done_at)
+        return (
+            fabric, ctrl, spray, sent_sched, new_debt, done_at, sent_pp, known
+        ), None
+
+    carry0 = (
+        fabric0,
+        ctrl0,
+        spray0,
+        jnp.float32(0.0),
+        jnp.float32(0.0),
+        jnp.int32(-1),
+        jnp.zeros((n,), jnp.float32),
+        (jnp.float32(0.0), jnp.float32(0.0)),
+    )
+    (fabric, ctrl, _, _, _, done_at, sent_pp, _), _ = jax.lax.scan(
+        tick, carry0, jnp.arange(horizon)
+    )
+    cct = jnp.where(done_at >= 0, done_at.astype(jnp.float32), float(horizon))
+    return SimResult(
+        cct=cct,
+        sent_total=sent_pp,
+        dropped_total=fabric.dropped,
+        final_b=ctrl.profile.b,
+        received=fabric.received,
+    )

@@ -1,0 +1,99 @@
+"""Adafactor (factored second moments) — the memory-frugal optimizer for the
+>100B MoE configs: O(rows+cols) state for matrices instead of O(rows*cols),
+which is what lets arctic-480b's optimizer state fit a v5e-512 HBM budget.
+
+Follows Shazeer & Stern 2018: factored v for >=2-D params (last two dims),
+update RMS clipping (d=1.0), optional momentum off, decoupled weight decay.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdafactorConfig", "adafactor_init", "adafactor_update"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdafactorConfig:
+    lr: float = 1e-3
+    decay: float = 0.8          # beta2_t = 1 - step^-decay
+    eps1: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+    min_dim_factored: int = 128
+
+
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    vr: Any  # row second moments (or full v for small/1-D params)
+    vc: Any  # col second moments (None-placeholder zeros for unfactored)
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2 and p.shape[-1] >= 128 and p.shape[-2] >= 128
+
+
+def adafactor_init(params) -> AdafactorState:
+    def vr_init(p):
+        if _factored(p):
+            return jnp.zeros(p.shape[:-1], jnp.float32)      # drop last dim
+        return jnp.zeros(p.shape, jnp.float32)
+
+    def vc_init(p):
+        if _factored(p):
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+        return jnp.zeros((1,), jnp.float32)
+
+    return AdafactorState(
+        step=jnp.zeros((), jnp.int32),
+        vr=jax.tree.map(vr_init, params),
+        vc=jax.tree.map(vc_init, params),
+    )
+
+
+def adafactor_update(
+    grads, state: AdafactorState, params, cfg: AdafactorConfig, lr_scale=1.0
+) -> Tuple[Any, AdafactorState]:
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    beta2 = 1.0 - t ** (-cfg.decay)
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, vr, vc):
+        g = g.astype(jnp.float32)
+        g2 = g * g + cfg.eps1
+        if _factored(p):
+            vr_new = beta2 * vr + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc_new = beta2 * vc + (1 - beta2) * jnp.mean(g2, axis=-2)
+            r = vr_new / jnp.maximum(
+                jnp.mean(vr_new, axis=-1, keepdims=True), cfg.eps1
+            )
+            u = (
+                g
+                * jax.lax.rsqrt(r)[..., None]
+                * jax.lax.rsqrt(jnp.maximum(vc_new, cfg.eps1))[..., None, :]
+            )
+        else:
+            vr_new = beta2 * vr + (1 - beta2) * g2
+            vc_new = vc
+            u = g * jax.lax.rsqrt(jnp.maximum(vr_new, cfg.eps1))
+        # update-RMS clipping
+        rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+        u = u / jnp.maximum(1.0, rms / cfg.clip_threshold)
+        newp = p.astype(jnp.float32) - lr * (
+            u + cfg.weight_decay * p.astype(jnp.float32)
+        )
+        return newp.astype(p.dtype), vr_new, vc_new
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_vr = treedef.flatten_up_to(state.vr)
+    flat_vc = treedef.flatten_up_to(state.vc)
+    out = [upd(p, g, vr, vc) for p, g, vr, vc in zip(flat_p, flat_g, flat_vr, flat_vc)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_vr = treedef.unflatten([o[1] for o in out])
+    new_vc = treedef.unflatten([o[2] for o in out])
+    return new_params, AdafactorState(step=step, vr=new_vr, vc=new_vc)

@@ -1,0 +1,124 @@
+"""Whack-a-Mole request router: the paper's engine at the serving layer.
+
+A serving deployment runs R model replicas ("paths"); requests must be
+spread so that no replica transiently overloads (queueing delay = tail
+latency = SLO violations) even when replicas degrade (preemption, thermal
+throttle, noisy neighbor).  This is EXACTLY the paper's problem with
+requests for packets:
+
+  * replica shares live in a discrete path profile (m = 2^ell units);
+  * each request picks its replica via the seeded bit-reversal counter —
+    any window of the request stream hits every replica within O(log m)
+    of its share (no burst pile-ups, unlike random routing);
+  * per-replica latency/error feedback drives the §6 whack-down controller;
+    recovered replicas ramp back via restore_path.
+
+Pure-python + numpy control plane (router decisions are host-side); the
+same `repro.core` state machines as the transport, so every §9 bound and
+§7 invariant applies verbatim.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.feedback import (
+    ControllerState,
+    PathStats,
+    controller_step,
+    make_controller,
+)
+from repro.core.profile import quantize_profile
+from repro.core.spray import SprayMethod, make_spray_state, spray_batch
+
+__all__ = ["Router", "RouterReport"]
+
+
+@dataclasses.dataclass
+class RouterReport:
+    """Aggregated per-replica feedback for one reporting window."""
+
+    latency_ms: np.ndarray   # mean observed latency per replica
+    error_rate: np.ndarray   # failed / issued
+    queue_depth: np.ndarray  # outstanding requests (ECN analogue)
+
+
+class Router:
+    """Deterministic request router over R replicas.
+
+    >>> r = Router(replica_weights=[1, 1, 1, 1])
+    >>> replica_ids = r.assign(batch_size=32)
+    >>> r.report(RouterReport(latency_ms=..., error_rate=..., queue_depth=...))
+    """
+
+    def __init__(
+        self,
+        replica_weights: Sequence[float],
+        *,
+        ell: int = 10,
+        seed: tuple = (333, 735),
+        method: SprayMethod = SprayMethod.SHUFFLE_1,
+        queue_ecn_threshold: float = 8.0,
+    ):
+        profile = quantize_profile(np.asarray(replica_weights, float), ell)
+        self._ctrl: ControllerState = make_controller(profile)
+        m = 1 << ell
+        self._spray = make_spray_state(
+            profile, method=method,
+            sa=seed[0] % m, sb=(seed[1] % m) | 1,
+        )
+        self._qthresh = queue_ecn_threshold
+        self.n = profile.n
+
+    # ------------------------------------------------------------------ data
+    @property
+    def shares(self) -> np.ndarray:
+        b = np.asarray(self._ctrl.profile.b)
+        return b / b.sum()
+
+    def assign(self, batch_size: int) -> np.ndarray:
+        """Replica id for each of `batch_size` requests (deterministic)."""
+        paths, _seqs, self._spray = spray_batch(
+            self._spray, self._ctrl.profile, batch_size
+        )
+        return np.asarray(paths)
+
+    # -------------------------------------------------------------- feedback
+    def report(self, rep: RouterReport) -> np.ndarray:
+        """Feed one window of replica health; returns severity weights."""
+        stats = PathStats(
+            ecn_rate=jnp.asarray(
+                np.clip(rep.queue_depth / self._qthresh - 1.0, 0.0, 1.0),
+                jnp.float32,
+            ),
+            loss_rate=jnp.asarray(rep.error_rate, jnp.float32),
+            rtt=jnp.asarray(rep.latency_ms, jnp.float32),
+        )
+        self._ctrl, w = controller_step(self._ctrl, stats)
+        # keep the spray state's profile view in sync
+        self._spray = dataclasses.replace(
+            self._spray, path_seq=self._spray.path_seq
+        )
+        return np.asarray(w)
+
+    def simulate_window(
+        self,
+        batch_size: int,
+        service_ms: np.ndarray,
+        rng: Optional[np.random.Generator] = None,
+    ) -> RouterReport:
+        """Toy closed-loop: issue a batch, model per-replica queueing with
+        the given mean service times, return the observed report."""
+        rng = rng or np.random.default_rng(0)
+        ids = self.assign(batch_size)
+        counts = np.bincount(ids, minlength=self.n).astype(float)
+        # M/D/1-ish: latency grows with load x service time
+        lat = service_ms * (1.0 + counts / max(batch_size / self.n, 1.0))
+        return RouterReport(
+            latency_ms=lat,
+            error_rate=np.zeros(self.n),
+            queue_depth=counts,
+        )

@@ -1,0 +1,24 @@
+"""Train state pytree."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["TrainState"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: jax.Array
+
+    @staticmethod
+    def create(params, opt_state):
+        return TrainState(
+            params=params, opt_state=opt_state, step=jnp.zeros((), jnp.int32)
+        )

@@ -1,0 +1,209 @@
+"""Train / prefill / decode step builders.
+
+`build_train_step` is the GSPMD path used by the dry-run and the trainer:
+loss -> grad -> optimizer, with optional microbatch gradient accumulation
+(sequential lax.scan: the standard memory/throughput knob) and a pluggable
+LR schedule.  Sharding comes from logical-axis constraints inside the model
+plus in_shardings on params/batch (launch/dryrun.py).
+
+`build_sprayed_dp_step` is the paper-faithful manual-DP path: shard_map over
+the data axis, per-shard gradients, and the gradient all-reduce carried by
+Whack-a-Mole chunk-sprayed bidirectional rings (repro.dist) in bit-reversed
+bucket order — the TPU-side analogue of the paper's packet spraying, used by
+examples and tested for exact equivalence with the GSPMD step.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.dist.sprayed_collectives import route_schedule, sprayed_psum
+from repro.core.profile import quantize_counts
+from repro.models import model as M
+from repro.optim.api import Optimizer, cosine_schedule
+from repro.train.state import TrainState
+
+__all__ = ["build_train_step", "build_decode_step", "build_prefill_step",
+           "build_sprayed_dp_step"]
+
+
+def build_train_step(
+    cfg: ArchConfig,
+    optimizer: Optimizer,
+    *,
+    microbatch: Optional[int] = None,
+    remat: bool = True,
+    schedule: Callable = cosine_schedule,
+    cast_compute: bool = True,
+    unroll: bool = False,
+    remat_policy=None,
+) -> Callable[[TrainState, Dict], Tuple[TrainState, Dict]]:
+    """Returns train_step(state, batch) -> (state', metrics).
+
+    cast_compute: cast f32 master params to bf16 ONCE at step entry so the
+    convert runs on each local shard and FSDP weight all-gathers move bf16
+    on the TPU target.  (Not observable in CPU dry-runs: XLA-CPU legalizes
+    bf16 dots to f32 regardless — EXPERIMENTS §Perf cell 1, iteration 2.)"""
+
+    def loss_fn(params, batch):
+        if cast_compute:
+            params = jax.tree.map(
+                lambda p: p.astype(jnp.bfloat16)
+                if p.dtype == jnp.float32 else p,
+                params,
+            )
+        loss, metrics = M.train_loss(
+            params, cfg, batch, remat=remat, unroll=unroll,
+            remat_policy=remat_policy,
+        )
+        return loss, metrics
+
+    def grads_of(params, batch):
+        if microbatch is None or microbatch <= 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch
+            )
+            return loss, metrics, grads
+        # gradient accumulation over microbatches (leading-dim split)
+        def split(x):
+            b = x.shape[0]
+            assert b % microbatch == 0, (b, microbatch)
+            return x.reshape(microbatch, b // microbatch, *x.shape[1:])
+
+        mb = jax.tree.map(split, batch)
+
+        def acc_step(carry, mb_batch):
+            loss_a, grads_a = carry
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True
+            )(params, mb_batch)
+            grads = jax.tree.map(jnp.add, grads_a, grads)
+            return (loss_a + loss, grads), metrics
+
+        # accumulate in the PARAM dtype: f32 accumulators on a bf16-param
+        # giant (arctic/dbrx/jamba + adafactor) would double peak HBM; the
+        # update-RMS clipping in adafactor tolerates bf16 accumulation.
+        zero_g = jax.tree.map(
+            lambda p: jnp.zeros(
+                p.shape,
+                jnp.float32 if p.dtype == jnp.float32 else p.dtype,
+            ),
+            params,
+        )
+        (loss_sum, grads), metrics = jax.lax.scan(
+            acc_step, (jnp.float32(0.0), zero_g), mb
+        )
+        scale = 1.0 / microbatch
+        grads = jax.tree.map(lambda g: g * scale, grads)
+        metrics = jax.tree.map(lambda m: m[-1], metrics)
+        return loss_sum * scale, metrics, grads
+
+    def train_step(state: TrainState, batch: Dict):
+        loss, metrics, grads = grads_of(state.params, batch)
+        lr_scale = schedule(state.step)
+        new_params, new_opt = optimizer.update(
+            grads, state.opt_state, state.params, lr_scale
+        )
+        new_state = TrainState(
+            params=new_params, opt_state=new_opt, step=state.step + 1
+        )
+        out = {"loss": loss, **metrics, "lr_scale": lr_scale}
+        return new_state, out
+
+    return train_step
+
+
+def build_prefill_step(cfg: ArchConfig):
+    """prefill(params, batch, cache) -> (next_token int32[B], cache)."""
+
+    def prefill_step(params, batch, cache):
+        logits, cache = M.prefill(params, cfg, batch, cache)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    return prefill_step
+
+
+def build_decode_step(cfg: ArchConfig):
+    """decode(params, tokens [B,1], pos [B], cache) -> (next [B], cache)."""
+
+    def decode_step(params, tokens, pos, cache):
+        logits, cache = M.decode_step(params, cfg, tokens, pos, cache)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# paper-faithful manual-DP step with sprayed gradient reduction
+# ---------------------------------------------------------------------------
+def build_sprayed_dp_step(
+    cfg: ArchConfig,
+    optimizer: Optimizer,
+    mesh,
+    *,
+    axis: str = "data",
+    n_buckets: int = 8,
+    chunks_per_bucket: int = 16,
+    seed: Tuple[int, int] = (333, 735),
+    remat: bool = True,
+    schedule: Callable = cosine_schedule,
+):
+    """Data-parallel train step where the gradient all-reduce is bucketed,
+    released in bit-reversed bucket order, and each bucket is chunk-sprayed
+    across both ring directions (Whack-a-Mole schedule end to end)."""
+
+    def loss_fn(params, batch):
+        loss, _ = M.train_loss(params, cfg, batch, remat=remat)
+        return loss
+
+    def per_shard(state: TrainState, batch: Dict):
+        g = jax.lax.psum(1, axis)
+        loss, grads = jax.value_and_grad(loss_fn)(state.params, batch)
+        loss = jax.lax.pmean(loss, axis)
+        # --- bucketed, bit-reverse-ordered, sprayed reduction ---
+        leaves, treedef = jax.tree.flatten(grads)
+        order = np.argsort(
+            route_schedule(
+                len(leaves),
+                (quantize_counts(np.full(n_buckets, 1 / n_buckets), 10), 10),
+                sa=seed[0], sb=seed[1],
+            ),
+            kind="stable",
+        )  # leaves grouped by bucket id in release order
+        reduced = [None] * len(leaves)
+        for j0, li in enumerate(order):
+            reduced[li] = (
+                sprayed_psum(
+                    leaves[li], axis,
+                    n_chunks=chunks_per_bucket, seed=seed,
+                    j0=j0 * chunks_per_bucket,
+                )
+                / g
+            )
+        grads = treedef.unflatten(reduced)
+        lr_scale = schedule(state.step)
+        new_params, new_opt = optimizer.update(
+            grads, state.opt_state, state.params, lr_scale
+        )
+        return (
+            TrainState(new_params, new_opt, state.step + 1),
+            {"loss": loss},
+        )
+
+    pspec_state = P()  # replicated params/opt under pure DP
+    step = jax.jit(
+        jax.shard_map(
+            per_shard,
+            mesh=mesh,
+            in_specs=(pspec_state, P(axis)),
+            out_specs=(pspec_state, P()),
+            check_vma=False,
+        )
+    )
+    return step

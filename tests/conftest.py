@@ -1,0 +1,11 @@
+"""Shared test config.  NOTE: no XLA_FLAGS here — smoke tests must see ONE
+device; multi-device tests spawn subprocesses with their own flags."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from hypothesis import settings
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")

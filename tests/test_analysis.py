@@ -1,0 +1,87 @@
+"""HLO collective parser + analytic cost model unit tests."""
+import numpy as np
+
+from repro.analysis.costs import (
+    fwd_flops_per_token,
+    model_flops,
+    param_count,
+    roofline_terms,
+    train_flops,
+)
+from repro.analysis.hlo import (
+    Collective,
+    collective_wire_bytes,
+    parse_collectives,
+    summarize_collectives,
+)
+from repro.configs.base import shape_by_name
+from repro.configs.registry import get_config
+
+SAMPLE_HLO = """
+ENTRY %main {
+  %ag = f32[32,512]{0,1} all-gather(%x), channel_id=1, replica_groups=[2,4]<=[8], dimensions={1}, metadata={op_name="jit(f)/foo/dot"}
+  %ar = bf16[128,256]{1,0} all-reduce(%y), channel_id=2, replica_groups=[4,2]<=[2,4]T(1,0), metadata={op_name="jit(f)/jvp()/while/body/bar"}
+  %rs = f32[16,64]{1,0} reduce-scatter(%z), channel_id=3, replica_groups=[1,8]<=[8], dimensions={0}, metadata={op_name="jit(f)/baz"}
+  %cp = f32[64]{0} collective-permute(%w), channel_id=4, source_target_pairs={{0,1},{1,0}}, metadata={op_name="jit(f)/while/body/while/body/qux"}
+}
+"""
+
+
+def test_parse_collectives():
+    cols = parse_collectives(SAMPLE_HLO)
+    kinds = [c.kind for c in cols]
+    assert kinds == ["all-gather", "all-reduce", "reduce-scatter",
+                     "collective-permute"]
+    ag, ar, rs, cp = cols
+    assert ag.bytes == 32 * 512 * 4 and ag.group == 4 and ag.depth == 0
+    assert ar.bytes == 128 * 256 * 2 and ar.group == 2 and ar.depth == 1
+    assert rs.bytes == 16 * 64 * 4 and rs.group == 8
+    assert cp.depth == 2
+
+
+def test_wire_byte_formulas():
+    assert collective_wire_bytes(Collective("all-gather", 1000, 4, 0, "")) == 750
+    assert collective_wire_bytes(Collective("all-reduce", 1000, 4, 0, "")) == 1500
+    assert collective_wire_bytes(Collective("reduce-scatter", 1000, 4, 0, "")) == 3000
+    assert collective_wire_bytes(Collective("all-to-all", 1000, 4, 0, "")) == 750
+    assert collective_wire_bytes(Collective("collective-permute", 1000, 2, 0, "")) == 1000
+
+
+def test_summarize_depth_multipliers():
+    s = summarize_collectives(SAMPLE_HLO, [1, 10, 100])
+    # ar at depth1 x10; cp at depth2 x100
+    assert s["all-reduce"] == 2 * (128 * 256 * 2) * (1 / 2) * 10
+    assert s["collective-permute"] == 64 * 4 * 100
+    assert s["max_while_depth"] == 2
+
+
+def test_param_count_against_eval_shape():
+    import jax
+    from repro.models import model as M
+
+    for arch in ("qwen3-8b", "arctic-480b", "whisper-large-v3", "xlstm-350m"):
+        cfg = get_config(arch)
+        tree = jax.eval_shape(lambda c=cfg: M.init_params(jax.random.PRNGKey(0), c))
+        n = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+        analytic = param_count(cfg)["total"]
+        assert abs(analytic - n) / n < 0.05, (arch, analytic, n)
+
+
+def test_model_flops_conventions():
+    cfg = get_config("qwen3-8b")
+    tr = shape_by_name("train_4k")
+    mf = model_flops(cfg, tr)
+    tokens = tr.global_batch * tr.seq_len
+    assert abs(mf - 6 * param_count(cfg)["active"] * tokens) < 1e-6 * mf
+    # train HLO estimate is ~4/3 the 6ND convention (remat) + attention
+    assert train_flops(cfg, tr) > mf
+
+
+def test_roofline_dominant():
+    cfg = get_config("qwen3-8b")
+    tr = shape_by_name("train_4k")
+    r = roofline_terms(cfg, tr, 256, collective_bytes_per_dev=1e12)
+    assert r["dominant"] == "collective"
+    r2 = roofline_terms(cfg, tr, 256, collective_bytes_per_dev=1e3)
+    assert r2["dominant"] in ("compute", "memory")
+    assert 0 < r2["roofline_fraction"] <= 1.0

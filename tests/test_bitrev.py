@@ -1,0 +1,36 @@
+"""theta(j, ell) — bit-reversal unit + property tests."""
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.core.bitrev import bit_reverse32, theta
+
+
+def test_paper_example():
+    # paper §4: ell=10, j=249 (0011111001b) -> 1001111100b = 636
+    assert int(theta(249, 10)) == 636
+
+
+def test_reverse32_known():
+    assert int(bit_reverse32(np.uint32(1))) == 1 << 31
+    assert int(bit_reverse32(np.uint32(0x80000000))) == 1
+    assert int(bit_reverse32(np.uint32(0xFFFFFFFF))) == 0xFFFFFFFF
+
+
+@given(st.integers(1, 16), st.integers(0, 2**31))
+def test_involution(ell, j):
+    k = int(theta(j, ell))
+    assert 0 <= k < (1 << ell)
+    assert int(theta(k, ell)) == j % (1 << ell)
+
+
+@given(st.integers(1, 12))
+def test_bijection(ell):
+    m = 1 << ell
+    out = np.asarray(theta(np.arange(m, dtype=np.uint32), ell))
+    assert sorted(out.tolist()) == list(range(m))
+
+
+@given(st.integers(1, 14), st.integers(0, 2**20))
+def test_only_low_bits_matter(ell, j):
+    m = 1 << ell
+    assert int(theta(j, ell)) == int(theta(j % m, ell))

@@ -1,0 +1,125 @@
+"""Spray deviation bounds (paper §9, Lemmas 1-7)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.deviation import (
+    interval_deviation,
+    max_deviation,
+    path_deviations,
+)
+from repro.core.profile import make_profile, quantize_profile
+from repro.core.spray import SprayMethod
+
+ELL = 8  # m=256 keeps the exact O(m^2) deviation computation fast
+
+
+def test_lemma1_level0_zero():
+    # the full-interval deviation is exactly 0 for any seed/method
+    for method in (0, 1, 2):
+        assert interval_deviation(ELL, method, 33, 77, 0, 1 << ELL) == 0.0
+
+
+def test_lemma2_interval_deviation_exact():
+    """Under shuffle method 1, dev(I) == 1 - 2^-e for level-e intervals."""
+    m = 1 << ELL
+    for e in (1, 2, 3):
+        size = m >> e
+        for i in (0, 1, (1 << e) - 1):
+            dev = interval_deviation(
+                ELL, SprayMethod.SHUFFLE_1, 33, 77, i * size, (i + 1) * size
+            )
+            assert abs(dev - (1 - 2.0 ** (-e))) < 1e-9, (e, i, dev)
+
+
+def test_lemma3_interval_bound_method2():
+    m = 1 << ELL
+    for e in (1, 2, 3):
+        size = m >> e
+        for i in range(1 << e):
+            dev = interval_deviation(
+                ELL, SprayMethod.SHUFFLE_2, 33, 77, i * size, (i + 1) * size
+            )
+            assert dev <= 2 * (1 - 2.0 ** (-e)) + 1e-9, (e, i, dev)
+
+
+@given(
+    st.integers(0, (1 << ELL) - 2),
+    st.integers(1, (1 << ELL) - 1),
+    st.integers(0, (1 << ELL) - 1),
+    st.integers(0, (1 << ELL) // 2 - 1).map(lambda x: 2 * x + 1),
+)
+@settings(max_examples=20, deadline=None)
+def test_lemma6_bound_method1(lo, size, sa, sb):
+    hi = min(lo + size, 1 << ELL)
+    dev = interval_deviation(ELL, SprayMethod.SHUFFLE_1, sa, sb, lo, hi)
+    assert dev <= ELL + 1e-9
+
+
+@given(
+    st.integers(0, (1 << ELL) - 2),
+    st.integers(1, (1 << ELL) - 1),
+    st.integers(0, (1 << ELL) - 1),
+    st.integers(0, (1 << ELL) // 2 - 1).map(lambda x: 2 * x + 1),
+)
+@settings(max_examples=20, deadline=None)
+def test_lemma6_bound_method2(lo, size, sa, sb):
+    hi = min(lo + size, 1 << ELL)
+    dev = interval_deviation(ELL, SprayMethod.SHUFFLE_2, sa, sb, lo, hi)
+    assert dev <= 2 * ELL + 1e-9
+
+
+@given(
+    st.lists(st.floats(0.01, 1.0), min_size=2, max_size=10),
+    st.integers(0, 255),
+    st.integers(0, 127).map(lambda x: 2 * x + 1),
+)
+@settings(max_examples=15, deadline=None)
+def test_profile_deviation_bound(shares, sa, sb):
+    prof = quantize_profile(np.asarray(shares), ELL)
+    devs = path_deviations(prof, SprayMethod.SHUFFLE_1, sa, sb)
+    assert devs.max() <= ELL + 1e-9
+
+
+@given(
+    st.integers(0, (1 << ELL) - 2),
+    st.integers(1, (1 << ELL) - 1),
+    st.integers(0, (1 << ELL) - 1),
+    st.integers(0, (1 << ELL) // 2 - 1).map(lambda x: 2 * x + 1),
+)
+@settings(max_examples=15, deadline=None)
+def test_combined_method_bound(lo, size, sa, sb):
+    """Paper §4: combined two-seed method keeps the §9 bounds (method-2
+    form, <= 2*ell)."""
+    hi = min(lo + size, 1 << ELL)
+    dev = interval_deviation(ELL, SprayMethod.COMBINED, sa, sb, lo, hi)
+    assert dev <= 2 * ELL + 1e-9
+
+
+def test_combined_is_permutation():
+    import numpy as np
+    from repro.core.spray import spray_key
+    keys = np.asarray(spray_key(
+        np.arange(1 << ELL, dtype=np.uint32), np.uint32(77), np.uint32(9),
+        ELL, SprayMethod.COMBINED,
+    ))
+    assert sorted(keys.tolist()) == list(range(1 << ELL))
+
+
+def test_deterministic_beats_random_tail():
+    """The quantitative point of the paper: WaM keeps every window within
+    O(log m) of target; uniform-random spraying drifts like sqrt(window)."""
+    rng = np.random.default_rng(0)
+    m = 1 << ELL
+    prof = quantize_profile([0.5, 0.5], ELL)
+    dev_wam = max_deviation(prof, SprayMethod.SHUFFLE_1, 33, 77)
+    # random counterpart: worst window discrepancy over the same horizon
+    keys = rng.integers(0, m, 2 * m)
+    hits = (keys < m // 2).astype(np.int64)
+    pref = np.concatenate([[0], np.cumsum(hits)])
+    worst = 0.0
+    for j in range(m):
+        lens = np.arange(1, m + 1)
+        disc = pref[j + lens] - pref[j] - 0.5 * lens
+        worst = max(worst, disc.max() - disc.min())
+    assert dev_wam <= ELL
+    assert worst > dev_wam  # random is strictly worse on this horizon

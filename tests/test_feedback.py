@@ -1,0 +1,80 @@
+"""Feedback controller (paper §5-6): whack-down, recovery, objective."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.feedback import (
+    PathStats,
+    controller_step,
+    make_controller,
+    restore_path,
+    severity_weights,
+    weighted_badness,
+    whack_down,
+)
+from repro.core.profile import uniform_profile
+
+
+def _stats(ecn=None, loss=None, rtt=None, n=5):
+    z = jnp.zeros(n)
+    return PathStats(
+        ecn_rate=jnp.asarray(ecn) if ecn is not None else z,
+        loss_rate=jnp.asarray(loss) if loss is not None else z,
+        rtt=jnp.asarray(rtt) if rtt is not None else jnp.ones(n) * 10,
+    )
+
+
+def test_severity_zero_when_healthy():
+    w = severity_weights(_stats())
+    assert float(jnp.max(w)) == 0.0
+
+
+def test_severity_orders_by_badness():
+    w = severity_weights(_stats(loss=[0.0, 0.1, 0.3, 0.0, 0.0]))
+    assert float(w[2]) > float(w[1]) > float(w[0])
+
+
+def test_whack_down_reduces_objective_and_preserves_m():
+    ctrl = make_controller(uniform_profile(5, 10))
+    w = jnp.asarray([0.0, 0.0, 0.9, 0.0, 0.4])
+    bad0 = float(weighted_badness(ctrl.profile.b, w))
+    ctrl2 = whack_down(ctrl, w)
+    bad1 = float(weighted_badness(ctrl2.profile.b, w))
+    assert bad1 < bad0
+    assert int(np.asarray(ctrl2.profile.b).sum()) == 1024
+    # degraded bins lost, healthy gained
+    b0, b1 = np.asarray(ctrl.profile.b), np.asarray(ctrl2.profile.b)
+    assert b1[2] < b0[2] and b1[0] > b0[0]
+
+
+def test_whack_down_all_degraded_keeps_least_bad():
+    ctrl = make_controller(uniform_profile(4, 10))
+    w = jnp.asarray([0.9, 0.8, 0.95, 0.7])
+    ctrl2 = whack_down(ctrl, w)
+    b1 = np.asarray(ctrl2.profile.b)
+    assert int(b1.sum()) == 1024
+    assert b1[3] >= np.asarray(ctrl.profile.b)[3]  # least-bad receives
+
+
+def test_restore_path_ramps_recovered():
+    ctrl = make_controller(uniform_profile(4, 10))
+    w = jnp.asarray([0.0, 0.0, 0.0, 1.0])
+    for _ in range(6):
+        ctrl = whack_down(ctrl, w)
+    whacked = int(np.asarray(ctrl.profile.b)[3])
+    ctrl2 = restore_path(ctrl, 3, beta=0.25)
+    assert int(np.asarray(ctrl2.profile.b)[3]) > whacked
+    assert int(np.asarray(ctrl2.profile.b).sum()) == 1024
+
+
+def test_controller_step_recovers_after_health_returns():
+    ctrl = make_controller(uniform_profile(4, 10))
+    bad = _stats(loss=[0.0, 0.0, 0.0, 0.5], n=4)
+    for _ in range(8):
+        ctrl, _ = controller_step(ctrl, bad)
+    low = int(np.asarray(ctrl.profile.b)[3])
+    assert low < 100
+    healthy = _stats(n=4)
+    for _ in range(30):
+        ctrl, _ = controller_step(ctrl, healthy)
+    assert int(np.asarray(ctrl.profile.b)[3]) > low
+    assert int(np.asarray(ctrl.profile.b).sum()) == 1024

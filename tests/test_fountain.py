@@ -1,0 +1,61 @@
+"""LT fountain code: 'any sufficiently large subset decodes' (paper §1-2)."""
+import numpy as np
+import pytest
+
+from repro.net.fountain import (
+    decode_overhead_curve,
+    encode,
+    peel_decode,
+    robust_soliton,
+    sample_encoding,
+)
+
+
+def test_soliton_is_distribution():
+    for K in (16, 64, 256):
+        mu = robust_soliton(K)
+        assert mu.shape == (K,)
+        assert abs(mu.sum() - 1.0) < 1e-12
+        assert np.all(mu >= 0)
+
+
+def test_roundtrip_decode():
+    rng = np.random.default_rng(0)
+    K, P = 64, 16
+    payload = rng.integers(0, 2**32, (K, P), dtype=np.uint32)
+    R = int(K * 1.5)
+    neigh, valid = sample_encoding(K, R, rng)
+    enc = np.asarray(encode(payload, neigh, valid, backend="reference"))
+    out = peel_decode(enc, neigh, valid, K)
+    assert out is not None
+    assert np.array_equal(out, payload)
+
+
+def test_decode_from_random_subset():
+    """Erasure tolerance: a random 70% subset of a 3x stream decodes
+    (LT peeling at K=48 needs real margin; RaptorQ-class codes need ~2%)."""
+    rng = np.random.default_rng(1)
+    K, P = 48, 8
+    payload = rng.integers(0, 2**32, (K, P), dtype=np.uint32)
+    R = 3 * K
+    neigh, valid = sample_encoding(K, R, rng)
+    enc = np.asarray(encode(payload, neigh, valid, backend="reference"))
+    keep = rng.permutation(R)[: int(0.7 * R)]
+    out = peel_decode(enc[keep], neigh[keep], valid[keep], K)
+    assert out is not None and np.array_equal(out, payload)
+
+
+def test_insufficient_symbols_fail():
+    rng = np.random.default_rng(2)
+    K, P = 64, 4
+    payload = rng.integers(0, 2**32, (K, P), dtype=np.uint32)
+    neigh, valid = sample_encoding(K, K // 2, rng)
+    enc = np.asarray(encode(payload, neigh, valid, backend="reference"))
+    assert peel_decode(enc, neigh, valid, K) is None
+
+
+def test_overhead_modest():
+    rng = np.random.default_rng(3)
+    need = decode_overhead_curve(128, 4, rng)
+    overhead = need / 128.0 - 1.0
+    assert overhead.mean() < 0.5  # LT at small K; RaptorQ-class would be ~2%

@@ -1,0 +1,149 @@
+"""Per-arch smoke tests (reduced configs) + serving equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config
+from repro.models import model as M
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 32
+
+
+def _batch(cfg, b=B, s=S, rng_seed=0):
+    rng = np.random.default_rng(rng_seed)
+    if cfg.frontend == "vision_patches":
+        s_img = min(cfg.prefix_tokens, s // 2)
+        return {
+            "tokens": jnp.asarray(
+                rng.integers(1, cfg.vocab_size, (b, s - s_img)), jnp.int32
+            ),
+            "patches": jnp.asarray(
+                rng.standard_normal((b, s_img, cfg.d_model)) * 0.02, jnp.bfloat16
+            ),
+        }
+    if cfg.is_encdec:
+        return {
+            "tokens": jnp.asarray(
+                rng.integers(1, cfg.vocab_size, (b, s)), jnp.int32
+            ),
+            "frames": jnp.asarray(
+                rng.standard_normal((b, s, cfg.d_model)) * 0.02, jnp.bfloat16
+            ),
+        }
+    return {
+        "tokens": jnp.asarray(rng.integers(1, cfg.vocab_size, (b, s)), jnp.int32)
+    }
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_train_step(arch):
+    """One forward/train step on CPU: output shapes + no NaNs (brief req)."""
+    cfg = get_smoke_config(arch)
+    params = M.init_params(KEY, cfg)
+    loss, metrics = jax.jit(lambda p, b: M.train_loss(p, cfg, b))(
+        params, _batch(cfg)
+    )
+    assert np.isfinite(float(loss))
+    assert np.isfinite(float(metrics["ce"]))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_serve(arch):
+    cfg = get_smoke_config(arch)
+    params = M.init_params(KEY, cfg)
+    batch = _batch(cfg)
+    cache = M.make_cache(cfg, B, S + 4)
+    logits, cache = jax.jit(lambda p, b, c: M.prefill(p, cfg, b, c))(
+        params, batch, cache
+    )
+    assert logits.shape == (B, cfg.vocab_size)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    pos = jnp.full((B,), S, jnp.int32)
+    logits2, _ = jax.jit(lambda p, t, q, c: M.decode_step(p, cfg, t, q, c))(
+        params, tok, pos, cache
+    )
+    assert logits2.shape == (B, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(logits2, np.float32)))
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "xlstm-350m", "jamba-v0.1-52b"])
+def test_decode_matches_full_forward(arch):
+    """prefill(t0..tn-1) + decode(tn) logits == full forward at position tn.
+
+    Covers attention KV caches AND recurrent state continuation (mamba,
+    m/sLSTM) — the property that makes serving correct."""
+    cfg = get_smoke_config(arch)
+    params = M.init_params(KEY, cfg)
+    full = _batch(cfg, s=S)
+    tokens = full["tokens"]
+
+    # full forward: logits at every position via prefill on the whole thing
+    cache_full = M.make_cache(cfg, B, S)
+    logits_full, _ = M.prefill(params, cfg, {"tokens": tokens}, cache_full)
+    # logits_full is at the LAST position (predicting token S)
+
+    # prefix prefill + decode of the final token
+    prefix = {"tokens": tokens[:, : S - 1]}
+    cache = M.make_cache(cfg, B, S)
+    _, cache = M.prefill(params, cfg, prefix, cache)
+    pos = jnp.full((B,), S - 1, jnp.int32)
+    logits_dec, _ = M.decode_step(params, cfg, tokens[:, -1:], pos, cache)
+
+    np.testing.assert_allclose(
+        np.asarray(logits_dec, np.float32),
+        np.asarray(logits_full, np.float32),
+        atol=5e-2, rtol=5e-2,
+    )
+
+
+def test_swa_ring_buffer_decode():
+    """Sliding-window arch: decode past the window uses the ring buffer and
+    matches a full forward restricted to the window."""
+    cfg = get_smoke_config("h2o-danube-3-4b")  # window = 32
+    assert cfg.window == 32
+    params = M.init_params(KEY, cfg)
+    S_long = 48  # > window
+    rng = np.random.default_rng(7)
+    tokens = jnp.asarray(rng.integers(1, cfg.vocab_size, (B, S_long)), jnp.int32)
+
+    cache_full = M.make_cache(cfg, B, S_long)
+    logits_full, _ = M.prefill(params, cfg, {"tokens": tokens}, cache_full)
+
+    cache = M.make_cache(cfg, B, S_long)
+    _, cache = M.prefill(params, cfg, {"tokens": tokens[:, :-1]}, cache)
+    pos = jnp.full((B,), S_long - 1, jnp.int32)
+    logits_dec, _ = M.decode_step(params, cfg, tokens[:, -1:], pos, cache)
+    np.testing.assert_allclose(
+        np.asarray(logits_dec, np.float32),
+        np.asarray(logits_full, np.float32),
+        atol=5e-2, rtol=5e-2,
+    )
+
+
+def test_configs_match_published_sizes():
+    published = {
+        "arctic-480b": 480e9, "dbrx-132b": 132e9, "jamba-v0.1-52b": 52e9,
+        "starcoder2-3b": 3e9, "qwen3-8b": 8e9, "qwen1.5-4b": 4e9,
+        "h2o-danube-3-4b": 4e9, "xlstm-350m": 0.35e9,
+        "llava-next-mistral-7b": 7e9, "whisper-large-v3": 1.55e9,
+    }
+    for arch, want in published.items():
+        cfg = get_config(arch)
+        tree = jax.eval_shape(lambda c=cfg: M.init_params(KEY, c))
+        n = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+        assert 0.75 * want <= n <= 1.35 * want, (arch, n)
+
+
+def test_subquadratic_flags():
+    """long_500k applicability (DESIGN §Arch-applicability)."""
+    runs = {a for a in ARCH_IDS if get_config(a).subquadratic}
+    assert runs == {
+        "jamba-v0.1-52b", "xlstm-350m", "starcoder2-3b", "h2o-danube-3-4b"
+    }
+
+
+def test_all_shapes_defined():
+    assert set(SHAPES) == {"train_4k", "prefill_32k", "decode_32k", "long_500k"}

@@ -1,0 +1,91 @@
+"""Regression guards for §Perf fixes (cheap, CPU-only).
+
+These lock in behaviours that were root-caused during the perf pass:
+  * grouped-GQA attention must equal the repeat-based oracle (the fix that
+    removed 77 GB/step of KV-cache gathers must stay numerically exact);
+  * param init must honour cfg.param_dtype exactly (the np.float64 scalar
+    promotion bug silently upcast bf16 params to f32);
+  * every sharding profile must resolve to valid NamedShardings on both
+    production meshes (divisibility fallbacks + axis dedupe).
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.kernels import ref
+
+
+def test_grouped_gqa_decode_equals_repeat_oracle():
+    rng = np.random.default_rng(0)
+    B, H, KVH, S, D = 2, 8, 2, 256, 64
+    q = jnp.asarray(rng.standard_normal((B, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, KVH, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, KVH, D)), jnp.float32)
+    kv_len = jnp.asarray([200, 77], jnp.int32)
+    got = ref.flash_decode_ref(q, k, v, kv_len)
+    # repeat-based oracle (the original formulation)
+    group = H // KVH
+    scale = 1.0 / np.sqrt(D)
+    kf = jnp.repeat(k, group, axis=2).astype(jnp.float32)
+    vf = jnp.repeat(v, group, axis=2).astype(jnp.float32)
+    logits = jnp.einsum("bhd,bshd->bhs", q * scale, kf)
+    mask = jnp.arange(S)[None, None, :] < kv_len[:, None, None]
+    logits = jnp.where(mask, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    want = jnp.einsum("bhs,bshd->bhd", p, vf)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5
+    )
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_param_dtype_is_honoured(dtype):
+    import dataclasses
+    from repro.models import model as M
+
+    cfg = dataclasses.replace(get_config("qwen3-8b"), param_dtype=dtype)
+    sds = jax.eval_shape(lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+    # every >=2-D leaf (weights) must carry exactly cfg.param_dtype
+    for leaf in jax.tree.leaves(sds):
+        if leaf.ndim >= 2:
+            assert str(leaf.dtype) == dtype, leaf
+
+
+def test_profiles_resolve_on_production_meshes():
+    import subprocess, sys, textwrap
+
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax
+        from repro.launch.dryrun import PROFILES, shape_rules, _sds
+        from repro.configs.base import shape_by_name
+        from repro.configs.registry import get_config
+        from repro.models import model as M
+
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+        for prof, over in PROFILES.items():
+            for arch in ("qwen3-8b", "arctic-480b", "xlstm-350m"):
+                cfg = get_config(arch)
+                rules = {**shape_rules(shape_by_name("train_4k")), **over}
+                sds = jax.eval_shape(
+                    lambda c=cfg: M.init_params(jax.random.PRNGKey(0), c))
+                _sds(sds, M.param_specs(cfg), mesh, rules)  # must not raise
+        print("OK")
+    """)
+    src = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src")
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True, text=True, timeout=300,
+        env={**os.environ, "PYTHONPATH": src},
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+

@@ -1,0 +1,63 @@
+"""Discrete path profiles: quantization + representations (paper §3)."""
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.profile import (
+    PathProfile,
+    cumulative,
+    from_cumulative,
+    make_profile,
+    quantize_counts,
+    quantize_profile,
+    uniform_profile,
+    validate_profile,
+)
+
+
+@given(
+    st.lists(st.floats(0.0, 100.0), min_size=1, max_size=64).filter(
+        lambda p: sum(p) > 1e-6
+    ),
+    st.integers(4, 14),
+)
+def test_quantize_sums_exactly_to_m(p, ell):
+    prof = quantize_profile(np.asarray(p), ell)
+    validate_profile(prof)
+    assert int(np.asarray(prof.b).sum()) == 1 << ell
+
+
+@given(st.integers(1, 100), st.integers(4, 12))
+def test_uniform_profile(n, ell):
+    prof = uniform_profile(n, ell)
+    validate_profile(prof)
+    b = np.asarray(prof.b)
+    assert b.max() - b.min() <= 1
+
+
+def test_quantize_proportionality():
+    prof = quantize_profile([1, 2, 1], 10)
+    assert np.asarray(prof.b).tolist() == [256, 512, 256]
+
+
+@given(
+    st.lists(st.integers(0, 1000), min_size=1, max_size=32).filter(
+        lambda b: sum(b) > 0
+    )
+)
+def test_cumulative_roundtrip(b):
+    b = np.asarray(b, np.int32)
+    c = cumulative(b)
+    assert np.array_equal(np.asarray(from_cumulative(c)), b)
+
+
+def test_validate_rejects_bad():
+    prof = make_profile([1, 2, 3], 10)  # sums to 6 != 1024
+    with pytest.raises(ValueError):
+        validate_profile(prof)
+
+
+def test_paper_worked_profile():
+    prof = make_profile([127, 400, 200, 173, 124], 10)
+    validate_profile(prof)
+    assert np.asarray(prof.c).tolist() == [127, 527, 727, 900, 1024]

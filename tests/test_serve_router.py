@@ -1,0 +1,60 @@
+"""WaM request router: deterministic balance + replica whack-down."""
+import numpy as np
+
+from repro.serve_router import Router, RouterReport
+
+
+def test_assignments_track_shares_exactly_over_period():
+    r = Router([1, 2, 1])
+    ids = r.assign(1024)  # one full period
+    counts = np.bincount(ids, minlength=3)
+    assert counts.tolist() == [256, 512, 256]
+
+
+def test_every_window_within_bound():
+    r = Router([1, 1, 1, 1], ell=8)
+    ids = r.assign(2048)
+    onehot = np.eye(4, dtype=np.int64)[ids]
+    pref = np.cumsum(onehot, axis=0)
+    lens = np.arange(1, 2049)[:, None]
+    dev = np.abs(pref - lens * 0.25).max()
+    assert dev <= 8  # ell bound on every prefix
+
+
+def test_slow_replica_gets_whacked_and_recovers():
+    r = Router([1, 1, 1, 1])
+    healthy = np.full(4, 10.0)
+    slow = healthy.copy()
+    slow[2] = 80.0  # replica 2 is 8x slower
+    for _ in range(6):
+        r.report(RouterReport(latency_ms=slow, error_rate=np.zeros(4),
+                              queue_depth=np.zeros(4)))
+    shares_during = r.shares
+    assert shares_during[2] < 0.10  # whacked down from 0.25
+    assert abs(shares_during.sum() - 1.0) < 1e-9
+    for _ in range(40):
+        r.report(RouterReport(latency_ms=healthy, error_rate=np.zeros(4),
+                              queue_depth=np.zeros(4)))
+    assert r.shares[2] > shares_during[2]  # ramped back
+
+
+def test_errors_trigger_whack():
+    r = Router([1, 1])
+    err = np.array([0.0, 0.4])
+    for _ in range(4):
+        r.report(RouterReport(latency_ms=np.full(2, 10.0), error_rate=err,
+                              queue_depth=np.zeros(2)))
+    assert r.shares[1] < 0.2
+
+
+def test_closed_loop_simulation():
+    rng = np.random.default_rng(0)
+    r = Router([1, 1, 1, 1])
+    service = np.array([5.0, 5.0, 40.0, 5.0])  # replica 2 degraded
+    for _ in range(10):
+        rep = r.simulate_window(64, service, rng)
+        r.report(rep)
+    # traffic moved away from the slow replica
+    ids = r.assign(1024)
+    counts = np.bincount(ids, minlength=4)
+    assert counts[2] < counts.min(initial=1025, where=np.arange(4) != 2)

@@ -1,0 +1,111 @@
+"""Packet spraying (paper §4): selection rule, seeds, memorylessness."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.profile import make_profile, quantize_profile, uniform_profile
+from repro.core.spray import (
+    SprayMethod,
+    make_spray_state,
+    reseed,
+    select_path,
+    spray_batch,
+    spray_key,
+    spray_paths,
+)
+
+PROFILE = make_profile([127, 400, 200, 173, 124], 10)
+
+
+@given(st.integers(0, 1023))
+def test_select_path_is_paper_rule(k):
+    # smallest i with c(i-1) <= k < c(i)
+    c = np.asarray(PROFILE.c)
+    want = int(np.searchsorted(c, k, side="right"))
+    assert int(select_path(PROFILE.c, k)) == want
+
+
+def test_full_period_counts_exact():
+    """Over one full period every ball is selected exactly once, so path
+    counts equal b(i) EXACTLY — the deterministic guarantee."""
+    for method in (SprayMethod.PLAIN, SprayMethod.SHUFFLE_1, SprayMethod.SHUFFLE_2):
+        st_ = make_spray_state(PROFILE, method=method, sa=333, sb=735)
+        paths = spray_paths(st_, PROFILE, PROFILE.m)
+        counts = np.bincount(np.asarray(paths), minlength=PROFILE.n)
+        assert np.array_equal(counts, np.asarray(PROFILE.b)), method
+
+
+def test_memoryless():
+    """Path for counter j depends only on (j, seed, profile)."""
+    st0 = make_spray_state(PROFILE, sa=333, sb=735, j0=0)
+    st100 = make_spray_state(PROFILE, sa=333, sb=735, j0=100)
+    a = np.asarray(spray_paths(st0, PROFILE, 200))[100:]
+    b = np.asarray(spray_paths(st100, PROFILE, 100))
+    assert np.array_equal(a, b)
+
+
+def test_batch_matches_sequential():
+    st_ = make_spray_state(PROFILE, sa=1, sb=3)
+    paths_once = np.asarray(spray_paths(st_, PROFILE, 64))
+    got = []
+    s = st_
+    for _ in range(8):
+        p, _, s = spray_batch(s, PROFILE, 8)
+        got.append(np.asarray(p))
+    assert np.array_equal(np.concatenate(got), paths_once)
+
+
+def test_path_seq_numbers():
+    st_ = make_spray_state(PROFILE, sa=333, sb=735)
+    paths, seqs, st2 = spray_batch(st_, PROFILE, 512)
+    paths, seqs = np.asarray(paths), np.asarray(seqs)
+    for i in range(PROFILE.n):
+        mine = seqs[paths == i]
+        assert np.array_equal(mine, np.arange(len(mine))), i
+    assert np.array_equal(
+        np.asarray(st2.path_seq), np.bincount(paths, minlength=PROFILE.n)
+    )
+
+
+def test_empty_bins_never_selected():
+    prof = make_profile([0, 512, 0, 512, 0], 10)
+    st_ = make_spray_state(prof, sa=5, sb=9)
+    paths = np.asarray(spray_paths(st_, prof, prof.m))
+    assert set(paths.tolist()) == {1, 3}
+
+
+@given(
+    st.integers(0, 1023),
+    st.integers(0, 511).map(lambda x: 2 * x + 1),
+    st.sampled_from([SprayMethod.SHUFFLE_1, SprayMethod.SHUFFLE_2]),
+)
+def test_seeded_keys_are_permutations(sa, sb, method):
+    js = np.arange(1024, dtype=np.uint32)
+    keys = np.asarray(spray_key(js, np.uint32(sa), np.uint32(sb), 10, method))
+    assert sorted(keys.tolist()) == list(range(1024))
+
+
+def test_seed_validation():
+    with pytest.raises(ValueError):
+        make_spray_state(PROFILE, sa=0, sb=2)  # even sb
+    with pytest.raises(ValueError):
+        make_spray_state(PROFILE, sa=4096, sb=1)  # sa out of range
+
+
+def test_reseed():
+    st_ = make_spray_state(PROFILE, sa=1, sb=3)
+    st2 = reseed(st_, 2000, 4)
+    assert int(st2.sa) == 2000 % 1024
+    assert int(st2.sb) % 2 == 1
+
+
+def test_jit_compatible():
+    st_ = make_spray_state(PROFILE, sa=333, sb=735)
+    f = jax.jit(lambda s: spray_batch(s, PROFILE, 128))
+    p1, _, _ = f(st_)
+    p2 = spray_paths(st_, PROFILE, 128)
+    assert np.array_equal(np.asarray(p1), np.asarray(p2))

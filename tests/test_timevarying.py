@@ -1,0 +1,67 @@
+"""Time-varying profiles (paper §8): the worked example + optimality."""
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.core.timevarying import (
+    PathSpec,
+    Phase,
+    completion_time,
+    optimal_completion,
+    optimal_two_path_schedule,
+    static_profile_completion,
+)
+
+PATHS = [PathSpec(100.0, 100.0), PathSpec(10.0, 50.0)]
+
+
+def test_paper_static_numbers():
+    assert abs(static_profile_completion(10.0, PATHS, (1, 0)) - 200.0) < 1e-6
+    assert abs(static_profile_completion(10.0, PATHS, (0, 1)) - 210.0) < 1e-6
+    assert (
+        abs(static_profile_completion(10.0, PATHS, (2 / 3, 1 / 3)) - 500 / 3)
+        < 1e-3
+    )
+
+
+def test_paper_hybrid_schedule():
+    sched, t = optimal_two_path_schedule(10.0, PATHS)
+    assert abs(t - 410.0 / 3.0) < 1e-3      # 136.67ms (paper rounds to 137)
+    assert abs(sched[0].duration_ms - 110.0 / 3.0) < 1e-3  # ~36.7ms switch
+
+
+def test_hybrid_beats_best_static():
+    _, t = optimal_two_path_schedule(10.0, PATHS)
+    best_static = min(
+        static_profile_completion(10.0, PATHS, f)
+        for f in [(1, 0), (0, 1), (2 / 3, 1 / 3), (0.5, 0.5)]
+    )
+    assert t < best_static
+
+
+def test_fluid_bound_matches_two_path_optimum():
+    assert abs(optimal_completion(10.0, PATHS) - 410.0 / 3.0) < 1e-3
+
+
+@given(
+    st.floats(1.0, 200.0),  # latency 1
+    st.floats(1.0, 200.0),
+    st.floats(5.0, 200.0),  # bw 1
+    st.floats(5.0, 200.0),
+    st.floats(0.5, 50.0),   # message Mbit
+)
+def test_twophase_schedule_never_worse_than_static(l1, l2, b1, b2, mbit):
+    paths = [PathSpec(l1, b1), PathSpec(l2, b2)]
+    _, t = optimal_two_path_schedule(mbit, paths)
+    for f in [(1, 0), (0, 1)]:
+        assert t <= static_profile_completion(mbit, paths, f) + 1e-6
+    # and the fluid bound is a true lower bound
+    assert optimal_completion(mbit, paths) <= t + 1e-3
+
+
+def test_completion_raises_when_schedule_starves():
+    with np.errstate(all="ignore"):
+        try:
+            completion_time(10.0, PATHS, [Phase(1.0, (1, 0))])
+            assert False, "should have raised"
+        except ValueError:
+            pass
