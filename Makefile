@@ -1,0 +1,19 @@
+# Tier-1 verification + smoke benchmarks.
+#   make check   - full tier-1 pytest + benchmark smoke pass
+#   make test    - tier-1 pytest only
+#   make bench   - full benchmark pass (CSV to stdout)
+PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+export PYTHONPATH
+
+.PHONY: check test bench bench-smoke
+
+test:
+	python -m pytest -x -q
+
+bench-smoke:
+	python -m benchmarks.run --smoke --json BENCH_smoke.json
+
+bench:
+	python -m benchmarks.run
+
+check: test bench-smoke

@@ -1,12 +1,28 @@
-"""Benchmark utilities: timing + CSV emission (name,us_per_call,derived)."""
+"""Benchmark utilities: timing + CSV emission (name,us_per_call,derived).
+
+Rows printed through `emit` are also recorded in `RESULTS` so `run.py
+--json PATH` can dump the whole run as a BENCH_*.json-compatible dict.
+`SMOKE` (set by `run.py --smoke`) asks benchmarks for a fast, small-shape
+pass — CI-sized sanity numbers rather than paper-sized tables.
+"""
 from __future__ import annotations
 
 import time
-from typing import Callable
+from typing import Callable, Dict, List
 
 import jax
 
-__all__ = ["timeit", "emit"]
+__all__ = ["timeit", "emit", "RESULTS", "SMOKE", "set_smoke"]
+
+# (name, us_per_call, derived) rows accumulated across sections this process
+RESULTS: List[Dict[str, object]] = []
+
+SMOKE = False
+
+
+def set_smoke(value: bool) -> None:
+    global SMOKE
+    SMOKE = value
 
 
 def timeit(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
@@ -25,4 +41,7 @@ def timeit(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    RESULTS.append(
+        {"name": name, "us_per_call": round(us_per_call, 2), "derived": derived}
+    )
     print(f"{name},{us_per_call:.2f},{derived}")

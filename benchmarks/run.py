@@ -1,42 +1,88 @@
 """Benchmark harness: one module per paper table/claim.
-Prints ``name,us_per_call,derived`` CSV (plus section separators)."""
+Prints ``name,us_per_call,derived`` CSV (plus section separators).
+
+Flags:
+  --smoke       fast small-shape pass (CI sanity, not paper-sized tables)
+  --json PATH   also write results as a BENCH_*.json-compatible dict
+  --only NAME   run a single section (substring match)
+"""
 from __future__ import annotations
 
+import argparse
+import json
+import platform
 import sys
 import time
 
-from benchmarks import (
-    bench_arch_ettr,
-    bench_cct,
-    bench_deviation,
-    bench_example_discrepancy,
-    bench_fountain,
-    bench_roofline,
-    bench_sprayed_collective,
-    bench_spray_throughput,
-    bench_timevarying,
-)
+import importlib
 
-SECTIONS = [
-    ("sec9_deviation_bounds", bench_deviation.main),
-    ("sec4_worked_example", bench_example_discrepancy.main),
-    ("sec8_time_varying", bench_timevarying.main),
-    ("sec12_cct_ettr", bench_cct.main),
-    ("spray_throughput", bench_spray_throughput.main),
-    ("sprayed_collective_tpu", bench_sprayed_collective.main),
-    ("fountain_transport", bench_fountain.main),
-    ("arch_ettr_crosslayer", bench_arch_ettr.main),
-    ("roofline_table", bench_roofline.main),
+from benchmarks import common
+
+# (section, module) — modules import lazily and defensively: a section whose
+# dependencies are absent (e.g. repro.dist in the seed image) is reported
+# and skipped instead of killing the whole run.
+SECTION_MODULES = [
+    ("sec9_deviation_bounds", "bench_deviation"),
+    ("sec4_worked_example", "bench_example_discrepancy"),
+    ("sec8_time_varying", "bench_timevarying"),
+    ("sec12_cct_ettr", "bench_cct"),
+    ("topology_scenarios", "bench_topology"),
+    ("spray_throughput", "bench_spray_throughput"),
+    ("sprayed_collective_tpu", "bench_sprayed_collective"),
+    ("fountain_transport", "bench_fountain"),
+    ("arch_ettr_crosslayer", "bench_arch_ettr"),
+    ("roofline_table", "bench_roofline"),
 ]
 
 
-def main() -> None:
+def _load_sections(only=None):
+    sections = []
+    for name, mod in SECTION_MODULES:
+        if only is not None and only not in name:
+            continue
+        try:
+            sections.append(
+                (name, importlib.import_module(f"benchmarks.{mod}").main)
+            )
+        except ImportError as e:
+            print(f"# skipping {name}: {e}", file=sys.stderr)
+    return sections
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="fast small-shape pass")
+    ap.add_argument("--json", metavar="PATH", help="write results dict to PATH")
+    ap.add_argument("--only", metavar="NAME", help="run sections matching NAME")
+    args = ap.parse_args(argv)
+    common.set_smoke(args.smoke)
+
+    sections = _load_sections(args.only)
+    if not sections:
+        raise SystemExit(f"no section matches --only {args.only!r}")
+
     print("name,us_per_call,derived")
-    for name, fn in SECTIONS:
+    timings = {}
+    for name, fn in sections:
         print(f"# === {name} ===", file=sys.stderr)
         t0 = time.time()
         fn()
-        print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+        timings[name] = round(time.time() - t0, 1)
+        print(f"# {name} done in {timings[name]:.1f}s", file=sys.stderr)
+
+    if args.json:
+        payload = {
+            "meta": {
+                "smoke": args.smoke,
+                "sections": timings,
+                "python": platform.python_version(),
+                "platform": platform.platform(),
+            },
+            "results": common.RESULTS,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"# wrote {len(common.RESULTS)} rows to {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -1,14 +1,37 @@
-"""Multipath network substrate: fabric model, transports, collectives, coding."""
+"""Multipath network substrate: fabric model, shared leaf-spine topology,
+transports, collectives, scenario library, coding."""
 from repro.net.fabric import FabricParams, FabricState, fabric_tick, init_fabric
-from repro.net.transport import Policy, SimResult, TransportConfig, simulate_message
+from repro.net.topology import (
+    EventSchedule,
+    SharedFabricState,
+    TopologyParams,
+    init_shared_fabric,
+    leaf_spine,
+    null_schedule,
+    shared_fabric_tick,
+    single_flow_stepper,
+)
+from repro.net.transport import (
+    Policy,
+    SimResult,
+    TransportConfig,
+    simulate_flows,
+    simulate_message,
+    simulate_message_on,
+)
 from repro.net.collectives import (
     CollectiveConfig,
     allgather_cct,
+    allgather_cct_shared,
     allreduce_cct,
+    allreduce_cct_shared,
     ettr,
     ideal_step_ticks,
+    ring_topology,
     step_cct,
+    step_cct_shared,
 )
+from repro.net.scenarios import SCENARIOS
 from repro.net.fountain import (
     decode_overhead_curve,
     encode,

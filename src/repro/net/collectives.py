@@ -10,6 +10,12 @@ simulated in one vectorized pass (workers = lead dim of the fabric state).
   CCT(allreduce) = sum over 2(W-1) steps of max-over-workers step time
   CCT(allgather) = sum over (W-1) steps of the same
 
+The `_shared` variants run the same ring schedules on the shared leaf–spine
+fabric (`repro.net.topology`): each worker lives on its own leaf and always
+sends to its ring neighbor, so all W shard transfers of a step contend for
+the same spine links — stragglers and hotspots now propagate between
+workers instead of being independent draws.
+
 ETTR (effective training time ratio) for a training job with per-iteration
 compute time C:  ETTR = sum_i (C + CCT_ideal) / sum_i (C + CCT_i), where
 CCT_ideal is the no-degradation, perfectly-balanced fluid bound.
@@ -25,13 +31,23 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.net.fabric import FabricParams
-from repro.net.transport import Policy, TransportConfig, simulate_message
+from repro.net.topology import EventSchedule, TopologyParams, leaf_spine
+from repro.net.transport import (
+    Policy,
+    TransportConfig,
+    simulate_flows,
+    simulate_message,
+)
 
 __all__ = [
     "CollectiveConfig",
     "step_cct",
     "allreduce_cct",
     "allgather_cct",
+    "ring_topology",
+    "step_cct_shared",
+    "allreduce_cct_shared",
+    "allgather_cct_shared",
     "ideal_step_ticks",
     "ettr",
 ]
@@ -120,3 +136,65 @@ def ettr(
     total = np.sum(compute_ticks + ccts)
     ideal = len(ccts) * (compute_ticks + ideal_cct)
     return float(ideal / total)
+
+
+def ring_topology(workers: int, n_spines: int = 4, **kw) -> TopologyParams:
+    """Leaf-spine placement for a ring collective: worker w on leaf w always
+    sends its shard to leaf (w+1) % workers — one coupled flow per worker."""
+    return leaf_spine(
+        workers, n_spines, [(w, (w + 1) % workers) for w in range(workers)], **kw
+    )
+
+
+def step_cct_shared(
+    topo: TopologyParams,
+    sched: EventSchedule,
+    tcfg: TransportConfig,
+    cfg: CollectiveConfig,
+    key: jax.Array,
+) -> jax.Array:
+    """Barrier time of one ring step with all workers contending on the
+    shared fabric = max over the coupled flows' completion times."""
+    return jnp.max(
+        simulate_flows(
+            topo, sched, tcfg, cfg.shard_packets, key, horizon=cfg.horizon
+        ).cct
+    )
+
+
+def _ring_cct_shared(topo, sched, tcfg, cfg, key, steps):
+    keys = jax.random.split(key, steps)
+    per_step = jnp.stack(
+        [step_cct_shared(topo, sched, tcfg, cfg, keys[s]) for s in range(steps)]
+    )
+    return jnp.sum(per_step), per_step
+
+
+def allreduce_cct_shared(
+    topo: TopologyParams,
+    sched: EventSchedule,
+    tcfg: TransportConfig,
+    cfg: CollectiveConfig,
+    key: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    """(total CCT, per-step barriers) for a ring all-reduce whose workers
+    share the fabric.  `topo` should come from `ring_topology(cfg.workers)`."""
+    if topo.flows != cfg.workers:
+        raise ValueError(
+            f"topology has {topo.flows} flows but cfg.workers={cfg.workers}"
+        )
+    return _ring_cct_shared(topo, sched, tcfg, cfg, key, 2 * (cfg.workers - 1))
+
+
+def allgather_cct_shared(
+    topo: TopologyParams,
+    sched: EventSchedule,
+    tcfg: TransportConfig,
+    cfg: CollectiveConfig,
+    key: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    if topo.flows != cfg.workers:
+        raise ValueError(
+            f"topology has {topo.flows} flows but cfg.workers={cfg.workers}"
+        )
+    return _ring_cct_shared(topo, sched, tcfg, cfg, key, cfg.workers - 1)

@@ -109,7 +109,9 @@ def fabric_tick(
     served = jnp.minimum(q_in, cap)
     queue = q_in - served
     qdelay = jnp.where(cap > 0, queue / jnp.maximum(cap, 1e-6), 0.0)
-    delay = params.latency + qdelay.astype(jnp.int32)
+    # round, don't floor: truncation would report zero delay for any sub-tick
+    # backlog, hiding early congestion from the delayed-feedback RTT signal
+    delay = params.latency + jnp.round(qdelay).astype(jnp.int32)
     delay = jnp.minimum(delay, params.ring_len - 1)
     slot = (t + 1 + delay) % params.ring_len  # [..., n]
     arrive_ring = state.arrive_ring

@@ -1,0 +1,223 @@
+"""Scenario library for the shared leaf–spine fabric.
+
+Each constructor returns ``(TopologyParams, EventSchedule)`` — a topology
+plus a deterministic per-tick event schedule — ready for
+`transport.simulate_flows` / `collectives.allreduce_cct_shared` and the
+batched sweeps in `benchmarks/bench_topology.py`.  These are the contention
+patterns the paper's evaluation space implies but the seed's independent
+path bundles cannot express:
+
+  * incast(k)               — k senders converge on one destination leaf;
+                              the spine->leaf downlinks are the shared choke.
+  * oversubscription(ratio) — spine layer provisioned at 1/ratio of the
+                              aggregate host demand; steady-state contention.
+  * link_flap(...)          — one spine's links flap on a duty cycle (flaky
+                              transceiver): paths die and return repeatedly.
+  * straggler_worker(...)   — one worker's uplinks run at a fraction of
+                              nominal capacity for the whole run.
+  * pfc_storm(...)          — a pause storm freezes a downlink, then spreads
+                              upstream through the spine before clearing.
+  * crossjob_background(...)— bursty on/off traffic from a co-located job
+                              injected straight onto a subset of links.
+
+All schedules are host-built numpy (cheap, done once) and deterministic
+given their arguments — scenario draws differ only through the PRNG key
+passed to the simulation, so sweeps vmap over keys with one compiled step.
+`SCENARIOS` maps name -> zero-config constructor for registry-style use.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.net.topology import (
+    EventSchedule,
+    TopologyParams,
+    downlink_id,
+    leaf_spine,
+    null_schedule,
+    uplink_id,
+)
+
+__all__ = [
+    "incast",
+    "oversubscription",
+    "link_flap",
+    "straggler_worker",
+    "pfc_storm",
+    "crossjob_background",
+    "SCENARIOS",
+]
+
+Scenario = Tuple[TopologyParams, EventSchedule]
+
+
+def _schedule(cap_scale: np.ndarray, bg: np.ndarray) -> EventSchedule:
+    if cap_scale.shape != bg.shape:
+        raise ValueError(f"schedule shape mismatch: {cap_scale.shape} vs {bg.shape}")
+    return EventSchedule(
+        cap_scale=jnp.asarray(cap_scale, jnp.float32),
+        bg_arrivals=jnp.asarray(bg, jnp.float32),
+    )
+
+
+def incast(
+    k: int = 8,
+    n_spines: int = 4,
+    *,
+    link_capacity: float = 8.0,
+    **kw,
+) -> Scenario:
+    """k flows from k distinct leaves all target leaf 0: every flow's paths
+    share the n_spines downlinks into the destination leaf.  ECMP collisions
+    double up on a downlink while spraying spreads the k*rate aggregate
+    evenly — the canonical many-to-one pattern."""
+    pairs = [(src + 1, 0) for src in range(k)]
+    topo = leaf_spine(
+        k + 1, n_spines, pairs, uplink_capacity=link_capacity, **kw
+    )
+    return topo, null_schedule(topo.links)
+
+
+def oversubscription(
+    ratio: float = 4.0,
+    flows: int = 8,
+    n_spines: int = 4,
+    *,
+    host_rate: float = 32.0,
+    **kw,
+) -> Scenario:
+    """Disjoint leaf pairs, but the spine layer only carries 1/ratio of the
+    aggregate host demand (host_rate per flow): steady-state queueing on
+    every path rather than a localized hotspot."""
+    pairs = [(2 * f, 2 * f + 1) for f in range(flows)]
+    cap = host_rate / (ratio * n_spines)
+    topo = leaf_spine(2 * flows, n_spines, pairs, uplink_capacity=cap, **kw)
+    return topo, null_schedule(topo.links)
+
+
+def link_flap(
+    flows: int = 4,
+    n_spines: int = 4,
+    *,
+    period: int = 128,
+    duty: float = 0.5,
+    spine: int = 0,
+    horizon: int = 2048,
+    link_capacity: float = 8.0,
+    **kw,
+) -> Scenario:
+    """Spine `spine` flaps: all its links lose capacity for `duty` of every
+    `period` ticks — the mole that keeps returning to the same hole."""
+    pairs = [(2 * f, 2 * f + 1) for f in range(flows)]
+    n_leaves = 2 * flows
+    topo = leaf_spine(n_leaves, n_spines, pairs, uplink_capacity=link_capacity, **kw)
+    cap = np.ones((horizon, topo.links), np.float32)
+    down_phase = (np.arange(horizon) % period) < duty * period
+    for leaf in range(n_leaves):
+        cap[down_phase, uplink_id(leaf, spine, n_leaves, n_spines)] = 0.0
+        cap[down_phase, downlink_id(spine, leaf, n_leaves, n_spines)] = 0.0
+    return topo, _schedule(cap, np.zeros_like(cap))
+
+
+def straggler_worker(
+    workers: int = 4,
+    n_spines: int = 4,
+    *,
+    factor: float = 0.25,
+    straggler: int = 0,
+    link_capacity: float = 8.0,
+    **kw,
+) -> Scenario:
+    """Ring of `workers` flows (worker w on leaf w sends to leaf (w+1) % W);
+    the straggler's uplinks run at `factor` of nominal for the whole run, so
+    its sends throttle every synchronous barrier."""
+    pairs = [(w, (w + 1) % workers) for w in range(workers)]
+    topo = leaf_spine(workers, n_spines, pairs, uplink_capacity=link_capacity, **kw)
+    cap = np.ones((1, topo.links), np.float32)
+    for s in range(n_spines):
+        cap[0, uplink_id(straggler, s, workers, n_spines)] = factor
+    return topo, _schedule(cap, np.zeros((1, topo.links), np.float32))
+
+
+def pfc_storm(
+    flows: int = 4,
+    n_spines: int = 4,
+    *,
+    start: int = 48,
+    spread: int = 32,
+    duration: int = 384,
+    horizon: int = 2048,
+    link_capacity: float = 8.0,
+    **kw,
+) -> Scenario:
+    """Priority-flow-control pause storm: the downlink spine0 -> leaf 1
+    freezes at `start`; every `spread` ticks the pause propagates upstream —
+    first all uplinks into spine 0, then spine 0's remaining downlinks —
+    until everything clears at `start + duration` (head-of-line blocking
+    cascading through the fabric, cf. the PFC storms PRIME guards against)."""
+    pairs = [(2 * f, 2 * f + 1) for f in range(flows)]
+    n_leaves = 2 * flows
+    topo = leaf_spine(n_leaves, n_spines, pairs, uplink_capacity=link_capacity, **kw)
+    cap = np.ones((horizon, topo.links), np.float32)
+    t = np.arange(horizon)
+    end = start + duration
+    waves = [
+        [downlink_id(0, 1, n_leaves, n_spines)],
+        [uplink_id(leaf, 0, n_leaves, n_spines) for leaf in range(n_leaves)],
+        [
+            downlink_id(0, leaf, n_leaves, n_spines)
+            for leaf in range(n_leaves)
+            if leaf != 1
+        ],
+    ]
+    for wave, links in enumerate(waves):
+        active = (t >= start + wave * spread) & (t < end)
+        for link in links:
+            cap[active, link] = 0.0
+    return topo, _schedule(cap, np.zeros_like(cap))
+
+
+def crossjob_background(
+    flows: int = 4,
+    n_spines: int = 4,
+    *,
+    load: float = 0.6,
+    burst_len: int = 64,
+    gap_len: int = 64,
+    horizon: int = 2048,
+    seed: int = 0,
+    link_capacity: float = 8.0,
+    **kw,
+) -> Scenario:
+    """A co-located job's traffic, not under our control, injected straight
+    onto half the spine links as on/off bursts at `load` * capacity with
+    randomized phases (deterministic given `seed`)."""
+    pairs = [(2 * f, 2 * f + 1) for f in range(flows)]
+    topo = leaf_spine(2 * flows, n_spines, pairs, uplink_capacity=link_capacity, **kw)
+    rng = np.random.default_rng(seed)
+    L = topo.links
+    hit = rng.permutation(L)[: L // 2]
+    bg = np.zeros((horizon, L), np.float32)
+    t = np.arange(horizon)
+    cycle = burst_len + gap_len
+    cap_np = np.asarray(topo.capacity)
+    for link in hit:
+        phase = int(rng.integers(cycle))
+        on = ((t + phase) % cycle) < burst_len
+        bg[on, link] = load * cap_np[link]
+    return topo, _schedule(np.ones((horizon, L), np.float32), bg)
+
+
+# name -> default-args constructor (callers override via functools.partial
+# or by calling the constructor directly with kwargs)
+SCENARIOS: Dict[str, callable] = {
+    "incast": incast,
+    "oversubscription": oversubscription,
+    "link_flap": link_flap,
+    "straggler_worker": straggler_worker,
+    "pfc_storm": pfc_storm,
+    "crossjob_background": crossjob_background,
+}

@@ -19,6 +19,15 @@ Reliability modes:
 
 `simulate_message` scans a fixed horizon and reports the first completion
 tick (inf-like sentinel if the horizon was insufficient).
+
+The scan body is generic over a *fabric stepper* — any callable
+``(state, arrivals[n], key) -> (state', feedback)`` honouring the
+`fabric_tick` feedback contract (per-path sent/marked/dropped/qdelay plus
+landed).  `simulate_message` binds the independent-bundle `fabric_tick`;
+`simulate_message_on` accepts an arbitrary stepper (e.g. a single flow of
+the shared leaf–spine fabric in `repro.net.topology`), and
+`simulate_flows` runs F *coupled* flows in lockstep on one shared fabric —
+the contention case the independent bundles cannot express.
 """
 from __future__ import annotations
 
@@ -34,8 +43,21 @@ from repro.core.feedback import ControllerState, PathStats, controller_step, mak
 from repro.core.profile import PathProfile, uniform_profile
 from repro.core.spray import SprayMethod, SprayState, make_spray_state, spray_key, select_path
 from repro.net.fabric import FabricParams, FabricState, fabric_tick, init_fabric
+from repro.net.topology import (
+    EventSchedule,
+    TopologyParams,
+    init_shared_fabric,
+    shared_fabric_tick,
+)
 
-__all__ = ["Policy", "TransportConfig", "simulate_message", "SimResult"]
+__all__ = [
+    "Policy",
+    "TransportConfig",
+    "simulate_message",
+    "simulate_message_on",
+    "simulate_flows",
+    "SimResult",
+]
 
 
 class Policy(enum.IntEnum):
@@ -109,16 +131,32 @@ def _assign_paths(
     return arrivals, spray
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "n_packets", "horizon"))
-def simulate_message(
-    params: FabricParams,
+def simulate_message_on(
+    fabric0,
+    stepper,
+    latency: jax.Array,
     cfg: TransportConfig,
     n_packets: int,
     key: jax.Array,
     horizon: int = 4096,
+    *,
+    received_fn=None,
+    dropped_fn=None,
 ) -> SimResult:
-    """Single-flow message transfer; returns completion statistics."""
-    n = params.n
+    """Single-flow message transfer over an arbitrary fabric stepper.
+
+    `stepper(state, arrivals[n], key) -> (state', fb)` must honour the
+    `fabric_tick` feedback contract; `fabric0` is its initial state.
+    `received_fn` / `dropped_fn` read the cumulative delivered scalar and
+    per-path drop vector out of the (otherwise opaque) fabric state —
+    defaults match `FabricState`; shared-fabric adapters override them.
+    Not jitted itself: call from a jitted wrapper with static cfg/sizes.
+    """
+    n = int(latency.shape[-1])
+    if received_fn is None:
+        received_fn = lambda s: s.received  # noqa: E731
+    if dropped_fn is None:
+        dropped_fn = lambda s: s.dropped  # noqa: E731
     need = (
         int(n_packets * (1.0 + cfg.code_overhead)) + 1
         if cfg.coded
@@ -133,7 +171,6 @@ def simulate_message(
     )
     k_hash, k_loop = jax.random.split(key)
     ecmp_path = jax.random.randint(k_hash, (), 0, n, jnp.int32)
-    fabric0 = init_fabric(params)
 
     adaptive = cfg.policy in (Policy.RAND_ADAPTIVE, Policy.WAM)
 
@@ -165,7 +202,7 @@ def simulate_message(
             cfg, n, spray, ctrl.profile, k_emit, ka, ecmp_path
         )
         sent_pp = sent_pp + arrivals
-        fabric, fb = fabric_tick(params, fabric, arrivals, kb)
+        fabric, fb = stepper(fabric, arrivals, kb)
 
         # --- retransmission debt (uncoded): NACKed drops re-enter the stream
         new_debt = debt + jnp.sum(fb["dropped"]) - (
@@ -180,7 +217,7 @@ def simulate_message(
             stats = PathStats(
                 ecn_rate=fb["marked"] / sent * jnp.minimum(fb["sent"], 1.0),
                 loss_rate=fb["dropped"] / sent * jnp.minimum(fb["sent"], 1.0),
-                rtt=params.latency.astype(jnp.float32) + fb["qdelay"],
+                rtt=latency.astype(jnp.float32) + fb["qdelay"],
             )
 
             def do_ctrl(c):
@@ -195,7 +232,7 @@ def simulate_message(
             known[0] + jnp.sum(fb["landed"]),
             known[1] + jnp.sum(fb["dropped"]),
         )
-        done_now = (fabric.received >= need) & (done_at < 0)
+        done_now = (received_fn(fabric) >= need) & (done_at < 0)
         done_at = jnp.where(done_now, t.astype(jnp.int32) + 1, done_at)
         return (
             fabric, ctrl, spray, sent_sched, new_debt, done_at, sent_pp, known
@@ -210,6 +247,168 @@ def simulate_message(
         jnp.int32(-1),
         jnp.zeros((n,), jnp.float32),
         (jnp.float32(0.0), jnp.float32(0.0)),
+    )
+    (fabric, ctrl, _, _, _, done_at, sent_pp, _), _ = jax.lax.scan(
+        tick, carry0, jnp.arange(horizon)
+    )
+    cct = jnp.where(done_at >= 0, done_at.astype(jnp.float32), float(horizon))
+    return SimResult(
+        cct=cct,
+        sent_total=sent_pp,
+        dropped_total=dropped_fn(fabric),
+        final_b=ctrl.profile.b,
+        received=received_fn(fabric),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "n_packets", "horizon"))
+def simulate_message(
+    params: FabricParams,
+    cfg: TransportConfig,
+    n_packets: int,
+    key: jax.Array,
+    horizon: int = 4096,
+) -> SimResult:
+    """Single-flow message transfer on the independent-bundle fabric."""
+    return simulate_message_on(
+        init_fabric(params),
+        functools.partial(fabric_tick, params),
+        params.latency,
+        cfg,
+        n_packets,
+        key,
+        horizon,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "n_packets", "horizon"))
+def simulate_flows(
+    topo: TopologyParams,
+    sched: EventSchedule,
+    cfg: TransportConfig,
+    n_packets: int,
+    key: jax.Array,
+    horizon: int = 4096,
+) -> SimResult:
+    """F coupled flows, one `n_packets` message each, on one shared fabric.
+
+    Every sender runs the seed's per-tick logic (emit -> spray -> delayed
+    feedback -> profile controller), vmapped over flows, but all arrivals
+    feed the SAME `shared_fabric_tick` — so one flow's burst raises the
+    queues every other flow crossing the link sees.  Flows decorrelate their
+    spray seeds (paper §4: per-source (sa, sb)); flow 0 keeps `cfg.seed`.
+
+    Returns a SimResult with a leading F axis on every field (`cct[F]`,
+    `sent_total[F, n]`, ...).
+
+    NOTE: the tick body below mirrors `simulate_message_on`'s with an added
+    flow axis.  It is kept as a separate copy on purpose — the single-flow
+    scan must stay bit-identical to the seed trace (acceptance contract),
+    which a shared vmapped body would put at risk.  Fixes to the emit /
+    debt / controller logic must be applied to BOTH.
+    """
+    F, n = topo.flows, topo.n
+    need = (
+        int(n_packets * (1.0 + cfg.code_overhead)) + 1
+        if cfg.coded
+        else n_packets
+    )
+    need = need - 0.25  # fluid-model float residue guard
+    m = 1 << cfg.ell
+    profile0 = uniform_profile(n, cfg.ell)
+    ctrl0 = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (F,) + x.shape),
+        make_controller(profile0),
+    )
+    fidx = jnp.arange(F, dtype=jnp.uint32)
+    mask = jnp.uint32(m - 1)
+    spray0 = SprayState(
+        j=jnp.zeros((F,), jnp.uint32),
+        sa=(jnp.uint32(cfg.seed[0]) + fidx * jnp.uint32(0x9E3779B9)) & mask,
+        sb=((jnp.uint32(cfg.seed[1]) + 2 * fidx) & mask) | jnp.uint32(1),
+        path_seq=jnp.zeros((F, n), jnp.int32),
+        ell=cfg.ell,
+        method=int(cfg.method),
+    )
+    k_hash, k_loop = jax.random.split(key)
+    ecmp_path = jax.random.randint(k_hash, (F,), 0, n, jnp.int32)
+    fabric0 = init_shared_fabric(topo)
+
+    adaptive = cfg.policy in (Policy.RAND_ADAPTIVE, Policy.WAM)
+    assign = jax.vmap(functools.partial(_assign_paths, cfg, n))
+    latency_f = topo.latency.astype(jnp.float32)
+
+    def tick(carry, tk):
+        (fabric, ctrl, spray, sent_sched, debt, done_at, sent_pp, known) = carry
+        t = fabric.t
+        key_t = jax.random.fold_in(k_loop, t)
+        ka, kb = jax.random.split(key_t)
+
+        if cfg.coded:
+            k_emit = jnp.where(done_at >= 0, 0, cfg.rate).astype(jnp.int32)
+        else:
+            outstanding = jnp.maximum(n_packets - sent_sched, 0.0) + debt
+            known_delivered, known_dropped = known
+            in_flight = (
+                jnp.sum(sent_pp, axis=-1) - known_delivered - known_dropped
+            )
+            room = jnp.maximum(cfg.cwnd - in_flight, 0.0)
+            k_emit = jnp.ceil(
+                jnp.minimum(jnp.minimum(outstanding, room), float(cfg.rate))
+            ).astype(jnp.int32)
+
+        arrivals, spray = assign(
+            spray, ctrl.profile, k_emit, jax.random.split(ka, F), ecmp_path
+        )
+        sent_pp = sent_pp + arrivals
+        fabric, fb = shared_fabric_tick(topo, sched, fabric, arrivals, kb)
+
+        new_debt = debt + jnp.sum(fb["dropped"], axis=-1) - (
+            jnp.maximum(
+                k_emit - jnp.maximum(n_packets - sent_sched, 0.0), 0.0
+            )
+        )
+        new_debt = jnp.maximum(new_debt, 0.0)
+        sent_sched = sent_sched + k_emit
+
+        if adaptive:
+            sent = jnp.maximum(fb["sent"], 1e-6)
+            stats = PathStats(
+                ecn_rate=fb["marked"] / sent * jnp.minimum(fb["sent"], 1.0),
+                loss_rate=fb["dropped"] / sent * jnp.minimum(fb["sent"], 1.0),
+                rtt=latency_f + fb["qdelay"],
+            )
+
+            def do_ctrl(c):
+                def one(ci, si):
+                    c2, _ = controller_step(ci, si)
+                    return c2
+
+                return jax.vmap(one)(c, stats)
+
+            ctrl = jax.lax.cond(
+                (t % cfg.ctrl_interval) == 0, do_ctrl, lambda c: c, ctrl
+            )
+
+        known = (
+            known[0] + fb["landed"],
+            known[1] + jnp.sum(fb["dropped"], axis=-1),
+        )
+        done_now = (fabric.received >= need) & (done_at < 0)
+        done_at = jnp.where(done_now, t.astype(jnp.int32) + 1, done_at)
+        return (
+            fabric, ctrl, spray, sent_sched, new_debt, done_at, sent_pp, known
+        ), None
+
+    carry0 = (
+        fabric0,
+        ctrl0,
+        spray0,
+        jnp.zeros((F,), jnp.float32),
+        jnp.zeros((F,), jnp.float32),
+        jnp.full((F,), -1, jnp.int32),
+        jnp.zeros((F, n), jnp.float32),
+        (jnp.zeros((F,), jnp.float32), jnp.zeros((F,), jnp.float32)),
     )
     (fabric, ctrl, _, _, _, done_at, sent_pp, _), _ = jax.lax.scan(
         tick, carry0, jnp.arange(horizon)

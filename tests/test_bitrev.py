@@ -1,5 +1,8 @@
 """theta(j, ell) — bit-reversal unit + property tests."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, strategies as st
 
 from repro.core.bitrev import bit_reverse32, theta

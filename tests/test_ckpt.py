@@ -74,6 +74,7 @@ def test_checksum_verification(tmp_path):
 def test_resume_training_state(tmp_path):
     """Fault-tolerance: save mid-run, restore, training continues bit-exact
     (deterministic data pipeline needs no data-state checkpoint)."""
+    pytest.importorskip("repro.dist")  # seed ships without repro.dist
     from repro.configs.registry import get_smoke_config
     from repro.data.pipeline import SyntheticLM, host_batch
     from repro.models import model as M
@@ -103,6 +104,7 @@ def test_elastic_restore_to_sharded_mesh(tmp_path):
     """Fault tolerance at scale: a checkpoint written on ONE topology is
     restorable onto a DIFFERENT mesh with sharded placement (the elastic
     restart path: pod count changed, params re-placed shard-by-shard)."""
+    pytest.importorskip("repro.dist")  # seed ships without repro.dist
     import subprocess, sys, textwrap
 
     t = {

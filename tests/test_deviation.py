@@ -1,5 +1,8 @@
 """Spray deviation bounds (paper §9, Lemmas 1-7)."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.deviation import (

@@ -10,6 +10,8 @@ import pytest
 
 SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
 
+pytest.importorskip("repro.dist")  # seed ships without repro.dist
+
 
 def _run(code: str):
     env = {

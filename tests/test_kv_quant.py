@@ -1,4 +1,9 @@
 """int8 KV-cache quantization: serving numerics + roundtrip."""
+import pytest
+
+pytest.importorskip(
+    "repro.dist", reason="seed ships without the repro.dist sharding package"
+)
 import dataclasses
 
 import jax

@@ -1,6 +1,7 @@
 """Discrete path profiles: quantization + representations (paper §3)."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, strategies as st
 
 from repro.core.profile import (

@@ -1,4 +1,9 @@
 """SSM/recurrent block units: chunked_scan identity, decode==train step."""
+import pytest
+
+pytest.importorskip(
+    "repro.dist", reason="seed ships without the repro.dist sharding package"
+)
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -1,5 +1,8 @@
 """Time-varying profiles (paper §8): the worked example + optimality."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, strategies as st
 
 from repro.core.timevarying import (

@@ -1,4 +1,9 @@
 """Training substrate: optimizers, microbatching, schedule, data pipeline."""
+import pytest
+
+pytest.importorskip(
+    "repro.dist", reason="seed ships without the repro.dist sharding package"
+)
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -1,6 +1,9 @@
 """Profile update embodiments 1-4 (paper §7): vectorized == paper pseudocode."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, strategies as st
 
 from repro.core.profile import quantize_profile
