@@ -3,6 +3,12 @@
 Two regimes x five policies x two reliability modes, plus a ring-allreduce
 ETTR table — the quantitative form of "host-based packet spraying with
 erasure-coded recovery ... consistently achieve[s] near-optimal CCT".
+
+The policy grid rides the unified sender engine: per (scenario,
+reliability) cell `sender.sweep_message` runs all five policies x all
+seeds as ONE compiled computation (policy is a traced `lax.switch` index),
+replacing the historical one-XLA-program-per-(policy, seed-loop) idiom.
+Compile accounting is emitted into the bench JSON.
 """
 from __future__ import annotations
 
@@ -12,7 +18,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks import common
+from benchmarks.common import aot_compile, emit, timed_call
 from repro.net import (
     CollectiveConfig,
     FabricParams,
@@ -20,11 +27,19 @@ from repro.net import (
     allreduce_cct,
     ettr,
     ideal_step_ticks,
-    simulate_message,
 )
+from repro.net.sender import SenderSpec, policy_sweep_params, sweep_message
 from repro.net.transport import Policy
 
-SEEDS = range(8)
+POLICIES = (
+    Policy.ECMP,
+    Policy.RR,
+    Policy.RAND_STATIC,
+    Policy.RAND_ADAPTIVE,
+    Policy.WAM,
+)
+
+RATE = 48
 
 
 def _params(degrade_p, recover_p, factor=0.05, n=8):
@@ -48,34 +63,49 @@ SCENARIOS = {
 
 
 def main() -> None:
-    fluid = 4096 * 1.05 / 48 + 4
+    smoke = common.SMOKE
+    n_packets = 512 if smoke else 4096
+    horizon = 1024 if smoke else 8192
+    n_seeds = 4 if smoke else 8
+    fluid = n_packets * 1.05 / RATE + 4
+    keys = jnp.stack([jax.random.PRNGKey(1000 + s) for s in range(n_seeds)])
+    sp = policy_sweep_params(POLICIES, rate=RATE)
+
     for scen, params in SCENARIOS.items():
-        for pol in (Policy.ECMP, Policy.RR, Policy.RAND_STATIC,
-                    Policy.RAND_ADAPTIVE, Policy.WAM):
-            for coded in (True, False):
-                cfg = TransportConfig(policy=pol, coded=coded, rate=48)
-                t0 = time.perf_counter()
-                ccts = np.array([
-                    float(simulate_message(
-                        params, cfg, 4096, jax.random.PRNGKey(1000 + s), 8192
-                    ).cct)
-                    for s in SEEDS
-                ])
-                us = (time.perf_counter() - t0) * 1e6 / len(ccts)
-                rel = "coded" if coded else "arq"
+        for coded in (True, False):
+            rel = "coded" if coded else "arq"
+            spec = SenderSpec(coded=coded, rate_cap=RATE)
+            compiled, compile_s = aot_compile(
+                sweep_message, params, spec, sp, n_packets, keys,
+                horizon=horizon,
+            )
+            r, run_s = timed_call(compiled, params, sp, keys)
+            ccts = np.asarray(r.cct)  # [policies, seeds]
+            for pi, pol in enumerate(POLICIES):
+                row = ccts[pi]
                 emit(
                     f"cct/{scen}/{pol.name}/{rel}",
-                    us,
-                    f"mean={ccts.mean():.1f};p95={np.percentile(ccts, 95):.1f}"
-                    f";max={ccts.max():.1f};vs_fluid={ccts.mean() / fluid:.2f}",
+                    run_s * 1e6 / ccts.size,
+                    f"mean={row.mean():.1f};p95={np.percentile(row, 95):.1f}"
+                    f";max={row.max():.1f};vs_fluid={row.mean() / fluid:.2f}",
                 )
+            emit(
+                f"cct/{scen}/{rel}/sweep",
+                (compile_s + run_s) * 1e6,
+                f"policies={len(POLICIES)};seeds={n_seeds}",
+                compile_count=1,
+                compile_s=round(compile_s, 3),
+                run_s=round(run_s, 3),
+                total_s=round(compile_s + run_s, 3),
+            )
 
     # ring all-reduce ETTR: compute 500 ticks/iter, 4 workers
     params = SCENARIOS["persistent"]
-    ccfg = CollectiveConfig(workers=4, shard_packets=512, horizon=4096)
-    ideal = 6 * ideal_step_ticks(params, 512, 48)
+    shard = 128 if smoke else 512
+    ccfg = CollectiveConfig(workers=4, shard_packets=shard, horizon=horizon)
+    ideal = 6 * ideal_step_ticks(params, shard, RATE)
     for pol in (Policy.ECMP, Policy.WAM):
-        tcfg = TransportConfig(policy=pol, coded=True, rate=48)
+        tcfg = TransportConfig(policy=pol, coded=True, rate=RATE)
         t0 = time.perf_counter()
         totals = [
             float(allreduce_cct(params, tcfg, ccfg, jax.random.PRNGKey(s))[0])

@@ -1,5 +1,7 @@
 """Paper §1: 'low per-packet decision overhead'.  Decisions/second for the
-jit'd selection engine (batched), per method, plus the update primitives."""
+jit'd selection engine (batched), per method, plus the update primitives
+and the unified engine's traced-policy dispatch (one `lax.switch` program
+assigning paths for all five policies at once)."""
 from __future__ import annotations
 
 import jax
@@ -11,6 +13,7 @@ from repro.core.profile import quantize_profile
 from repro.core.spray import SprayMethod, make_spray_state, spray_paths
 from repro.core.updates import update_embodiment3
 from repro.kernels import ops
+from repro.net.sender import Policy, assign_paths
 
 BATCH = 1 << 16
 
@@ -38,6 +41,28 @@ def main() -> None:
         "spray_throughput/kernel_oracle",
         us,
         f"decisions_per_s={BATCH / (us / 1e6):.3e}",
+    )
+
+    # traced-policy dispatch: ONE compiled assign_paths serving all five
+    # policies via lax.switch (the unified sender engine's per-tick hot path)
+    rate_cap = 1 << 12
+    st = make_spray_state(prof, sa=333, sb=735)
+    policies = jnp.arange(len(Policy), dtype=jnp.int32)
+    k_emit = jnp.int32(rate_cap)
+    ecmp = jnp.int32(3)
+    fn = jax.jit(
+        lambda pols, key: jax.vmap(
+            lambda p: assign_paths(
+                rate_cap, prof.n, p, st, prof, k_emit, key, ecmp
+            )[0]
+        )(pols)
+    )
+    us = timeit(fn, policies, jax.random.PRNGKey(0))
+    emit(
+        "spray_throughput/traced_policy_dispatch",
+        us,
+        f"decisions_per_s={len(Policy) * rate_cap / (us / 1e6):.3e}"
+        f";policies={len(Policy)};compiles=1",
     )
 
     # profile update latency (the whack): embodiment 3, jit'd

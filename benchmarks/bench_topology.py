@@ -1,24 +1,30 @@
 """Shared-fabric scenario sweep: all policies x the scenario library.
 
-For every scenario the whole sweep is ONE compiled computation: a
-`jax.vmap` over scenario draws (PRNG keys) of `simulate_flows`, which is
-itself vectorized over the coupled flows — so S draws x F flows of
-policy-vs-topology contention run without a Python-level loop.  Reports
-per-scenario CCT p50/p99 (over flows x draws) and the WAM-vs-ECMP p99
-speedup — the headline the independent-bundle fabric cannot produce: under
-incast/oversubscription the deterministic spray's advantage comes from NOT
-colliding with the other flows.
+Per scenario the whole policy grid is ONE compiled computation:
+`sender.sweep_flows` vmaps the unified sender core over a traced
+`SenderParams` policy axis x PRNG draws x the coupled flows — policy is a
+`lax.switch` index, not a recompile.  For contrast (and as the regression
+guard for the sweep-speed claim) the pre-engine idiom is also timed: one
+XLA program per policy via the static-`TransportConfig` wrapper.  Both
+paths' compile counts and compile-vs-run wall-clock are emitted into the
+bench JSON (`compile_count`, `compile_s`, `run_s`, `total_s`), so a
+regression that silently reintroduces per-policy compiles is visible in
+the trajectory.
+
+Reports per-scenario CCT p50/p99 (over flows x draws) and the WAM-vs-ECMP
+p99 speedup — the headline the independent-bundle fabric cannot produce:
+under incast/oversubscription the deterministic spray's advantage comes
+from NOT colliding with the other flows.
 """
 from __future__ import annotations
 
 import functools
-import time
 
 import jax
 import numpy as np
 
 from benchmarks import common
-from benchmarks.common import emit
+from benchmarks.common import aot_compile, emit, timed_call
 from repro.net.scenarios import (
     crossjob_background,
     incast,
@@ -27,6 +33,7 @@ from repro.net.scenarios import (
     pfc_storm,
     straggler_worker,
 )
+from repro.net.sender import SenderSpec, policy_sweep_params, sweep_flows
 from repro.net.transport import Policy, TransportConfig, simulate_flows
 
 POLICIES = (
@@ -36,6 +43,8 @@ POLICIES = (
     Policy.RAND_ADAPTIVE,
     Policy.WAM,
 )
+
+RATE = 32
 
 
 def _scenarios(horizon):
@@ -53,36 +62,61 @@ def _scenarios(horizon):
     ]
 
 
+def _baseline_per_policy(topo, sched, n_packets, horizon, keys):
+    """The pre-engine idiom: one XLA program per policy (static cfg)."""
+    compile_s = run_s = 0.0
+    ccts = {}
+    for pol in POLICIES:
+        cfg = TransportConfig(policy=pol, rate=RATE)
+        fn = jax.jit(
+            jax.vmap(
+                functools.partial(
+                    simulate_flows, topo, sched, cfg, n_packets,
+                    horizon=horizon,
+                )
+            )
+        )
+        compiled, c_s = aot_compile(fn, keys)
+        r, r_s = timed_call(compiled, keys)
+        compile_s += c_s
+        run_s += r_s
+        ccts[pol] = np.asarray(r.cct)  # [draws, F]
+    return ccts, compile_s, run_s
+
+
 def main() -> None:
     smoke = common.SMOKE
     draws = 2 if smoke else 8
     n_packets = 256 if smoke else 1024
     horizon = 1024 if smoke else 4096
     keys = jax.random.split(jax.random.PRNGKey(0), draws)
+    spec = SenderSpec(rate_cap=RATE)
+    sp = policy_sweep_params(POLICIES, rate=RATE)
 
     for scen_name, (topo, sched) in _scenarios(horizon):
+        # --- unified engine: ONE compile, all 5 policies x draws x flows ---
+        swept, sweep_compile_s = aot_compile(
+            sweep_flows, topo, sched, spec, sp, n_packets, keys,
+            horizon=horizon,
+        )
+        r, sweep_run_s = timed_call(swept, topo, sched, sp, keys)
+        ccts = np.asarray(r.cct)  # [policies, draws, F]
+
+        # --- baseline: the per-policy-compile idiom it replaces ---
+        base_ccts, base_compile_s, base_run_s = _baseline_per_policy(
+            topo, sched, n_packets, horizon, keys
+        )
+
         p99s = {}
-        for pol in POLICIES:
-            cfg = TransportConfig(policy=pol, rate=32)
-            sweep = jax.jit(
-                jax.vmap(
-                    functools.partial(
-                        simulate_flows, topo, sched, cfg, n_packets,
-                        horizon=horizon,
-                    )
-                )
-            )
-            ccts = np.asarray(sweep(keys).cct)  # [draws, F]
-            jax.block_until_ready(ccts)
-            t0 = time.perf_counter()
-            ccts = np.asarray(sweep(keys).cct)
-            us = (time.perf_counter() - t0) * 1e6 / ccts.size
-            flat = ccts.reshape(-1)
+        mismatch = 0
+        for pi, pol in enumerate(POLICIES):
+            flat = ccts[pi].reshape(-1)
             p50, p99 = np.percentile(flat, 50), np.percentile(flat, 99)
             p99s[pol] = p99
+            mismatch += int(not np.array_equal(ccts[pi], base_ccts[pol]))
             emit(
                 f"topo/{scen_name}/{pol.name}",
-                us,
+                sweep_run_s * 1e6 / ccts.size,
                 f"p50={p50:.1f};p99={p99:.1f};mean={flat.mean():.1f}"
                 f";flows={topo.flows};draws={draws}",
             )
@@ -90,6 +124,23 @@ def main() -> None:
             f"topo/{scen_name}/wam_vs_ecmp",
             0.0,
             f"p99_speedup={p99s[Policy.ECMP] / max(p99s[Policy.WAM], 1e-9):.2f}",
+        )
+        sweep_total = sweep_compile_s + sweep_run_s
+        base_total = base_compile_s + base_run_s
+        emit(
+            f"topo/{scen_name}/sweep",
+            sweep_total * 1e6,
+            f"compiles=1_vs_{len(POLICIES)}"
+            f";total_speedup={base_total / max(sweep_total, 1e-9):.2f}"
+            f";swept_matches_static={int(mismatch == 0)}",
+            compile_count=1,
+            compile_s=round(sweep_compile_s, 3),
+            run_s=round(sweep_run_s, 3),
+            total_s=round(sweep_total, 3),
+            baseline_compile_count=len(POLICIES),
+            baseline_compile_s=round(base_compile_s, 3),
+            baseline_run_s=round(base_run_s, 3),
+            baseline_total_s=round(base_total, 3),
         )
 
 

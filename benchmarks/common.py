@@ -2,20 +2,42 @@
 
 Rows printed through `emit` are also recorded in `RESULTS` so `run.py
 --json PATH` can dump the whole run as a BENCH_*.json-compatible dict.
+Extra keyword fields passed to `emit` (e.g. ``compile_s=...``,
+``compile_count=...``) are attached to the JSON row — and compile-cost
+fields are additionally aggregated into `COMPILE_STATS`, which `run.py`
+surfaces in the JSON meta block so sweep-speed (compile-count) regressions
+show up in the bench trajectory.
+
+`aot_compile` splits compile from run wall-clock via the jit AOT path
+(``fn.lower(...).compile()``); the compiled callable takes the dynamic
+arguments only (statics are baked in).
+
 `SMOKE` (set by `run.py --smoke`) asks benchmarks for a fast, small-shape
 pass — CI-sized sanity numbers rather than paper-sized tables.
 """
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict, List
+from typing import Callable, Dict, List, Tuple
 
 import jax
 
-__all__ = ["timeit", "emit", "RESULTS", "SMOKE", "set_smoke"]
+__all__ = [
+    "timeit",
+    "emit",
+    "aot_compile",
+    "timed_call",
+    "RESULTS",
+    "COMPILE_STATS",
+    "SMOKE",
+    "set_smoke",
+]
 
-# (name, us_per_call, derived) rows accumulated across sections this process
+# (name, us_per_call, derived, ...fields) rows accumulated this process
 RESULTS: List[Dict[str, object]] = []
+
+# per-emit compile accounting: {"name", "compile_count", "compile_s"} rows
+COMPILE_STATS: List[Dict[str, object]] = []
 
 SMOKE = False
 
@@ -40,8 +62,36 @@ def timeit(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
     return times[len(times) // 2] * 1e6
 
 
-def emit(name: str, us_per_call: float, derived: str = "") -> None:
-    RESULTS.append(
-        {"name": name, "us_per_call": round(us_per_call, 2), "derived": derived}
-    )
+def emit(name: str, us_per_call: float, derived: str = "", **fields) -> None:
+    """Record one bench row.  Extra keyword fields land in the JSON row;
+    `compile_count`/`compile_s` are also tallied into COMPILE_STATS."""
+    row: Dict[str, object] = {
+        "name": name, "us_per_call": round(us_per_call, 2), "derived": derived
+    }
+    row.update(fields)
+    RESULTS.append(row)
+    if "compile_count" in fields or "compile_s" in fields:
+        COMPILE_STATS.append(
+            {
+                "name": name,
+                "compile_count": int(fields.get("compile_count", 0)),
+                "compile_s": round(float(fields.get("compile_s", 0.0)), 3),
+            }
+        )
     print(f"{name},{us_per_call:.2f},{derived}")
+
+
+def aot_compile(jit_fn, *args, **kwargs) -> Tuple[Callable, float]:
+    """Compile a jitted function ahead of time; returns (compiled,
+    compile_seconds).  Call `compiled` with the dynamic args only."""
+    t0 = time.perf_counter()
+    compiled = jit_fn.lower(*args, **kwargs).compile()
+    return compiled, time.perf_counter() - t0
+
+
+def timed_call(compiled: Callable, *args) -> Tuple[object, float]:
+    """One blocking call; returns (result, seconds)."""
+    t0 = time.perf_counter()
+    out = compiled(*args)
+    jax.block_until_ready(out)
+    return out, time.perf_counter() - t0

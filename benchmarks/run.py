@@ -77,6 +77,19 @@ def main(argv=None) -> None:
                 "sections": timings,
                 "python": platform.python_version(),
                 "platform": platform.platform(),
+                # sweep-speed visibility: every row that reported compile
+                # accounting, plus totals — a compile-count regression (e.g.
+                # a sweep silently falling back to per-policy programs)
+                # shows up directly in the bench trajectory.
+                "compile": {
+                    "total_compiles": sum(
+                        r["compile_count"] for r in common.COMPILE_STATS
+                    ),
+                    "total_compile_s": round(
+                        sum(r["compile_s"] for r in common.COMPILE_STATS), 3
+                    ),
+                    "rows": common.COMPILE_STATS,
+                },
             },
             "results": common.RESULTS,
         }

@@ -5,52 +5,59 @@ shared spine->leaf downlinks while Whack-a-Mole sprays the aggregate evenly.
 Then a ring all-reduce where one worker straggles — contention every policy
 must route around, not an independent Markov draw per worker.
 
+Per scenario, ALL policies x draws x coupled flows run as ONE compiled
+computation: the unified sender engine (`repro.net.sender`) treats policy
+as a traced `lax.switch` index, so `sweep_flows` vmaps over a batched
+`SenderParams` instead of recompiling per policy.
+
     PYTHONPATH=src python examples/topology_scenarios_demo.py
 """
-import functools
+import time
 
 import jax
 import numpy as np
 
 from repro.net import (
     CollectiveConfig,
+    SenderSpec,
     TransportConfig,
     allreduce_cct_shared,
+    policy_sweep_params,
     ring_topology,
-    simulate_flows,
+    sweep_flows,
 )
 from repro.net.scenarios import SCENARIOS, straggler_worker
 from repro.net.transport import Policy
 
 N_PACKETS = 512
 DRAWS = 4
+POLICIES = (Policy.ECMP, Policy.WAM)
 
 print(f"== scenario sweep: per-flow CCT p50/p99 over {DRAWS} draws ==")
+print("   (one compiled program per scenario covers every policy)")
 keys = jax.random.split(jax.random.PRNGKey(0), DRAWS)
+spec = SenderSpec(rate_cap=32)
+sp = policy_sweep_params(POLICIES, rate=32)
 for name, ctor in SCENARIOS.items():
     topo, sched = ctor()
+    t0 = time.perf_counter()
+    r = sweep_flows(topo, sched, spec, sp, N_PACKETS, keys, horizon=2048)
+    cct = np.asarray(jax.block_until_ready(r).cct)  # [policy, draw, flow]
+    dt = time.perf_counter() - t0
     row = [f"{name:22s} F={topo.flows} L={topo.links:3d}"]
-    for pol in (Policy.ECMP, Policy.WAM):
-        sweep = jax.jit(
-            jax.vmap(
-                functools.partial(
-                    simulate_flows, topo, sched,
-                    TransportConfig(policy=pol, rate=32), N_PACKETS,
-                    horizon=2048,
-                )
-            )
-        )
-        cct = np.asarray(sweep(keys).cct).reshape(-1)
+    for pi, pol in enumerate(POLICIES):
+        flat = cct[pi].reshape(-1)
         row.append(
-            f"{pol.name}: p50={np.percentile(cct, 50):6.1f}"
-            f" p99={np.percentile(cct, 99):6.1f}"
+            f"{pol.name}: p50={np.percentile(flat, 50):6.1f}"
+            f" p99={np.percentile(flat, 99):6.1f}"
         )
+    row.append(f"[{dt:5.2f}s]")
     print("  ".join(row))
 
 print("\n== ring all-reduce with a straggler worker (shared fabric) ==")
 topo, sched = straggler_worker(workers=4, n_spines=4, factor=0.25)
 ccfg = CollectiveConfig(workers=4, shard_packets=256, horizon=2048)
-for pol in (Policy.ECMP, Policy.WAM):
+for pol in POLICIES:
     total, per_step = allreduce_cct_shared(
         topo, sched, TransportConfig(policy=pol, rate=32), ccfg,
         jax.random.PRNGKey(1),

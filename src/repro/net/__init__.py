@@ -1,6 +1,19 @@
 """Multipath network substrate: fabric model, shared leaf-spine topology,
-transports, collectives, scenario library, coding."""
+unified sender engine, transports, collectives, scenario library, coding."""
 from repro.net.fabric import FabricParams, FabricState, fabric_tick, init_fabric
+from repro.net.sender import (
+    SenderParams,
+    SenderSpec,
+    completion_need,
+    policy_sweep_params,
+    run_flows,
+    run_message,
+    run_message_on,
+    sender_params,
+    stack_params,
+    sweep_flows,
+    sweep_message,
+)
 from repro.net.topology import (
     EventSchedule,
     SharedFabricState,
@@ -27,9 +40,11 @@ from repro.net.collectives import (
     allreduce_cct_shared,
     ettr,
     ideal_step_ticks,
+    ring_steps_cct_shared,
     ring_topology,
     step_cct,
     step_cct_shared,
+    sweep_ring_cct_shared,
 )
 from repro.net.scenarios import SCENARIOS
 from repro.net.fountain import (

@@ -14,7 +14,12 @@ The `_shared` variants run the same ring schedules on the shared leaf–spine
 fabric (`repro.net.topology`): each worker lives on its own leaf and always
 sends to its ring neighbor, so all W shard transfers of a step contend for
 the same spine links — stragglers and hotspots now propagate between
-workers instead of being independent draws.
+workers instead of being independent draws.  They ride the unified sender
+engine (`repro.net.sender`): all ring steps of a collective are ONE
+compiled computation (`ring_steps_cct_shared` vmaps the coupled-flows core
+over per-step PRNG keys), and `sweep_ring_cct_shared` additionally vmaps
+over a batched `SenderParams` so policy/config comparisons share that same
+single program.
 
 ETTR (effective training time ratio) for a training job with per-iteration
 compute time C:  ETTR = sum_i (C + CCT_ideal) / sum_i (C + CCT_i), where
@@ -31,6 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.net.fabric import FabricParams
+from repro.net.sender import SenderParams, SenderSpec, run_flows
 from repro.net.topology import EventSchedule, TopologyParams, leaf_spine
 from repro.net.transport import (
     Policy,
@@ -46,6 +52,8 @@ __all__ = [
     "allgather_cct",
     "ring_topology",
     "step_cct_shared",
+    "ring_steps_cct_shared",
+    "sweep_ring_cct_shared",
     "allreduce_cct_shared",
     "allgather_cct_shared",
     "ideal_step_ticks",
@@ -162,10 +170,56 @@ def step_cct_shared(
     )
 
 
+@functools.partial(
+    jax.jit, static_argnames=("spec", "shard_packets", "horizon")
+)
+def ring_steps_cct_shared(
+    topo: TopologyParams,
+    sched: EventSchedule,
+    spec: SenderSpec,
+    sp: SenderParams,
+    shard_packets: int,
+    keys: jax.Array,
+    horizon: int = 4096,
+) -> jax.Array:
+    """Barrier times for every ring step in ONE compiled computation: vmap
+    the coupled-flows sender core over per-step PRNG keys.  Returns
+    per_step[steps] = max-over-workers CCT of each step."""
+    def one_step(k):
+        return jnp.max(
+            run_flows(topo, sched, spec, sp, shard_packets, k, horizon).cct
+        )
+
+    return jax.vmap(one_step)(keys)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("spec", "shard_packets", "horizon")
+)
+def sweep_ring_cct_shared(
+    topo: TopologyParams,
+    sched: EventSchedule,
+    spec: SenderSpec,
+    sp: SenderParams,
+    shard_packets: int,
+    keys: jax.Array,
+    horizon: int = 4096,
+) -> jax.Array:
+    """Policy/config sweep of a shared-fabric ring: `sp` carries a leading
+    sweep axis P, `keys` is [steps, 2] — returns per_step[P, steps], still
+    one XLA program for the whole grid."""
+    return jax.vmap(
+        lambda s: ring_steps_cct_shared(
+            topo, sched, spec, s, shard_packets, keys, horizon
+        )
+    )(sp)
+
+
 def _ring_cct_shared(topo, sched, tcfg, cfg, key, steps):
     keys = jax.random.split(key, steps)
-    per_step = jnp.stack(
-        [step_cct_shared(topo, sched, tcfg, cfg, keys[s]) for s in range(steps)]
+    per_step = ring_steps_cct_shared(
+        topo, sched, tcfg.spec(), tcfg.params(), cfg.shard_packets, keys,
+        cfg.horizon,
     )
     return jnp.sum(per_step), per_step
 

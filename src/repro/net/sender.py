@@ -1,0 +1,568 @@
+"""Unified flow-batched sender engine: ONE tick core, traced policy dispatch.
+
+This module is the single home of the paper's sender semantics (§2, §4-6):
+emit budget, spray/path assignment, retransmission debt, the delayed-feedback
+profile controller, and completion detection all live in exactly one scan
+body (`run_sender`'s `sender_tick`).  Every transport entry point —
+`transport.simulate_message`, `transport.simulate_message_on`,
+`transport.simulate_flows`, and the swept engines below — is a thin
+specialization of that core, so a fix lands everywhere at once.
+
+Configuration splits along the trace boundary:
+
+  * `SenderSpec`   — static, hashable, shape-affecting: reliability mode
+                     (coded vs ARQ changes the emit-budget dataflow), spray
+                     precision `ell`, spray method, and `rate_cap` (the width
+                     of the per-tick emission lanes).  A jit cache key.
+  * `SenderParams` — a TRACED pytree: policy (int32 -> `jax.lax.switch`),
+                     rate, cwnd, code_overhead, ctrl_interval, spray seeds.
+                     Anything here can be swept by `jax.vmap` WITHOUT
+                     recompiling — policies x config points x PRNG draws all
+                     ride one XLA program.
+
+The one-compile sweep idiom::
+
+    spec = SenderSpec(rate_cap=32)
+    sp = policy_sweep_params(rate=32)            # all 5 policies, stacked
+    keys = jax.random.split(key, draws)
+    r = sweep_flows(topo, sched, spec, sp, n_packets, keys, horizon=2048)
+    r.cct                                        # [policies, draws, flows]
+
+Policies (§2, §4 + the baselines the paper positions against):
+
+  * ECMP          — flow-hash: every packet of the flow on one fixed path.
+  * RR            — round-robin across all paths, health-blind.
+  * RAND_STATIC   — uniform random path per packet (stochastic spraying).
+  * RAND_ADAPTIVE — random per the *adaptive* profile (same feedback
+                    controller as WaM; isolates determinism from adaptivity).
+  * WAM           — Whack-a-Mole: bit-reversal deterministic spray over the
+                    adaptive profile (the paper's algorithm).
+
+Reliability modes:
+  * coded   — fountain/LT transport: the flow completes when ANY
+              need ~= K * (1+overhead) distinct packets arrive (§1-2);
+              losses are never retransmitted.
+  * arq     — uncoded: drops become retransmission debt after the feedback
+              delay (selective-repeat accounting), windowed at `cwnd`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import functools
+from typing import Callable, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.feedback import (
+    ControllerState,
+    PathStats,
+    controller_step,
+    make_controller,
+)
+from repro.core.profile import PathProfile, uniform_profile
+from repro.core.spray import SprayMethod, SprayState, select_path, spray_key
+from repro.net.fabric import FabricParams, fabric_tick, init_fabric
+from repro.net.topology import (
+    EventSchedule,
+    TopologyParams,
+    init_shared_fabric,
+    shared_fabric_tick,
+)
+
+__all__ = [
+    "Policy",
+    "SenderSpec",
+    "SenderParams",
+    "SimResult",
+    "sender_params",
+    "stack_params",
+    "policy_sweep_params",
+    "completion_need",
+    "assign_paths",
+    "run_sender",
+    "run_message_on",
+    "run_message",
+    "run_flows",
+    "sweep_message",
+    "sweep_flows",
+]
+
+
+class Policy(enum.IntEnum):
+    ECMP = 0
+    RR = 1
+    RAND_STATIC = 2
+    RAND_ADAPTIVE = 3
+    WAM = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class SenderSpec:
+    """Static, shape-affecting sender description (a hashable jit cache key).
+
+    `rate_cap` sizes the per-tick emission lanes: each tick assigns paths to
+    up to `rate_cap` packets and masks the first `k_emit` live.  A traced
+    `SenderParams.rate <= rate_cap` throttles within those lanes, so sweeps
+    over rate share one program sized by the cap.
+    """
+
+    coded: bool = True
+    ell: int = 10                          # profile precision (m = 2**ell)
+    method: SprayMethod = SprayMethod.SHUFFLE_1
+    rate_cap: int = 32                     # emission lane width (packets/tick)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SenderParams:
+    """Traced sender knobs — a pytree of scalars, `jax.vmap`-able over any
+    leading axis (policies, config grid points, PRNG-decorrelated repeats)."""
+
+    policy: jax.Array         # int32 Policy value -> lax.switch branch index
+    rate: jax.Array           # int32 emit budget per tick (<= spec.rate_cap)
+    cwnd: jax.Array           # float32 ARQ in-flight window
+    code_overhead: jax.Array  # float32 fountain reception overhead epsilon
+    ctrl_interval: jax.Array  # int32 controller cadence (ticks)
+    sa: jax.Array             # uint32 spray seed a
+    sb: jax.Array             # uint32 spray seed b (odd)
+
+
+def sender_params(
+    policy: Policy | int,
+    *,
+    rate: int = 32,
+    cwnd: float = 256.0,
+    code_overhead: float = 0.05,
+    ctrl_interval: int = 4,
+    seed: Tuple[int, int] = (333, 735),
+) -> SenderParams:
+    """Scalar `SenderParams` with the seed transport's defaults."""
+    return SenderParams(
+        policy=jnp.int32(int(policy)),
+        rate=jnp.int32(rate),
+        cwnd=jnp.float32(cwnd),
+        code_overhead=jnp.float32(code_overhead),
+        ctrl_interval=jnp.int32(ctrl_interval),
+        sa=jnp.uint32(seed[0]),
+        sb=jnp.uint32(seed[1]),
+    )
+
+
+def stack_params(params: Sequence[SenderParams]) -> SenderParams:
+    """Stack scalar param pytrees along a new leading sweep axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *params)
+
+
+def policy_sweep_params(
+    policies: Sequence[Policy] = tuple(Policy), **kw
+) -> SenderParams:
+    """`SenderParams` with a leading policy axis — the all-policies sweep."""
+    return stack_params([sender_params(p, **kw) for p in policies])
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SimResult:
+    cct: jax.Array            # float32 — completion tick (or horizon sentinel)
+    sent_total: jax.Array     # float32[n]
+    dropped_total: jax.Array  # float32[n]
+    final_b: jax.Array        # int32[n] final profile allocation
+    received: jax.Array       # float32
+
+
+def completion_need(n_packets, coded: bool, code_overhead) -> jax.Array:
+    """Completion threshold shared by every sender entry point.
+
+    Coded flows need ~ceil(K * (1+overhead)) distinct arrivals (§1-2); ARQ
+    flows need all K.  The -0.25 is the fluid-model float-residue guard: the
+    fabric serves fractional packets during degradation, so an exact integer
+    threshold could strand a completion on accumulated float error.
+
+    Tiny messages are guarded: for n_packets <= 4 the coded overhead is
+    waived (a 1-packet message must not require 2 arrivals), and n_packets
+    == 0 yields a non-positive threshold so the flow completes at tick 0
+    rather than running to the horizon sentinel.
+    """
+    npk = jnp.asarray(n_packets, jnp.float32)
+    if coded:
+        # floor(K + K*eps), NOT floor(K * (1+eps)): adding eps to 1 in
+        # float32 discards eps's low mantissa bits, which biases the product
+        # low and flips the floor whenever K*(1+eps) lands on an integer
+        # (every K divisible by 20 at the default eps=0.05).  The split form
+        # keeps K exact and rounds only the small overhead term, matching
+        # the historical float64 int(K * (1+eps)) threshold.
+        overhead = npk * jnp.asarray(code_overhead, jnp.float32)
+        need = jnp.floor(npk + overhead) + 1.0
+    else:
+        need = npk
+    need = jnp.where(npk <= 4.0, npk, need)
+    return need - 0.25
+
+
+def assign_paths(
+    rate_cap: int,
+    n: int,
+    policy: jax.Array,
+    spray: SprayState,
+    profile: PathProfile,
+    k_emit: jax.Array,
+    key: jax.Array,
+    ecmp_path: jax.Array,
+):
+    """Choose a path for each of up to rate_cap packets (first k_emit valid).
+
+    `policy` is TRACED: dispatch is a `jax.lax.switch`, so one compiled
+    program serves all five policies and vmaps over a policy axis.  Returns
+    (arrivals[n] float32, spray') — the spray counter advances by k_emit so
+    the WaM sequence is exactly the paper's (no holes).
+    """
+    lanes = jnp.arange(rate_cap, dtype=jnp.uint32)
+    live = jnp.arange(rate_cap) < k_emit  # [rate_cap]
+
+    def ecmp():
+        return jnp.full((rate_cap,), ecmp_path, jnp.int32)
+
+    def rr():
+        return ((spray.j + lanes) % n).astype(jnp.int32)
+
+    def rand_static():
+        return jax.random.randint(key, (rate_cap,), 0, n, jnp.int32)
+
+    def rand_adaptive():
+        u = jax.random.randint(key, (rate_cap,), 0, profile.m, jnp.int32)
+        return select_path(profile.c, u)
+
+    def wam():
+        keys = spray_key(
+            spray.j + lanes, spray.sa, spray.sb, spray.ell, spray.method
+        )
+        return select_path(profile.c, keys)
+
+    paths = jax.lax.switch(policy, [ecmp, rr, rand_static, rand_adaptive, wam])
+    onehot = jax.nn.one_hot(paths, n, dtype=jnp.float32)
+    arrivals = jnp.sum(onehot * live[:, None], axis=0)
+    spray = dataclasses.replace(spray, j=spray.j + k_emit.astype(jnp.uint32))
+    return arrivals, spray
+
+
+def run_sender(
+    spec: SenderSpec,
+    sp: SenderParams,
+    n_packets: int,
+    horizon: int,
+    *,
+    lead: Tuple[int, ...],
+    n: int,
+    fabric0,
+    stepper: Callable,
+    latency_f: jax.Array,
+    spray0: SprayState,
+    ctrl0: ControllerState,
+    ecmp_path: jax.Array,
+    assign_fn: Callable,
+    ctrl_update: Callable,
+    received_fn: Callable,
+    dropped_fn: Callable,
+    k_loop: jax.Array,
+) -> SimResult:
+    """THE sender tick core, generic over a leading flow axis `lead`.
+
+    Per-flow scalars have shape `lead` (() for one flow, (F,) for coupled
+    flows); per-path arrays have shape `lead + (n,)`.  The specializations
+    differ only in their initial states and in four injected callables:
+
+      * stepper(fabric, arrivals, key) -> (fabric', fb) — the fabric, any
+        model honouring the `fabric_tick` feedback contract.
+      * assign_fn(spray, profile, k_emit, key, ecmp_path) — path assignment
+        (the F-flow engine vmaps `assign_paths` and splits the tick key per
+        flow; the single-flow engine binds it directly).
+      * ctrl_update(ctrl, stats) -> ctrl — profile controller step (vmapped
+        over flows where applicable).
+      * received_fn / dropped_fn — read completion/drop totals out of the
+        (otherwise opaque) fabric state.
+
+    Everything in `sp` is traced: the policy runs through `lax.switch`
+    inside `assign_fn`, and non-adaptive policies simply never take the
+    controller branch, leaving the profile at its uniform initial value —
+    identical to the historical static dispatch, but sweepable.
+    """
+    need = completion_need(n_packets, spec.coded, sp.code_overhead)
+    rate = jnp.minimum(sp.rate, spec.rate_cap)  # lanes are rate_cap wide
+    adaptive = (sp.policy == Policy.RAND_ADAPTIVE) | (sp.policy == Policy.WAM)
+
+    def sender_tick(carry, _):
+        (fabric, ctrl, spray, sent_sched, debt, done_at, sent_pp, known) = carry
+        t = fabric.t
+        ka, kb = jax.random.split(jax.random.fold_in(k_loop, t))
+
+        # --- emit budget ---
+        if spec.coded:
+            # keep the pipe full until completion
+            k_emit = jnp.where(done_at >= 0, 0, rate).astype(jnp.int32)
+        else:
+            outstanding = jnp.maximum(n_packets - sent_sched, 0.0) + debt
+            known_delivered, known_dropped = known
+            in_flight = (
+                jnp.sum(sent_pp, axis=-1) - known_delivered - known_dropped
+            )
+            room = jnp.maximum(sp.cwnd - in_flight, 0.0)
+            # ceil: the fabric is a fluid model (fractional service during
+            # degradation), but the sender emits whole packets — rounding debt
+            # down would strand a fractional residue short of completion.
+            k_emit = jnp.ceil(
+                jnp.minimum(
+                    jnp.minimum(outstanding, room), rate.astype(jnp.float32)
+                )
+            ).astype(jnp.int32)
+
+        # --- spray / path assignment (traced-policy lax.switch) ---
+        arrivals, spray = assign_fn(spray, ctrl.profile, k_emit, ka, ecmp_path)
+        sent_pp = sent_pp + arrivals
+        fabric, fb = stepper(fabric, arrivals, kb)
+
+        # --- retransmission debt (uncoded): NACKed drops re-enter the stream
+        new_debt = debt + jnp.sum(fb["dropped"], axis=-1) - (
+            jnp.maximum(k_emit - jnp.maximum(n_packets - sent_sched, 0.0), 0.0)
+        )
+        new_debt = jnp.maximum(new_debt, 0.0)
+        sent_sched = sent_sched + k_emit
+
+        # --- delayed feedback -> profile controller (adaptive policies) ---
+        def do_ctrl(c):
+            sent = jnp.maximum(fb["sent"], 1e-6)
+            stats = PathStats(
+                ecn_rate=fb["marked"] / sent * jnp.minimum(fb["sent"], 1.0),
+                loss_rate=fb["dropped"] / sent * jnp.minimum(fb["sent"], 1.0),
+                rtt=latency_f + fb["qdelay"],
+            )
+            return ctrl_update(c, stats)
+
+        ctrl = jax.lax.cond(
+            adaptive & ((t % sp.ctrl_interval) == 0), do_ctrl, lambda c: c, ctrl
+        )
+
+        # --- completion detection ---
+        known = (
+            known[0] + fb["landed"],
+            known[1] + jnp.sum(fb["dropped"], axis=-1),
+        )
+        done_now = (received_fn(fabric) >= need) & (done_at < 0)
+        done_at = jnp.where(done_now, t.astype(jnp.int32) + 1, done_at)
+        return (
+            fabric, ctrl, spray, sent_sched, new_debt, done_at, sent_pp, known
+        ), None
+
+    zeros = jnp.zeros(lead, jnp.float32)
+    # empty messages (need <= 0) complete at tick 0, not the horizon sentinel
+    done_at0 = jnp.broadcast_to(
+        jnp.where(need <= 0.0, 0, -1).astype(jnp.int32), lead
+    )
+    carry0 = (
+        fabric0,
+        ctrl0,
+        spray0,
+        zeros,
+        zeros,
+        done_at0,
+        jnp.zeros(lead + (n,), jnp.float32),
+        (zeros, zeros),
+    )
+    (fabric, ctrl, _, _, _, done_at, sent_pp, _), _ = jax.lax.scan(
+        sender_tick, carry0, jnp.arange(horizon)
+    )
+    cct = jnp.where(done_at >= 0, done_at.astype(jnp.float32), float(horizon))
+    return SimResult(
+        cct=cct,
+        sent_total=sent_pp,
+        dropped_total=dropped_fn(fabric),
+        final_b=ctrl.profile.b,
+        received=received_fn(fabric),
+    )
+
+
+def run_message_on(
+    fabric0,
+    stepper,
+    latency: jax.Array,
+    spec: SenderSpec,
+    sp: SenderParams,
+    n_packets: int,
+    key: jax.Array,
+    horizon: int = 4096,
+    *,
+    received_fn=None,
+    dropped_fn=None,
+) -> SimResult:
+    """Single-flow (lead=()) specialization over an arbitrary fabric stepper.
+
+    `stepper(state, arrivals[n], key) -> (state', fb)` must honour the
+    `fabric_tick` feedback contract; `fabric0` is its initial state.
+    `received_fn` / `dropped_fn` read the cumulative delivered scalar and
+    per-path drop vector out of the (otherwise opaque) fabric state —
+    defaults match `FabricState`; shared-fabric adapters override them.
+    Not jitted itself: call from a jitted wrapper with static spec/sizes.
+    """
+    n = int(latency.shape[-1])
+    if received_fn is None:
+        received_fn = lambda s: s.received  # noqa: E731
+    if dropped_fn is None:
+        dropped_fn = lambda s: s.dropped  # noqa: E731
+    ctrl0 = make_controller(uniform_profile(n, spec.ell))
+    # normalize the traced seed exactly like flow 0 of `run_flows`: sa into
+    # [0, m), sb odd — seeds are traced so a host-side ValueError can't
+    # guard them here (concrete configs validate in TransportConfig).
+    mask = jnp.uint32((1 << spec.ell) - 1)
+    spray0 = SprayState(
+        j=jnp.uint32(0),
+        sa=sp.sa & mask,
+        sb=(sp.sb & mask) | jnp.uint32(1),
+        path_seq=jnp.zeros((n,), jnp.int32),
+        ell=spec.ell,
+        method=int(spec.method),
+    )
+    k_hash, k_loop = jax.random.split(key)
+    ecmp_path = jax.random.randint(k_hash, (), 0, n, jnp.int32)
+
+    def assign_fn(spray, profile, k_emit, ka, ecmp):
+        return assign_paths(
+            spec.rate_cap, n, sp.policy, spray, profile, k_emit, ka, ecmp
+        )
+
+    def ctrl_update(c, stats):
+        c2, _ = controller_step(c, stats)
+        return c2
+
+    return run_sender(
+        spec, sp, n_packets, horizon,
+        lead=(), n=n,
+        fabric0=fabric0, stepper=stepper,
+        latency_f=latency.astype(jnp.float32),
+        spray0=spray0, ctrl0=ctrl0, ecmp_path=ecmp_path,
+        assign_fn=assign_fn, ctrl_update=ctrl_update,
+        received_fn=received_fn, dropped_fn=dropped_fn,
+        k_loop=k_loop,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "n_packets", "horizon"))
+def run_message(
+    params: FabricParams,
+    spec: SenderSpec,
+    sp: SenderParams,
+    n_packets: int,
+    key: jax.Array,
+    horizon: int = 4096,
+) -> SimResult:
+    """Single-flow message transfer on the independent-bundle fabric, with
+    every `SenderParams` field traced (vmap-able; see `sweep_message`)."""
+    return run_message_on(
+        init_fabric(params),
+        functools.partial(fabric_tick, params),
+        params.latency,
+        spec, sp, n_packets, key, horizon,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "n_packets", "horizon"))
+def run_flows(
+    topo: TopologyParams,
+    sched: EventSchedule,
+    spec: SenderSpec,
+    sp: SenderParams,
+    n_packets: int,
+    key: jax.Array,
+    horizon: int = 4096,
+) -> SimResult:
+    """F coupled flows (lead=(F,)), one `n_packets` message each, on one
+    shared fabric — the same `sender_tick` core vmapped per flow for path
+    assignment and control, with ALL arrivals feeding `shared_fabric_tick`
+    so one flow's burst raises the queues every other flow sees.
+
+    Flows decorrelate their spray seeds (paper §4: per-source (sa, sb));
+    flow 0 keeps `sp`'s seed.  Returns a SimResult with a leading F axis on
+    every field (`cct[F]`, `sent_total[F, n]`, ...).
+    """
+    F, n = topo.flows, topo.n
+    m = 1 << spec.ell
+    mask = jnp.uint32(m - 1)
+    fidx = jnp.arange(F, dtype=jnp.uint32)
+    ctrl0 = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (F,) + x.shape),
+        make_controller(uniform_profile(n, spec.ell)),
+    )
+    spray0 = SprayState(
+        j=jnp.zeros((F,), jnp.uint32),
+        sa=(sp.sa + fidx * jnp.uint32(0x9E3779B9)) & mask,
+        sb=((sp.sb + 2 * fidx) & mask) | jnp.uint32(1),
+        path_seq=jnp.zeros((F, n), jnp.int32),
+        ell=spec.ell,
+        method=int(spec.method),
+    )
+    k_hash, k_loop = jax.random.split(key)
+    ecmp_path = jax.random.randint(k_hash, (F,), 0, n, jnp.int32)
+
+    vassign = jax.vmap(
+        functools.partial(assign_paths, spec.rate_cap, n, sp.policy)
+    )
+
+    def assign_fn(spray, profile, k_emit, ka, ecmp):
+        return vassign(spray, profile, k_emit, jax.random.split(ka, F), ecmp)
+
+    def ctrl_update(c, stats):
+        def one(ci, si):
+            c2, _ = controller_step(ci, si)
+            return c2
+
+        return jax.vmap(one)(c, stats)
+
+    return run_sender(
+        spec, sp, n_packets, horizon,
+        lead=(F,), n=n,
+        fabric0=init_shared_fabric(topo),
+        stepper=functools.partial(shared_fabric_tick, topo, sched),
+        latency_f=topo.latency.astype(jnp.float32),
+        spray0=spray0, ctrl0=ctrl0, ecmp_path=ecmp_path,
+        assign_fn=assign_fn, ctrl_update=ctrl_update,
+        received_fn=lambda s: s.received, dropped_fn=lambda s: s.dropped,
+        k_loop=k_loop,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "n_packets", "horizon"))
+def sweep_message(
+    params: FabricParams,
+    spec: SenderSpec,
+    sp: SenderParams,
+    n_packets: int,
+    keys: jax.Array,
+    horizon: int = 4096,
+) -> SimResult:
+    """ONE compiled sweep on the independent-bundle fabric: `sp` carries a
+    leading sweep axis P (policies / config points), `keys` is [D, 2] PRNG
+    draws — SimResult fields gain leading [P, D] axes."""
+    return jax.vmap(
+        lambda s: jax.vmap(
+            lambda k: run_message(params, spec, s, n_packets, k, horizon)
+        )(keys)
+    )(sp)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "n_packets", "horizon"))
+def sweep_flows(
+    topo: TopologyParams,
+    sched: EventSchedule,
+    spec: SenderSpec,
+    sp: SenderParams,
+    n_packets: int,
+    keys: jax.Array,
+    horizon: int = 4096,
+) -> SimResult:
+    """ONE compiled sweep on the shared fabric: P sweep points x D draws x F
+    coupled flows without a Python loop or a recompile — `cct[P, D, F]`."""
+    return jax.vmap(
+        lambda s: jax.vmap(
+            lambda k: run_flows(topo, sched, spec, s, n_packets, k, horizon)
+        )(keys)
+    )(sp)

@@ -1,54 +1,53 @@
 """Multipath transports over the fabric: the paper's senders and baselines.
 
-Policies (§2, §4 + the baselines the paper positions against):
+This is the stable user-facing API.  The sender semantics themselves —
+emit budget, spray/path assignment, retransmission debt, delayed-feedback
+control, completion detection — live in exactly ONE place, the flow-batched
+engine in `repro.net.sender` (`run_sender`'s `sender_tick` core).
+`simulate_message` / `simulate_message_on` are the single-flow (lead = ())
+specialization and `simulate_flows` the coupled-F specialization of that
+same core; there is no duplicated tick body to keep in sync.
 
-  * ECMP          — flow-hash: every packet of the flow on one fixed path.
-  * RR            — round-robin across all paths, health-blind.
-  * RAND_STATIC   — uniform random path per packet (stochastic spraying).
-  * RAND_ADAPTIVE — random per the *adaptive* profile (same feedback
-                    controller as WaM; isolates determinism from adaptivity).
-  * WAM           — Whack-a-Mole: bit-reversal deterministic spray over the
-                    adaptive profile (the paper's algorithm).
-
-Reliability modes:
-  * coded   — fountain/LT transport: the flow completes when ANY
-              need = ceil(K * (1+overhead)) distinct packets arrive (§1-2);
-              losses are never retransmitted.
-  * arq     — uncoded: drops become retransmission debt after the feedback
-              delay (selective-repeat accounting).
+`TransportConfig` bundles every sender knob with static=Python-value
+ergonomics and splits along the trace boundary via `.spec()` (static,
+shape-affecting: coded/ell/method/rate_cap) and `.params()` (traced
+`SenderParams`: policy, rate, cwnd, code_overhead, ctrl_interval, seeds).
+The wrappers here jit with `cfg` static — one compile per config, the
+historical behaviour.  For sweeps, skip the wrapper and hand a batched
+`SenderParams` to `sender.sweep_message` / `sender.sweep_flows`: policy and
+every other traced knob become vmap axes of a single compiled program.
 
 `simulate_message` scans a fixed horizon and reports the first completion
-tick (inf-like sentinel if the horizon was insufficient).
-
-The scan body is generic over a *fabric stepper* — any callable
-``(state, arrivals[n], key) -> (state', feedback)`` honouring the
-`fabric_tick` feedback contract (per-path sent/marked/dropped/qdelay plus
-landed).  `simulate_message` binds the independent-bundle `fabric_tick`;
-`simulate_message_on` accepts an arbitrary stepper (e.g. a single flow of
-the shared leaf–spine fabric in `repro.net.topology`), and
+tick (inf-like sentinel if the horizon was insufficient; empty messages
+complete at tick 0).  The scan body is generic over a *fabric stepper* —
+any callable ``(state, arrivals[n], key) -> (state', feedback)`` honouring
+the `fabric_tick` feedback contract (per-path sent/marked/dropped/qdelay
+plus landed).  `simulate_message` binds the independent-bundle
+`fabric_tick`; `simulate_message_on` accepts an arbitrary stepper (e.g. a
+single flow of the shared leaf–spine fabric in `repro.net.topology`), and
 `simulate_flows` runs F *coupled* flows in lockstep on one shared fabric —
 the contention case the independent bundles cannot express.
 """
 from __future__ import annotations
 
 import dataclasses
-import enum
 import functools
 from typing import Tuple
 
 import jax
-import jax.numpy as jnp
 
-from repro.core.feedback import ControllerState, PathStats, controller_step, make_controller
-from repro.core.profile import PathProfile, uniform_profile
-from repro.core.spray import SprayMethod, SprayState, make_spray_state, spray_key, select_path
-from repro.net.fabric import FabricParams, FabricState, fabric_tick, init_fabric
-from repro.net.topology import (
-    EventSchedule,
-    TopologyParams,
-    init_shared_fabric,
-    shared_fabric_tick,
+from repro.core.spray import SprayMethod
+from repro.net.fabric import FabricParams, fabric_tick, init_fabric
+from repro.net.sender import (
+    Policy,
+    SenderParams,
+    SenderSpec,
+    SimResult,
+    run_flows,
+    run_message_on,
+    sender_params,
 )
+from repro.net.topology import EventSchedule, TopologyParams
 
 __all__ = [
     "Policy",
@@ -58,14 +57,6 @@ __all__ = [
     "simulate_flows",
     "SimResult",
 ]
-
-
-class Policy(enum.IntEnum):
-    ECMP = 0
-    RR = 1
-    RAND_STATIC = 2
-    RAND_ADAPTIVE = 3
-    WAM = 4
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,51 +75,33 @@ class TransportConfig:
     # sender needs no window: completion is oblivious to which packets land.
     cwnd: float = 256.0
 
+    def __post_init__(self):
+        # the engine's seeds are traced (silently normalized); concrete
+        # configs keep the historical host-side validation
+        m = 1 << self.ell
+        sa, sb = self.seed
+        if not (0 <= sa < m):
+            raise ValueError(f"sa must be in [0, m={m}), got {sa}")
+        if not (1 <= sb < m) or sb % 2 == 0:
+            raise ValueError(f"sb must be odd in [1, m={m}), got {sb}")
 
-@jax.tree_util.register_dataclass
-@dataclasses.dataclass(frozen=True)
-class SimResult:
-    cct: jax.Array            # float32 — completion tick (or horizon sentinel)
-    sent_total: jax.Array     # float32[n]
-    dropped_total: jax.Array  # float32[n]
-    final_b: jax.Array        # int32[n] final profile allocation
-    received: jax.Array       # float32
+    def spec(self) -> SenderSpec:
+        """The static, shape-affecting half (jit cache key)."""
+        return SenderSpec(
+            coded=self.coded, ell=self.ell, method=self.method,
+            rate_cap=self.rate,
+        )
 
-
-def _assign_paths(
-    cfg: TransportConfig,
-    n: int,
-    spray: SprayState,
-    profile: PathProfile,
-    k_emit: jax.Array,
-    key: jax.Array,
-    ecmp_path: jax.Array,
-):
-    """Choose a path for each of up to cfg.rate packets (first k_emit valid).
-
-    Returns (arrivals[n] float32, spray') — spray counter advances by k_emit
-    so the WaM sequence is exactly the paper's (no holes)."""
-    rate = cfg.rate
-    live = jnp.arange(rate) < k_emit  # [rate]
-    if cfg.policy == Policy.ECMP:
-        paths = jnp.full((rate,), ecmp_path, jnp.int32)
-    elif cfg.policy == Policy.RR:
-        paths = ((spray.j + jnp.arange(rate, dtype=jnp.uint32)) % n).astype(jnp.int32)
-    elif cfg.policy == Policy.RAND_STATIC:
-        paths = jax.random.randint(key, (rate,), 0, n, jnp.int32)
-    elif cfg.policy == Policy.RAND_ADAPTIVE:
-        u = jax.random.randint(key, (rate,), 0, profile.m, jnp.int32)
-        paths = select_path(profile.c, u)
-    elif cfg.policy == Policy.WAM:
-        js = spray.j + jnp.arange(rate, dtype=jnp.uint32)
-        keys = spray_key(js, spray.sa, spray.sb, spray.ell, spray.method)
-        paths = select_path(profile.c, keys)
-    else:
-        raise ValueError(cfg.policy)
-    onehot = jax.nn.one_hot(paths, n, dtype=jnp.float32)
-    arrivals = jnp.sum(onehot * live[:, None], axis=0)
-    spray = dataclasses.replace(spray, j=spray.j + k_emit.astype(jnp.uint32))
-    return arrivals, spray
+    def params(self) -> SenderParams:
+        """The traced half (vmap-able pytree of scalars)."""
+        return sender_params(
+            self.policy,
+            rate=self.rate,
+            cwnd=self.cwnd,
+            code_overhead=self.code_overhead,
+            ctrl_interval=self.ctrl_interval,
+            seed=self.seed,
+        )
 
 
 def simulate_message_on(
@@ -145,119 +118,13 @@ def simulate_message_on(
 ) -> SimResult:
     """Single-flow message transfer over an arbitrary fabric stepper.
 
-    `stepper(state, arrivals[n], key) -> (state', fb)` must honour the
-    `fabric_tick` feedback contract; `fabric0` is its initial state.
-    `received_fn` / `dropped_fn` read the cumulative delivered scalar and
-    per-path drop vector out of the (otherwise opaque) fabric state —
-    defaults match `FabricState`; shared-fabric adapters override them.
+    See `sender.run_message_on` for the stepper/feedback contract.
     Not jitted itself: call from a jitted wrapper with static cfg/sizes.
     """
-    n = int(latency.shape[-1])
-    if received_fn is None:
-        received_fn = lambda s: s.received  # noqa: E731
-    if dropped_fn is None:
-        dropped_fn = lambda s: s.dropped  # noqa: E731
-    need = (
-        int(n_packets * (1.0 + cfg.code_overhead)) + 1
-        if cfg.coded
-        else n_packets
-    )
-    # fluid-model float residue guard on the completion threshold
-    need = need - 0.25
-    profile0 = uniform_profile(n, cfg.ell)
-    ctrl0 = make_controller(profile0)
-    spray0 = make_spray_state(
-        profile0, method=cfg.method, sa=cfg.seed[0], sb=cfg.seed[1]
-    )
-    k_hash, k_loop = jax.random.split(key)
-    ecmp_path = jax.random.randint(k_hash, (), 0, n, jnp.int32)
-
-    adaptive = cfg.policy in (Policy.RAND_ADAPTIVE, Policy.WAM)
-
-    def tick(carry, tk):
-        (fabric, ctrl, spray, sent_sched, debt, done_at, sent_pp, known) = carry
-        t = fabric.t
-        key_t = jax.random.fold_in(k_loop, t)
-        ka, kb = jax.random.split(key_t)
-
-        # --- how many packets to emit this tick ---
-        if cfg.coded:
-            # keep the pipe full until completion
-            k_emit = jnp.where(done_at >= 0, 0, cfg.rate).astype(jnp.int32)
-        else:
-            outstanding = jnp.maximum(n_packets - sent_sched, 0.0) + debt
-            known_delivered, known_dropped = known
-            in_flight = (
-                jnp.sum(sent_pp) - known_delivered - known_dropped
-            )
-            room = jnp.maximum(cfg.cwnd - in_flight, 0.0)
-            # ceil: the fabric is a fluid model (fractional service during
-            # degradation), but the sender emits whole packets — rounding debt
-            # down would strand a fractional residue short of completion.
-            k_emit = jnp.ceil(
-                jnp.minimum(jnp.minimum(outstanding, room), float(cfg.rate))
-            ).astype(jnp.int32)
-
-        arrivals, spray = _assign_paths(
-            cfg, n, spray, ctrl.profile, k_emit, ka, ecmp_path
-        )
-        sent_pp = sent_pp + arrivals
-        fabric, fb = stepper(fabric, arrivals, kb)
-
-        # --- retransmission debt (uncoded): NACKed drops re-enter the stream
-        new_debt = debt + jnp.sum(fb["dropped"]) - (
-            jnp.maximum(k_emit - jnp.maximum(n_packets - sent_sched, 0.0), 0.0)
-        )
-        new_debt = jnp.maximum(new_debt, 0.0)
-        sent_sched = sent_sched + k_emit
-
-        # --- feedback -> profile controller (adaptive policies only) ---
-        if adaptive:
-            sent = jnp.maximum(fb["sent"], 1e-6)
-            stats = PathStats(
-                ecn_rate=fb["marked"] / sent * jnp.minimum(fb["sent"], 1.0),
-                loss_rate=fb["dropped"] / sent * jnp.minimum(fb["sent"], 1.0),
-                rtt=latency.astype(jnp.float32) + fb["qdelay"],
-            )
-
-            def do_ctrl(c):
-                c2, _ = controller_step(c, stats)
-                return c2
-
-            ctrl = jax.lax.cond(
-                (t % cfg.ctrl_interval) == 0, do_ctrl, lambda c: c, ctrl
-            )
-
-        known = (
-            known[0] + jnp.sum(fb["landed"]),
-            known[1] + jnp.sum(fb["dropped"]),
-        )
-        done_now = (received_fn(fabric) >= need) & (done_at < 0)
-        done_at = jnp.where(done_now, t.astype(jnp.int32) + 1, done_at)
-        return (
-            fabric, ctrl, spray, sent_sched, new_debt, done_at, sent_pp, known
-        ), None
-
-    carry0 = (
-        fabric0,
-        ctrl0,
-        spray0,
-        jnp.float32(0.0),
-        jnp.float32(0.0),
-        jnp.int32(-1),
-        jnp.zeros((n,), jnp.float32),
-        (jnp.float32(0.0), jnp.float32(0.0)),
-    )
-    (fabric, ctrl, _, _, _, done_at, sent_pp, _), _ = jax.lax.scan(
-        tick, carry0, jnp.arange(horizon)
-    )
-    cct = jnp.where(done_at >= 0, done_at.astype(jnp.float32), float(horizon))
-    return SimResult(
-        cct=cct,
-        sent_total=sent_pp,
-        dropped_total=dropped_fn(fabric),
-        final_b=ctrl.profile.b,
-        received=received_fn(fabric),
+    return run_message_on(
+        fabric0, stepper, latency, cfg.spec(), cfg.params(),
+        n_packets, key, horizon,
+        received_fn=received_fn, dropped_fn=dropped_fn,
     )
 
 
@@ -292,132 +159,10 @@ def simulate_flows(
 ) -> SimResult:
     """F coupled flows, one `n_packets` message each, on one shared fabric.
 
-    Every sender runs the seed's per-tick logic (emit -> spray -> delayed
-    feedback -> profile controller), vmapped over flows, but all arrivals
-    feed the SAME `shared_fabric_tick` — so one flow's burst raises the
-    queues every other flow crossing the link sees.  Flows decorrelate their
-    spray seeds (paper §4: per-source (sa, sb)); flow 0 keeps `cfg.seed`.
-
-    Returns a SimResult with a leading F axis on every field (`cct[F]`,
-    `sent_total[F, n]`, ...).
-
-    NOTE: the tick body below mirrors `simulate_message_on`'s with an added
-    flow axis.  It is kept as a separate copy on purpose — the single-flow
-    scan must stay bit-identical to the seed trace (acceptance contract),
-    which a shared vmapped body would put at risk.  Fixes to the emit /
-    debt / controller logic must be applied to BOTH.
+    The F-flow specialization of the unified sender core (`sender.run_flows`)
+    with `cfg` split into its static/traced halves.  Returns a SimResult
+    with a leading F axis on every field (`cct[F]`, `sent_total[F, n]`, ...).
     """
-    F, n = topo.flows, topo.n
-    need = (
-        int(n_packets * (1.0 + cfg.code_overhead)) + 1
-        if cfg.coded
-        else n_packets
-    )
-    need = need - 0.25  # fluid-model float residue guard
-    m = 1 << cfg.ell
-    profile0 = uniform_profile(n, cfg.ell)
-    ctrl0 = jax.tree.map(
-        lambda x: jnp.broadcast_to(x[None], (F,) + x.shape),
-        make_controller(profile0),
-    )
-    fidx = jnp.arange(F, dtype=jnp.uint32)
-    mask = jnp.uint32(m - 1)
-    spray0 = SprayState(
-        j=jnp.zeros((F,), jnp.uint32),
-        sa=(jnp.uint32(cfg.seed[0]) + fidx * jnp.uint32(0x9E3779B9)) & mask,
-        sb=((jnp.uint32(cfg.seed[1]) + 2 * fidx) & mask) | jnp.uint32(1),
-        path_seq=jnp.zeros((F, n), jnp.int32),
-        ell=cfg.ell,
-        method=int(cfg.method),
-    )
-    k_hash, k_loop = jax.random.split(key)
-    ecmp_path = jax.random.randint(k_hash, (F,), 0, n, jnp.int32)
-    fabric0 = init_shared_fabric(topo)
-
-    adaptive = cfg.policy in (Policy.RAND_ADAPTIVE, Policy.WAM)
-    assign = jax.vmap(functools.partial(_assign_paths, cfg, n))
-    latency_f = topo.latency.astype(jnp.float32)
-
-    def tick(carry, tk):
-        (fabric, ctrl, spray, sent_sched, debt, done_at, sent_pp, known) = carry
-        t = fabric.t
-        key_t = jax.random.fold_in(k_loop, t)
-        ka, kb = jax.random.split(key_t)
-
-        if cfg.coded:
-            k_emit = jnp.where(done_at >= 0, 0, cfg.rate).astype(jnp.int32)
-        else:
-            outstanding = jnp.maximum(n_packets - sent_sched, 0.0) + debt
-            known_delivered, known_dropped = known
-            in_flight = (
-                jnp.sum(sent_pp, axis=-1) - known_delivered - known_dropped
-            )
-            room = jnp.maximum(cfg.cwnd - in_flight, 0.0)
-            k_emit = jnp.ceil(
-                jnp.minimum(jnp.minimum(outstanding, room), float(cfg.rate))
-            ).astype(jnp.int32)
-
-        arrivals, spray = assign(
-            spray, ctrl.profile, k_emit, jax.random.split(ka, F), ecmp_path
-        )
-        sent_pp = sent_pp + arrivals
-        fabric, fb = shared_fabric_tick(topo, sched, fabric, arrivals, kb)
-
-        new_debt = debt + jnp.sum(fb["dropped"], axis=-1) - (
-            jnp.maximum(
-                k_emit - jnp.maximum(n_packets - sent_sched, 0.0), 0.0
-            )
-        )
-        new_debt = jnp.maximum(new_debt, 0.0)
-        sent_sched = sent_sched + k_emit
-
-        if adaptive:
-            sent = jnp.maximum(fb["sent"], 1e-6)
-            stats = PathStats(
-                ecn_rate=fb["marked"] / sent * jnp.minimum(fb["sent"], 1.0),
-                loss_rate=fb["dropped"] / sent * jnp.minimum(fb["sent"], 1.0),
-                rtt=latency_f + fb["qdelay"],
-            )
-
-            def do_ctrl(c):
-                def one(ci, si):
-                    c2, _ = controller_step(ci, si)
-                    return c2
-
-                return jax.vmap(one)(c, stats)
-
-            ctrl = jax.lax.cond(
-                (t % cfg.ctrl_interval) == 0, do_ctrl, lambda c: c, ctrl
-            )
-
-        known = (
-            known[0] + fb["landed"],
-            known[1] + jnp.sum(fb["dropped"], axis=-1),
-        )
-        done_now = (fabric.received >= need) & (done_at < 0)
-        done_at = jnp.where(done_now, t.astype(jnp.int32) + 1, done_at)
-        return (
-            fabric, ctrl, spray, sent_sched, new_debt, done_at, sent_pp, known
-        ), None
-
-    carry0 = (
-        fabric0,
-        ctrl0,
-        spray0,
-        jnp.zeros((F,), jnp.float32),
-        jnp.zeros((F,), jnp.float32),
-        jnp.full((F,), -1, jnp.int32),
-        jnp.zeros((F, n), jnp.float32),
-        (jnp.zeros((F,), jnp.float32), jnp.zeros((F,), jnp.float32)),
-    )
-    (fabric, ctrl, _, _, _, done_at, sent_pp, _), _ = jax.lax.scan(
-        tick, carry0, jnp.arange(horizon)
-    )
-    cct = jnp.where(done_at >= 0, done_at.astype(jnp.float32), float(horizon))
-    return SimResult(
-        cct=cct,
-        sent_total=sent_pp,
-        dropped_total=fabric.dropped,
-        final_b=ctrl.profile.b,
-        received=fabric.received,
+    return run_flows(
+        topo, sched, cfg.spec(), cfg.params(), n_packets, key, horizon
     )

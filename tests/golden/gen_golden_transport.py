@@ -1,0 +1,100 @@
+"""Regenerate the transport golden traces (tests/golden/transport_seed.npz).
+
+The traces pin `simulate_message` on the independent-bundle seed fabric —
+all five policies x both reliability modes — and are the bit-identity
+acceptance contract for any refactor of the sender engine: a change that
+alters a single float in any field of any trace is a semantic change, not
+a refactor.
+
+Only rerun this when the *intended* semantics change:
+
+    PYTHONPATH=src python tests/golden/gen_golden_transport.py
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.net.transport import (
+    Policy,
+    TransportConfig,
+    simulate_flows,
+    simulate_message,
+)
+from repro.net.fabric import FabricParams
+from repro.net.topology import leaf_spine, null_schedule
+
+OUT = os.path.join(os.path.dirname(__file__), "transport_seed.npz")
+
+
+def golden_params(n=4):
+    """Small degrading fabric: nonzero moles so the PRNG path is exercised."""
+    return FabricParams(
+        capacity=jnp.full((n,), 4.0),
+        latency=jnp.full((n,), 4, jnp.int32),
+        queue_limit=jnp.full((n,), 16.0),
+        ecn_threshold=jnp.full((n,), 6.0),
+        degrade_p=jnp.full((n,), 0.02),
+        recover_p=jnp.full((n,), 0.1),
+        degrade_factor=jnp.full((n,), 0.1),
+        fb_delay=8,
+        ring_len=64,
+    )
+
+
+def golden_cases():
+    """(name, params, cfg, n_packets, key_seed, horizon) for every trace."""
+    params4 = golden_params(4)
+    params8 = golden_params(8)
+    cases = []
+    for pol in Policy:
+        for coded in (True, False):
+            rel = "coded" if coded else "arq"
+            cases.append(
+                (
+                    f"{pol.name}/{rel}",
+                    params4,
+                    TransportConfig(policy=pol, coded=coded, rate=16),
+                    256,
+                    7,
+                    512,
+                )
+            )
+    # one default-config trace on the wider fabric (the README quickstart shape)
+    cases.append(
+        ("WAM/default8", params8, TransportConfig(policy=Policy.WAM), 512, 0, 1024)
+    )
+    return cases
+
+
+def golden_flows_case():
+    """One coupled-flows trace on the shared leaf-spine fabric."""
+    topo = leaf_spine(4, 4, [(0, 1), (0, 2), (3, 1), (2, 3)], uplink_capacity=8.0)
+    cfg = TransportConfig(policy=Policy.WAM, rate=16)
+    return topo, null_schedule(topo.links), cfg, 128, 3, 512
+
+
+def main() -> None:
+    blobs = {}
+    for name, params, cfg, n_packets, seed, horizon in golden_cases():
+        r = simulate_message(
+            params, cfg, n_packets, jax.random.PRNGKey(seed), horizon
+        )
+        for field in ("cct", "sent_total", "dropped_total", "final_b", "received"):
+            blobs[f"{name}/{field}"] = np.asarray(getattr(r, field))
+        print(f"{name:24s} cct={float(r.cct):7.1f} received={float(r.received):8.1f}")
+
+    topo, sched, cfg, n_packets, seed, horizon = golden_flows_case()
+    r = simulate_flows(topo, sched, cfg, n_packets, jax.random.PRNGKey(seed), horizon)
+    for field in ("cct", "sent_total", "dropped_total", "final_b", "received"):
+        blobs[f"FLOWS/WAM/{field}"] = np.asarray(getattr(r, field))
+    print(f"{'FLOWS/WAM':24s} cct={np.asarray(r.cct)}")
+    np.savez(OUT, **blobs)
+    print(f"wrote {len(blobs)} arrays to {OUT}")
+
+
+if __name__ == "__main__":
+    main()

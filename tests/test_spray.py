@@ -90,6 +90,49 @@ def test_seeded_keys_are_permutations(sa, sb, method):
     assert sorted(keys.tolist()) == list(range(1024))
 
 
+@given(
+    st.integers(0, 1023),
+    st.integers(0, 511).map(lambda x: 2 * x + 1),
+    st.sampled_from(list(SprayMethod)),
+    st.integers(0, 2**32 - 1),
+)
+def test_spray_key_batched_matches_scalar(sa, sb, method, j0):
+    """The engine sprays whole batches of counters at once (and vmaps them
+    across flows); every batched key must equal the scalar paper semantics
+    applied per counter."""
+    js = (np.uint32(j0) + np.arange(8, dtype=np.uint32)).astype(np.uint32)
+    batched = np.asarray(spray_key(js, np.uint32(sa), np.uint32(sb), 10, method))
+    scalar = np.array(
+        [int(spray_key(j, np.uint32(sa), np.uint32(sb), 10, method)) for j in js]
+    )
+    assert np.array_equal(batched, scalar)
+    vmapped = np.asarray(
+        jax.vmap(lambda j: spray_key(j, np.uint32(sa), np.uint32(sb), 10, method))(
+            jnp.asarray(js)
+        )
+    )
+    assert np.array_equal(vmapped, scalar)
+
+
+@given(
+    st.lists(st.integers(0, 300), min_size=2, max_size=8),
+    st.lists(st.integers(0, 1023), min_size=1, max_size=8),
+)
+def test_select_path_batched_matches_scalar(bins, keys):
+    """Batched / vmapped select_path pins the vmapped engine's path choices
+    to the scalar smallest-i-with-c(i-1)<=k<c(i) rule."""
+    b = np.asarray(bins, np.int64)
+    if b.sum() == 0:
+        b[0] = 1
+    c = jnp.asarray(np.cumsum(b), jnp.int32)
+    keys_a = np.asarray(keys, np.int32) % int(np.sum(b))
+    batched = np.asarray(select_path(c, jnp.asarray(keys_a)))
+    scalar = np.array([int(select_path(c, int(k))) for k in keys_a])
+    assert np.array_equal(batched, scalar)
+    vmapped = np.asarray(jax.vmap(lambda k: select_path(c, k))(jnp.asarray(keys_a)))
+    assert np.array_equal(vmapped, scalar)
+
+
 def test_seed_validation():
     with pytest.raises(ValueError):
         make_spray_state(PROFILE, sa=0, sb=2)  # even sb
