@@ -1,11 +1,12 @@
-# Tier-1 verification + smoke benchmarks.
-#   make check   - full tier-1 pytest + benchmark smoke pass
-#   make test    - tier-1 pytest only
-#   make bench   - full benchmark pass (CSV to stdout)
+# Tier-1 verification + smoke benchmarks + docs checks.
+#   make check      - tier-1 pytest + benchmark smoke pass + docs checks
+#   make test       - tier-1 pytest only
+#   make bench      - full benchmark pass (CSV to stdout)
+#   make docs-check - core doctests + markdown relative-link checker
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: check test bench bench-smoke
+.PHONY: check test bench bench-smoke docs-check
 
 test:
 	python -m pytest -x -q
@@ -16,4 +17,8 @@ bench-smoke:
 bench:
 	python -m benchmarks.run
 
-check: test bench-smoke
+docs-check:
+	python -m pytest --doctest-modules src/repro/core -q
+	python tools/check_links.py
+
+check: test bench-smoke docs-check

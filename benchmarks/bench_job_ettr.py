@@ -1,0 +1,106 @@
+"""Job-level ETTR across the scenario axis: models x policies, one compile.
+
+The paper's headline metric at job scope — compile each model config's
+training step into a collective schedule (`repro.net.jobs.compile_job`),
+run every ring step of every iteration against each job scenario, and
+report ETTR = compute / (compute + exposed comm) per (model, policy).
+
+Per scenario the WHOLE grid — M model configs x 5 policies x PRNG draws x
+all schedule steps — is ONE compiled XLA program: message sizes ride the
+traced-size sender path (`run_flows_sized`), policies the traced
+`lax.switch` dispatch, and per-step event-schedule offsets a vmap axis.
+Compile accounting (`compile_count=1`, `compile_s`, `run_s`) lands in the
+bench JSON per scenario, so a regression that silently splits the sweep
+back into per-model or per-policy programs is visible in the trajectory.
+
+The summary row per scenario records the minimum over models of
+(ETTR_WAM - ETTR_ECMP): the paper's claim is that this is >= 0 in every
+contended scenario (deterministic spraying never loses whole-job time to
+flow-hash collisions).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from benchmarks.common import aot_compile, emit, timed_call
+from repro.net.jobs import compile_job, job_ettr, job_step_inputs, sweep_job_steps
+from repro.net.scenarios import job_scenarios
+from repro.net.sender import SenderSpec, policy_sweep_params
+from repro.net.transport import Policy
+
+POLICIES = (
+    Policy.ECMP,
+    Policy.RR,
+    Policy.RAND_STATIC,
+    Policy.RAND_ADAPTIVE,
+    Policy.WAM,
+)
+
+# one SSM (attention-light compute), one dense transformer, one MoE
+# (active << total params => communication-heavy): spread in the
+# compute:comm ratio is what differentiates job ETTR across the zoo.
+ARCHES = ("xlstm-350m", "qwen3-8b", "dbrx-132b")
+
+WORKERS = 4
+RATE = 32
+
+
+def main() -> None:
+    smoke = common.SMOKE
+    draws = 1 if smoke else 2
+    iterations = 1 if smoke else 2
+    max_shard = 96 if smoke else 512
+    horizon = 512 if smoke else 2048
+
+    jobs = [
+        compile_job(
+            a, workers=WORKERS, tp=8, iterations=iterations,
+            rate=RATE, max_shard=max_shard,
+        )
+        for a in ARCHES
+    ]
+    spec = SenderSpec(rate_cap=RATE)
+    sp = policy_sweep_params(POLICIES, rate=RATE)
+    keys = jax.random.split(jax.random.PRNGKey(0), draws)
+    scens = job_scenarios(workers=WORKERS, horizon=max(horizon, 2048))
+
+    for scen_name, (topo, sched) in scens.items():
+        scheds, shard = job_step_inputs(jobs, sched, horizon)
+        swept, compile_s = aot_compile(
+            sweep_job_steps, topo, scheds, spec, sp, shard, keys,
+            horizon=horizon,
+        )
+        cct, run_s = timed_call(swept, topo, scheds, sp, shard, keys)
+        cct = np.asarray(cct)  # [P, D, M, S]
+
+        ettr = np.zeros(cct.shape[:-1])
+        for m, job in enumerate(jobs):
+            ettr[..., m], _ = job_ettr(job, cct[..., m, :])
+        for m, job in enumerate(jobs):
+            for pi, pol in enumerate(POLICIES):
+                e = ettr[pi, :, m]
+                emit(
+                    f"job_ettr/{scen_name}/{job.arch}/{pol.name}",
+                    run_s * 1e6 / cct.size,
+                    f"ettr={e.mean():.4f};ettr_min={e.min():.4f}"
+                    f";ratio={job.compute_comm_ratio:.2f}"
+                    f";steps={job.total_steps};draws={draws}",
+                )
+        # headline gate: WAM whole-job ETTR never below ECMP's
+        ie, iw = POLICIES.index(Policy.ECMP), POLICIES.index(Policy.WAM)
+        margin = (ettr[iw].mean(axis=0) - ettr[ie].mean(axis=0)).min()
+        emit(
+            f"job_ettr/{scen_name}/wam_vs_ecmp",
+            0.0,
+            f"min_ettr_margin={margin:.4f};wam_ge_ecmp={int(margin >= 0)}",
+            compile_count=1,
+            compile_s=round(compile_s, 3),
+            run_s=round(run_s, 3),
+            total_s=round(compile_s + run_s, 3),
+        )
+
+
+if __name__ == "__main__":
+    main()

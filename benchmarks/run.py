@@ -27,6 +27,7 @@ SECTION_MODULES = [
     ("sec8_time_varying", "bench_timevarying"),
     ("sec12_cct_ettr", "bench_cct"),
     ("topology_scenarios", "bench_topology"),
+    ("job_ettr", "bench_job_ettr"),
     ("spray_throughput", "bench_spray_throughput"),
     ("sprayed_collective_tpu", "bench_sprayed_collective"),
     ("fountain_transport", "bench_fountain"),

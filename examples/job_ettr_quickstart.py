@@ -1,0 +1,50 @@
+"""Job-level ETTR in 60 seconds.
+
+Compile one model's training step into its collective schedule, run it
+against an uncontended fabric and a PFC pause storm, and compare whole-job
+ETTR for deterministic spraying (WAM) vs flow-hash routing (ECMP) — the
+paper's headline claim at job scope: spraying keeps the accelerators fed
+when the fabric misbehaves.
+
+    PYTHONPATH=src python examples/job_ettr_quickstart.py
+"""
+import jax
+
+from repro.net.jobs import compile_job, run_job
+from repro.net.scenarios import job_scenarios
+from repro.net.sender import SenderSpec, sender_params
+from repro.net.transport import Policy
+
+WORKERS, RATE, HORIZON = 4, 32, 512
+
+# --- 1. compile the job: bytes + roofline -> schedule of collectives -----
+job = compile_job(
+    "qwen3-8b", workers=WORKERS, tp=8, iterations=1, rate=RATE, max_shard=96
+)
+print(f"{job.arch}: compute window {job.compute_ticks:.0f} ticks/iteration, "
+      f"compute:comm ratio {job.compute_comm_ratio:.2f}")
+for ph in job.phases:
+    print(f"  {ph.kind:<10} {ph.ring_steps} ring steps x "
+          f"{ph.shard_packets} pkt, may hide under "
+          f"{ph.overlap_ticks:.0f} ticks of compute")
+
+# --- 2. run it: every ring step on the shared leaf-spine fabric ----------
+scens = job_scenarios(workers=WORKERS, horizon=2048)
+spec = SenderSpec(rate_cap=RATE)
+key = jax.random.PRNGKey(0)
+print(f"\n{'scenario':<22} {'ECMP ETTR':>10} {'WAM ETTR':>10}")
+for name in ("uncontended", "pfc_storm"):
+    topo, sched = scens[name]
+    row = {}
+    for pol in (Policy.ECMP, Policy.WAM):
+        r = run_job(
+            topo, sched, spec, sender_params(pol, rate=RATE), job, key,
+            horizon=HORIZON,
+        )
+        row[pol.name] = float(r.ettr)
+    print(f"{name:<22} {row['ECMP']:>10.4f} {row['WAM']:>10.4f}")
+
+print("\nECMP pins each worker's flow to one spine: collisions (and any "
+      "event\nthat kills that spine) stall the whole synchronous job, while "
+      "WAM's\ndeterministic spray spreads every shard over all healthy "
+      "paths.")

@@ -6,8 +6,8 @@ Two sources of truth, cross-checked:
     MODEL_FLOPS = 6*N_active*D convention, parameter/activation byte
     estimates.  Used for the roofline table at full depth.
   * MEASURED — `compiled.cost_analysis()` of the dry-run.  Because XLA
-    counts a scan body once (DESIGN §6), the launch layer corrects it with
-    a one-period probe compile:  corrected = full + (L-1) * period.
+    counts a scan body once, the launch layer corrects it with a
+    one-period probe compile:  corrected = full + (L-1) * period.
 
 Hardware constants (TPU v5e class, per the brief): 197 TFLOP/s bf16,
 819 GB/s HBM, ~50 GB/s/link ICI.
@@ -30,6 +30,7 @@ __all__ = [
     "param_count",
     "param_bytes",
     "roofline_terms",
+    "job_comm_terms",
 ]
 
 PEAK_FLOPS = 197e12       # bf16 / chip
@@ -181,6 +182,52 @@ def hbm_bytes(cfg: ArchConfig, shape: ShapeSpec, chips: int) -> float:
         )
         total = pbytes + kv_bytes
     return total / chips
+
+
+def job_comm_terms(
+    cfg: ArchConfig,
+    shape: ShapeSpec,
+    *,
+    dp: int,
+    tp: int,
+) -> Dict[str, float]:
+    """Per-iteration compute/communication terms for a DP x TP training job.
+
+    This is the analytic contract between the model zoo and the job-level
+    network simulation (`repro.net.jobs`): a training iteration's exposed
+    communication is dominated by two data-parallel ring collectives over
+    the DCN-class fabric —
+
+      * allreduce of the gradients (bf16, 1/tp of the model each rank
+        holds): ring wire bytes = 2 * (dp-1)/dp * grad_bytes;
+      * allgather of the updated parameters (ZeRO-style sharded optimizer
+        states): ring wire bytes = (dp-1)/dp * param_bytes / tp.
+
+    Compute is the roofline compute term of one step on dp*tp chips.  The
+    returned dict carries bytes (exact from the config) and seconds (from
+    the HW constants); `repro.net.jobs.compile_job` converts them into
+    simulator packets and ticks.
+    """
+    if dp < 2:
+        raise ValueError(f"job_comm_terms needs dp >= 2 ring workers, got {dp}")
+    chips = dp * tp
+    grad_itemsize = 2  # bf16 gradients on the wire regardless of param dtype
+    grad_bytes = param_count(cfg)["total"] * grad_itemsize / tp
+    pbytes = param_bytes(cfg) / tp
+    t_compute_s = train_flops(cfg, shape) / (chips * PEAK_FLOPS)
+    allreduce_wire = 2.0 * (dp - 1) / dp * grad_bytes
+    allgather_wire = (dp - 1) / dp * pbytes
+    return {
+        "grad_bytes": grad_bytes,
+        "param_bytes": pbytes,
+        "allreduce_wire_bytes": allreduce_wire,
+        "allgather_wire_bytes": allgather_wire,
+        "t_compute_s": t_compute_s,
+        "t_allreduce_s": allreduce_wire / ICI_BW,
+        "t_allgather_s": allgather_wire / ICI_BW,
+        "compute_comm_ratio": t_compute_s
+        / max((allreduce_wire + allgather_wire) / ICI_BW, 1e-12),
+    }
 
 
 def roofline_terms(

@@ -1,6 +1,6 @@
 """Whack-a-Mole core: deterministic packet spraying with discrepancy bounds.
 
-Public API re-exports.  See DESIGN.md §1 for the paper -> module map.
+Public API re-exports.  See docs/PAPER_MAP.md for the paper -> module map.
 """
 from repro.core.bitrev import bit_reverse32, theta
 from repro.core.profile import (

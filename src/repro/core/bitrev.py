@@ -34,7 +34,13 @@ def bit_reverse32(x):
 def theta(j, ell: int):
     """theta(j, ell): reverse the ell LSBs of j (paper §4).
 
-    Returns uint32 values in [0, 2**ell).
+    Returns uint32 values in [0, 2**ell).  The paper's worked example —
+    ell=10, j=249 (0011111001b) reverses to 1001111100b:
+
+    >>> int(theta(249, 10))
+    636
+    >>> int(theta(636, 10))   # theta is an involution on ell-bit ints
+    249
     """
     if not (1 <= ell <= 32):
         raise ValueError(f"ell must be in [1, 32], got {ell}")

@@ -115,6 +115,12 @@ def quantize_profile(p, ell: int) -> PathProfile:
     remainders.  This is the canonical way to enter the discrete-integer
     domain the paper requires (§2: avoid cross-platform float inconsistency
     *after* this single quantization point).
+
+    >>> prof = quantize_profile([0.5, 0.25, 0.25], ell=4)   # m = 16 balls
+    >>> [int(x) for x in prof.b]
+    [8, 4, 4]
+    >>> int(prof.b.sum()) == prof.m
+    True
     """
     return make_profile(quantize_counts(p, ell), ell)
 

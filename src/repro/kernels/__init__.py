@@ -1,3 +1,10 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Device kernels for the paper's compute hot-spots (OPTIONAL layer).
+
+Each kernel ships as <name>.py (the Pallas implementation) plus an entry
+in `ops.py` (backend dispatch: pallas / reference / auto) and `ref.py`
+(the numpy/jnp oracle it is tested against).  Only hot-spots the paper
+itself optimizes get a kernel: spray-key path selection
+(`spray_select.py`), LT fountain encoding (`lt_encode.py`), and the
+attention kernels the training workloads use (`flash_attention.py`,
+`flash_decode.py`).
+"""

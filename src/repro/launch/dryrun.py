@@ -1,7 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# ^ MUST precede every other import: jax locks the device count on first init.
-
 """Multi-pod dry-run: lower + compile every (arch x shape) cell on the
 production mesh and extract memory / cost / collective analyses.
 
@@ -11,8 +7,11 @@ production mesh and extract memory / cost / collective analyses.
 Proves (per brief): the sharding config is coherent (SPMD partitioning
 succeeds), the step fits (memory_analysis), and yields the roofline terms
 (cost_analysis + HLO collective parse, scan-corrected by a one-period probe
-compile — see DESIGN §6).
+compile: XLA counts a scan body once, so corrected = full + (L-1) * period).
 """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every jax import: jax locks the device count on first init.
 import argparse
 import json
 import time

@@ -1,5 +1,6 @@
 """Multipath network substrate: fabric model, shared leaf-spine topology,
-unified sender engine, transports, collectives, scenario library, coding."""
+unified sender engine, transports, collectives, scenario library, coding,
+and the job layer (training steps compiled into collective schedules)."""
 from repro.net.fabric import FabricParams, FabricState, fabric_tick, init_fabric
 from repro.net.sender import (
     SenderParams,
@@ -7,6 +8,7 @@ from repro.net.sender import (
     completion_need,
     policy_sweep_params,
     run_flows,
+    run_flows_sized,
     run_message,
     run_message_on,
     sender_params,
@@ -46,7 +48,19 @@ from repro.net.collectives import (
     step_cct_shared,
     sweep_ring_cct_shared,
 )
-from repro.net.scenarios import SCENARIOS
+from repro.net.scenarios import SCENARIOS, job_scenarios
+from repro.net.jobs import (
+    JobPhase,
+    JobResult,
+    JobSchedule,
+    compile_job,
+    job_ettr,
+    run_job,
+    run_job_steps,
+    sweep_job,
+    sweep_job_steps,
+    total_packets,
+)
 from repro.net.fountain import (
     decode_overhead_curve,
     encode,

@@ -21,9 +21,12 @@ over per-step PRNG keys), and `sweep_ring_cct_shared` additionally vmaps
 over a batched `SenderParams` so policy/config comparisons share that same
 single program.
 
-ETTR (effective training time ratio) for a training job with per-iteration
-compute time C:  ETTR = sum_i (C + CCT_ideal) / sum_i (C + CCT_i), where
-CCT_ideal is the no-degradation, perfectly-balanced fluid bound.
+ETTR here is the per-collective form for a job with per-iteration compute
+time C:  ETTR = sum_i (C + CCT_ideal) / sum_i (C + CCT_i), where CCT_ideal
+is the no-degradation, perfectly-balanced fluid bound.  The job-level
+pipeline — model configs compiled into whole-iteration collective
+schedules with overlap-aware exposed communication, ETTR = compute /
+(compute + exposed) — lives in `repro.net.jobs`.
 """
 from __future__ import annotations
 

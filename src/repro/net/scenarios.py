@@ -24,6 +24,12 @@ All schedules are host-built numpy (cheap, done once) and deterministic
 given their arguments — scenario draws differ only through the PRNG key
 passed to the simulation, so sweeps vmap over keys with one compiled step.
 `SCENARIOS` maps name -> zero-config constructor for registry-style use.
+
+`job_scenarios` re-places the same contention patterns onto a ring of
+training workers (worker w -> worker (w+1) % W) so the job layer
+(`repro.net.jobs`) can run a whole training iteration's collective schedule
+— allreduce grads, allgather params — against every scenario with one
+shared topology shape.
 """
 from __future__ import annotations
 
@@ -49,6 +55,8 @@ __all__ = [
     "pfc_storm",
     "crossjob_background",
     "SCENARIOS",
+    "job_scenarios",
+    "JOB_SCENARIO_NAMES",
 ]
 
 Scenario = Tuple[TopologyParams, EventSchedule]
@@ -61,6 +69,68 @@ def _schedule(cap_scale: np.ndarray, bg: np.ndarray) -> EventSchedule:
         cap_scale=jnp.asarray(cap_scale, jnp.float32),
         bg_arrivals=jnp.asarray(bg, jnp.float32),
     )
+
+
+# --- event builders (shared by the pair scenarios and the ring job
+# scenarios below: events are a property of the leaf-spine link grid, not
+# of the flow placement) -------------------------------------------------
+
+def _flap_caps(
+    n_leaves: int, n_spines: int, links: int, horizon: int,
+    period: int, duty: float, spine: int,
+) -> np.ndarray:
+    """Capacity scales for one spine's links flapping on a duty cycle."""
+    cap = np.ones((horizon, links), np.float32)
+    down_phase = (np.arange(horizon) % period) < duty * period
+    for leaf in range(n_leaves):
+        cap[down_phase, uplink_id(leaf, spine, n_leaves, n_spines)] = 0.0
+        cap[down_phase, downlink_id(spine, leaf, n_leaves, n_spines)] = 0.0
+    return cap
+
+
+def _storm_caps(
+    n_leaves: int, n_spines: int, links: int, horizon: int,
+    start: int, spread: int, duration: int,
+) -> np.ndarray:
+    """Capacity scales for a PFC pause storm spreading upstream from the
+    downlink spine0 -> leaf 1 (waves every `spread` ticks, clearing at
+    start + duration)."""
+    cap = np.ones((horizon, links), np.float32)
+    t = np.arange(horizon)
+    end = start + duration
+    waves = [
+        [downlink_id(0, 1, n_leaves, n_spines)],
+        [uplink_id(leaf, 0, n_leaves, n_spines) for leaf in range(n_leaves)],
+        [
+            downlink_id(0, leaf, n_leaves, n_spines)
+            for leaf in range(n_leaves)
+            if leaf != 1
+        ],
+    ]
+    for wave, wave_links in enumerate(waves):
+        active = (t >= start + wave * spread) & (t < end)
+        for link in wave_links:
+            cap[active, link] = 0.0
+    return cap
+
+
+def _background_arrivals(
+    capacity: np.ndarray, horizon: int,
+    load: float, burst_len: int, gap_len: int, seed: int,
+) -> np.ndarray:
+    """On/off background bursts at `load` * capacity on half the links,
+    with randomized phases (deterministic given `seed`)."""
+    rng = np.random.default_rng(seed)
+    L = capacity.shape[0]
+    hit = rng.permutation(L)[: L // 2]
+    bg = np.zeros((horizon, L), np.float32)
+    t = np.arange(horizon)
+    cycle = burst_len + gap_len
+    for link in hit:
+        phase = int(rng.integers(cycle))
+        on = ((t + phase) % cycle) < burst_len
+        bg[on, link] = load * capacity[link]
+    return bg
 
 
 def incast(
@@ -114,11 +184,7 @@ def link_flap(
     pairs = [(2 * f, 2 * f + 1) for f in range(flows)]
     n_leaves = 2 * flows
     topo = leaf_spine(n_leaves, n_spines, pairs, uplink_capacity=link_capacity, **kw)
-    cap = np.ones((horizon, topo.links), np.float32)
-    down_phase = (np.arange(horizon) % period) < duty * period
-    for leaf in range(n_leaves):
-        cap[down_phase, uplink_id(leaf, spine, n_leaves, n_spines)] = 0.0
-        cap[down_phase, downlink_id(spine, leaf, n_leaves, n_spines)] = 0.0
+    cap = _flap_caps(n_leaves, n_spines, topo.links, horizon, period, duty, spine)
     return topo, _schedule(cap, np.zeros_like(cap))
 
 
@@ -161,22 +227,7 @@ def pfc_storm(
     pairs = [(2 * f, 2 * f + 1) for f in range(flows)]
     n_leaves = 2 * flows
     topo = leaf_spine(n_leaves, n_spines, pairs, uplink_capacity=link_capacity, **kw)
-    cap = np.ones((horizon, topo.links), np.float32)
-    t = np.arange(horizon)
-    end = start + duration
-    waves = [
-        [downlink_id(0, 1, n_leaves, n_spines)],
-        [uplink_id(leaf, 0, n_leaves, n_spines) for leaf in range(n_leaves)],
-        [
-            downlink_id(0, leaf, n_leaves, n_spines)
-            for leaf in range(n_leaves)
-            if leaf != 1
-        ],
-    ]
-    for wave, links in enumerate(waves):
-        active = (t >= start + wave * spread) & (t < end)
-        for link in links:
-            cap[active, link] = 0.0
+    cap = _storm_caps(n_leaves, n_spines, topo.links, horizon, start, spread, duration)
     return topo, _schedule(cap, np.zeros_like(cap))
 
 
@@ -197,18 +248,10 @@ def crossjob_background(
     randomized phases (deterministic given `seed`)."""
     pairs = [(2 * f, 2 * f + 1) for f in range(flows)]
     topo = leaf_spine(2 * flows, n_spines, pairs, uplink_capacity=link_capacity, **kw)
-    rng = np.random.default_rng(seed)
-    L = topo.links
-    hit = rng.permutation(L)[: L // 2]
-    bg = np.zeros((horizon, L), np.float32)
-    t = np.arange(horizon)
-    cycle = burst_len + gap_len
-    cap_np = np.asarray(topo.capacity)
-    for link in hit:
-        phase = int(rng.integers(cycle))
-        on = ((t + phase) % cycle) < burst_len
-        bg[on, link] = load * cap_np[link]
-    return topo, _schedule(np.ones((horizon, L), np.float32), bg)
+    bg = _background_arrivals(
+        np.asarray(topo.capacity), horizon, load, burst_len, gap_len, seed
+    )
+    return topo, _schedule(np.ones((horizon, topo.links), np.float32), bg)
 
 
 # name -> default-args constructor (callers override via functools.partial
@@ -221,3 +264,97 @@ SCENARIOS: Dict[str, callable] = {
     "pfc_storm": pfc_storm,
     "crossjob_background": crossjob_background,
 }
+
+
+# --- job scenarios: the same contention patterns on a RING placement ------
+
+JOB_SCENARIO_NAMES = (
+    "uncontended",
+    "oversubscribed",
+    "link_flap",
+    "straggler_worker",
+    "pfc_storm",
+    "crossjob_background",
+)
+
+
+def job_scenarios(
+    workers: int = 4,
+    n_spines: int = 4,
+    *,
+    horizon: int = 2048,
+    link_capacity: float = 8.0,
+    host_rate: float = 32.0,
+    oversub_ratio: float = 2.0,
+    flap_period: int = 128,
+    flap_duty: float = 0.5,
+    storm_start: int = 48,
+    storm_spread: int = 32,
+    storm_duration: int = 384,
+    bg_load: float = 0.6,
+    bg_burst: int = 64,
+    bg_gap: int = 64,
+    bg_seed: int = 0,
+    **kw,
+) -> Dict[str, Scenario]:
+    """The contention library re-placed for a training job's ring collective:
+    worker w on leaf w sends to leaf (w+1) % workers, so every entry shares
+    ONE topology shape and differs only in its event schedule / capacities.
+
+    This is what `repro.net.jobs` composes with: a job's whole per-iteration
+    schedule of collectives runs against each scenario, with the event
+    schedules (flap duty cycles, storm waves, background bursts) positioned
+    on the job's planned timeline — `link_flap` hits mid-iteration,
+    `straggler_worker` persists across iterations.
+
+    Returns {name: (TopologyParams, EventSchedule)} for every entry in
+    `JOB_SCENARIO_NAMES`.  `uncontended` is the ETTR reference point; all
+    others degrade it.
+    """
+    pairs = [(w, (w + 1) % workers) for w in range(workers)]
+    ring = lambda cap: leaf_spine(  # noqa: E731
+        workers, n_spines, pairs, uplink_capacity=cap, **kw
+    )
+    topo = ring(link_capacity)
+    n_leaves, L = workers, topo.links
+    out: Dict[str, Scenario] = {
+        "uncontended": (topo, null_schedule(L)),
+        "oversubscribed": (
+            ring(host_rate / (oversub_ratio * n_spines)),
+            null_schedule(L),
+        ),
+        "link_flap": (
+            topo,
+            _schedule(
+                _flap_caps(
+                    n_leaves, n_spines, L, horizon, flap_period, flap_duty, 0
+                ),
+                np.zeros((horizon, L), np.float32),
+            ),
+        ),
+        "straggler_worker": straggler_worker(
+            workers, n_spines, link_capacity=link_capacity, **kw
+        ),
+        "pfc_storm": (
+            topo,
+            _schedule(
+                _storm_caps(
+                    n_leaves, n_spines, L, horizon,
+                    storm_start, storm_spread, storm_duration,
+                ),
+                np.zeros((horizon, L), np.float32),
+            ),
+        ),
+        "crossjob_background": (
+            topo,
+            _schedule(
+                np.ones((horizon, L), np.float32),
+                _background_arrivals(
+                    np.asarray(topo.capacity), horizon,
+                    bg_load, bg_burst, bg_gap, bg_seed,
+                ),
+            ),
+        ),
+    }
+    assert tuple(out) == JOB_SCENARIO_NAMES
+    return out

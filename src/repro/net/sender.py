@@ -85,6 +85,7 @@ __all__ = [
     "run_message_on",
     "run_message",
     "run_flows",
+    "run_flows_sized",
     "sweep_message",
     "sweep_flows",
 ]
@@ -465,24 +466,20 @@ def run_message(
     )
 
 
-@functools.partial(jax.jit, static_argnames=("spec", "n_packets", "horizon"))
-def run_flows(
+def _run_flows(
     topo: TopologyParams,
     sched: EventSchedule,
     spec: SenderSpec,
     sp: SenderParams,
-    n_packets: int,
+    n_packets,
     key: jax.Array,
     horizon: int = 4096,
 ) -> SimResult:
-    """F coupled flows (lead=(F,)), one `n_packets` message each, on one
-    shared fabric — the same `sender_tick` core vmapped per flow for path
-    assignment and control, with ALL arrivals feeding `shared_fabric_tick`
-    so one flow's burst raises the queues every other flow sees.
+    """Shared body of `run_flows` / `run_flows_sized` — see `run_flows`.
 
-    Flows decorrelate their spray seeds (paper §4: per-source (sa, sb));
-    flow 0 keeps `sp`'s seed.  Returns a SimResult with a leading F axis on
-    every field (`cct[F]`, `sent_total[F, n]`, ...).
+    `n_packets` may be a Python int (the static-size jit below) or a traced
+    int32 scalar (`run_flows_sized`): the sender core only does arithmetic
+    with it, nothing shape-depends on the message size.
     """
     F, n = topo.flows, topo.n
     m = 1 << spec.ell
@@ -528,6 +525,50 @@ def run_flows(
         received_fn=lambda s: s.received, dropped_fn=lambda s: s.dropped,
         k_loop=k_loop,
     )
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "n_packets", "horizon"))
+def run_flows(
+    topo: TopologyParams,
+    sched: EventSchedule,
+    spec: SenderSpec,
+    sp: SenderParams,
+    n_packets: int,
+    key: jax.Array,
+    horizon: int = 4096,
+) -> SimResult:
+    """F coupled flows (lead=(F,)), one `n_packets` message each, on one
+    shared fabric — the same `sender_tick` core vmapped per flow for path
+    assignment and control, with ALL arrivals feeding `shared_fabric_tick`
+    so one flow's burst raises the queues every other flow sees.
+
+    Flows decorrelate their spray seeds (paper §4: per-source (sa, sb));
+    flow 0 keeps `sp`'s seed.  Returns a SimResult with a leading F axis on
+    every field (`cct[F]`, `sent_total[F, n]`, ...).
+    """
+    return _run_flows(topo, sched, spec, sp, n_packets, key, horizon)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "horizon"))
+def run_flows_sized(
+    topo: TopologyParams,
+    sched: EventSchedule,
+    spec: SenderSpec,
+    sp: SenderParams,
+    n_packets: jax.Array,
+    key: jax.Array,
+    horizon: int = 4096,
+) -> SimResult:
+    """`run_flows` with the message size TRACED (int32 scalar).
+
+    Nothing in the sender core shape-depends on `n_packets` — it only feeds
+    the completion threshold and the ARQ emit budget — so the payload can be
+    a `jax.vmap` axis like any `SenderParams` field.  This is what lets the
+    job layer (`repro.net.jobs`) run several model configs' collective
+    schedules (different shard sizes per model and per phase) as ONE
+    compiled program per scenario instead of one per distinct size.
+    """
+    return _run_flows(topo, sched, spec, sp, n_packets, key, horizon)
 
 
 @functools.partial(jax.jit, static_argnames=("spec", "n_packets", "horizon"))

@@ -1,0 +1,199 @@
+"""Job layer: schedule conservation, ETTR bounds/ordering, sweep identity.
+
+Covers the compiler contract (total bytes scheduled == sum of collective
+payloads, step table consistency, planned offsets monotone within an
+iteration), the metric contract (ETTR in (0, 1]; no contention never
+scores below a PFC storm), the traced-size sender path (`run_flows_sized`
+== the static-size `run_flows` bit for bit), and the one-compile sweep
+(`sweep_job_steps` == per-policy `run_job_steps` loops).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.net.jobs import (
+    compile_job,
+    job_ettr,
+    job_step_inputs,
+    run_job,
+    run_job_steps,
+    scheduled_events,
+    step_table,
+    sweep_job,
+    sweep_job_steps,
+    total_packets,
+)
+from repro.net.scenarios import JOB_SCENARIO_NAMES, job_scenarios
+from repro.net.sender import (
+    SenderSpec,
+    policy_sweep_params,
+    run_flows,
+    run_flows_sized,
+    sender_params,
+)
+from repro.net.topology import leaf_spine, null_schedule
+from repro.net.transport import Policy
+
+WORKERS = 4
+RATE = 32
+SPEC = SenderSpec(rate_cap=RATE)
+
+
+def tiny_job(arch, iterations=1, **kw):
+    return compile_job(
+        arch, workers=WORKERS, tp=8, iterations=iterations,
+        rate=RATE, min_shard=16, max_shard=48, **kw
+    )
+
+
+@pytest.mark.parametrize("arch", ["xlstm-350m", "qwen3-8b"])
+def test_schedule_conservation(arch):
+    """Total packets injected == sum of collective payloads, via both the
+    phase view and the flattened step table, for 2 model configs."""
+    job = tiny_job(arch, iterations=2)
+    shard, phase_idx, offsets = step_table(job)
+    assert shard.shape == phase_idx.shape == offsets.shape
+    assert len(shard) == job.total_steps
+    # phase view == step-table view
+    phase_total = job.workers * job.iterations * sum(
+        p.payload_packets for p in job.phases
+    )
+    assert total_packets(job) == phase_total == job.workers * int(shard.sum())
+    # every step's shard matches its phase's shard size
+    for s, pi in zip(shard, phase_idx):
+        assert s == job.phases[pi].shard_packets
+    # planned offsets strictly advance step to step
+    assert np.all(np.diff(offsets) > 0)
+
+
+def test_compile_job_structure():
+    job = tiny_job("qwen3-8b")
+    kinds = [p.kind for p in job.phases]
+    assert kinds == ["allreduce", "allgather"]
+    ar, ag = job.phases
+    assert ar.ring_steps == 2 * (WORKERS - 1)
+    assert ag.ring_steps == WORKERS - 1
+    assert job.compute_ticks > 0 and job.tick_seconds > 0
+    # gradient allreduce gets the larger overlap budget by default
+    assert ar.overlap_ticks > ag.overlap_ticks
+    no_ag = tiny_job("qwen3-8b", include_allgather=False)
+    assert [p.kind for p in no_ag.phases] == ["allreduce"]
+
+
+def test_run_flows_sized_matches_static():
+    """The traced-size entry point is bit-identical to the static one."""
+    topo = leaf_spine(
+        WORKERS, 4, [(w, (w + 1) % WORKERS) for w in range(WORKERS)]
+    )
+    sched = null_schedule(topo.links)
+    sp = sender_params(Policy.WAM, rate=RATE)
+    key = jax.random.PRNGKey(3)
+    r_static = run_flows(topo, sched, SPEC, sp, 48, key, 256)
+    r_sized = run_flows_sized(
+        topo, sched, SPEC, sp, jnp.int32(48), key, 256
+    )
+    for field in ("cct", "sent_total", "dropped_total", "received"):
+        assert np.array_equal(
+            np.asarray(getattr(r_static, field)),
+            np.asarray(getattr(r_sized, field)),
+        ), field
+
+
+def test_job_scenarios_shapes():
+    scens = job_scenarios(workers=WORKERS, n_spines=4, horizon=256)
+    assert tuple(scens) == JOB_SCENARIO_NAMES
+    for name, (topo, sched) in scens.items():
+        assert topo.flows == WORKERS, name
+        assert sched.cap_scale.shape[-1] == topo.links, name
+    # the oversubscribed ring really has less uplink capacity
+    assert float(scens["oversubscribed"][0].capacity[0]) < float(
+        scens["uncontended"][0].capacity[0]
+    )
+
+
+def test_ettr_bounds_and_contention_ordering():
+    """ETTR in (0, 1]; an uncontended fabric never scores below a PFC
+    storm (the storm can only add exposed communication)."""
+    job = tiny_job("xlstm-350m")
+    scens = job_scenarios(workers=WORKERS, horizon=512)
+    key = jax.random.PRNGKey(0)
+    ettrs = {}
+    for name in ("uncontended", "pfc_storm"):
+        topo, sched = scens[name]
+        r = run_job(
+            topo, sched, SPEC, sender_params(Policy.WAM, rate=RATE), job,
+            key, horizon=384,
+        )
+        assert 0.0 < float(r.ettr) <= 1.0, name
+        assert float(r.exposed_comm_ticks) >= 0.0, name
+        ettrs[name] = float(r.ettr)
+    assert ettrs["uncontended"] >= ettrs["pfc_storm"]
+
+
+def test_job_ettr_math():
+    """Closed-form check: exposed = max(0, phase cct - overlap), summed."""
+    job = tiny_job("xlstm-350m")
+    S = job.total_steps
+    # every step exactly at 10 ticks
+    cct = np.full((S,), 10.0)
+    ettr, exposed = job_ettr(job, cct)
+    want = sum(
+        max(0.0, 10.0 * p.ring_steps - p.overlap_ticks) for p in job.phases
+    )
+    assert np.isclose(exposed, want)
+    assert np.isclose(ettr, job.compute_ticks / (job.compute_ticks + want))
+    # fully hidden communication -> ETTR exactly 1
+    tiny = np.full((S,), 1e-3)
+    ettr1, _ = job_ettr(job, tiny)
+    assert ettr1 == 1.0
+
+
+def test_scheduled_events_offsets():
+    """Re-based schedules read the scenario rows from each planned offset,
+    persisting the last row."""
+    scens = job_scenarios(workers=WORKERS, horizon=64)
+    topo, sched = scens["pfc_storm"]
+    offsets = np.array([0, 32, 1000])
+    out = scheduled_events(sched, offsets, 8)
+    cap = np.asarray(sched.cap_scale)
+    got = np.asarray(out.cap_scale)
+    assert got.shape == (3, 8, topo.links)
+    assert np.array_equal(got[0], cap[:8])
+    assert np.array_equal(got[1], cap[32:40])
+    assert np.array_equal(got[2], np.broadcast_to(cap[-1], (8,) + cap.shape[1:]))
+
+
+def test_sweep_job_matches_per_policy_runs():
+    """The one-compile sweep reproduces the per-policy scalar runs."""
+    jobs = [tiny_job("xlstm-350m"), tiny_job("qwen3-8b")]
+    scens = job_scenarios(workers=WORKERS, horizon=512)
+    topo, sched = scens["link_flap"]
+    sp = policy_sweep_params((Policy.ECMP, Policy.WAM), rate=RATE)
+    keys = jax.random.split(jax.random.PRNGKey(7), 2)
+    out = sweep_job(topo, sched, SPEC, sp, jobs, keys, horizon=384)
+    S = jobs[0].total_steps
+    assert out["cct"].shape == (2, 2, 2, S)
+    assert out["ettr"].shape == (2, 2, 2)
+    assert np.all(out["ettr"] > 0.0) and np.all(out["ettr"] <= 1.0)
+
+    scheds, shard = job_step_inputs(jobs, sched, 384)
+    for pi, pol in enumerate((Policy.ECMP, Policy.WAM)):
+        spi = sender_params(pol, rate=RATE)
+        for di in range(2):
+            for m in range(2):
+                want = run_job_steps(
+                    topo,
+                    jax.tree.map(lambda x: x[m], scheds),
+                    SPEC, spi, shard[m], keys[di], 384,
+                )
+                assert np.array_equal(
+                    out["cct"][pi, di, m], np.asarray(want)
+                ), (pol, di, m)
+
+
+def test_job_step_inputs_rejects_mixed_structure():
+    jobs = [tiny_job("xlstm-350m"), tiny_job("qwen3-8b", iterations=2)]
+    sched = null_schedule(32)
+    with pytest.raises(ValueError, match="structure"):
+        job_step_inputs(jobs, sched, 64)

@@ -1,0 +1,60 @@
+#!/usr/bin/env python
+"""Relative-link checker for the repo's markdown docs.
+
+Scans the given markdown files (default: README.md, ROADMAP.md, docs/*.md)
+for inline links/images `[text](target)` and verifies every relative
+target exists on disk (anchors `#...` within a file are stripped; external
+`http(s)://` and `mailto:` targets are skipped).  Exits non-zero listing
+every broken link — the docs step of `make check` / CI.
+
+    python tools/check_links.py            # default file set
+    python tools/check_links.py A.md B.md  # explicit files
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+# inline links [text](target) — skips reference-style and bare URLs; good
+# enough for this repo's docs, and conservative (no false "broken" reports
+# from fenced code because targets with spaces/backticks are ignored).
+LINK_RE = re.compile(r"\[[^\]\[]*\]\(([^)\s]+)\)")
+
+DEFAULT_FILES = ("README.md", "ROADMAP.md", "docs/*.md")
+
+
+def check_file(path: str) -> list[str]:
+    errors = []
+    base = os.path.dirname(os.path.abspath(path))
+    with open(path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            for target in LINK_RE.findall(line):
+                if target.startswith(("http://", "https://", "mailto:")):
+                    continue
+                rel = target.split("#", 1)[0]
+                if not rel:   # pure in-page anchor
+                    continue
+                if not os.path.exists(os.path.join(base, rel)):
+                    errors.append(f"{path}:{lineno}: broken link -> {target}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    patterns = argv or list(DEFAULT_FILES)
+    files = sorted({f for p in patterns for f in glob.glob(p)})
+    if not files:
+        print(f"check_links: no files match {patterns}", file=sys.stderr)
+        return 2
+    errors = []
+    for path in files:
+        errors.extend(check_file(path))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"check_links: {len(files)} files, {len(errors)} broken links")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
