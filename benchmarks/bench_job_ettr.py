@@ -24,7 +24,7 @@ import jax
 import numpy as np
 
 from benchmarks import common
-from benchmarks.common import aot_compile, emit, timed_call
+from benchmarks.common import aot_compile, check_finished, emit, timed_call
 from repro.net.jobs import compile_job, job_ettr, job_step_inputs, sweep_job_steps
 from repro.net.scenarios import job_scenarios
 from repro.net.sender import SenderSpec, policy_sweep_params
@@ -72,8 +72,12 @@ def main() -> None:
             sweep_job_steps, topo, scheds, spec, sp, shard, keys,
             horizon=horizon,
         )
-        cct, run_s = timed_call(swept, topo, scheds, sp, shard, keys)
+        (cct, finished), run_s = timed_call(
+            swept, topo, scheds, sp, shard, keys
+        )
         cct = np.asarray(cct)  # [P, D, M, S]
+        # gate precondition: a sentinel row would fake a flat tail
+        check_finished(f"job_ettr/{scen_name}", finished)
 
         ettr = np.zeros(cct.shape[:-1])
         for m, job in enumerate(jobs):

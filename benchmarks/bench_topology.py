@@ -24,7 +24,7 @@ import jax
 import numpy as np
 
 from benchmarks import common
-from benchmarks.common import aot_compile, emit, timed_call
+from benchmarks.common import aot_compile, check_finished, emit, timed_call
 from repro.net.scenarios import (
     crossjob_background,
     incast,
@@ -101,6 +101,8 @@ def main() -> None:
         )
         r, sweep_run_s = timed_call(swept, topo, sched, sp, keys)
         ccts = np.asarray(r.cct)  # [policies, draws, F]
+        # gate precondition: p99s over sentinel rows are not measurements
+        check_finished(f"topo/{scen_name}", r.finished)
 
         # --- baseline: the per-policy-compile idiom it replaces ---
         base_ccts, base_compile_s, base_run_s = _baseline_per_policy(

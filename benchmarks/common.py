@@ -21,12 +21,14 @@ import time
 from typing import Callable, Dict, List, Tuple
 
 import jax
+import numpy as np
 
 __all__ = [
     "timeit",
     "emit",
     "aot_compile",
     "timed_call",
+    "check_finished",
     "RESULTS",
     "COMPILE_STATS",
     "SMOKE",
@@ -79,6 +81,25 @@ def emit(name: str, us_per_call: float, derived: str = "", **fields) -> None:
             }
         )
     print(f"{name},{us_per_call:.2f},{derived}")
+
+
+def check_finished(name: str, finished) -> None:
+    """Fail LOUDLY when any gated flow hit the horizon sentinel.
+
+    An unfinished flow reports `cct == horizon`, which silently flattens
+    every tail-latency statistic and caps ETTR exposure — a gate computed
+    over such rows compares sentinels, not completions.  Benchmarks that
+    gate on WAM-vs-ECMP must pass their `SimResult.finished` masks (any
+    shape) through this before emitting the gate row.
+    """
+    arr = np.asarray(finished)
+    if arr.size and not arr.all():
+        frac = float(1.0 - arr.mean())
+        raise RuntimeError(
+            f"{name}: {frac:.1%} of gated flows unfinished (cct == horizon "
+            f"sentinel) — the gate would compare sentinels, not completions; "
+            f"raise the horizon"
+        )
 
 
 def aot_compile(jit_fn, *args, **kwargs) -> Tuple[Callable, float]:

@@ -28,6 +28,7 @@ SECTION_MODULES = [
     ("sec12_cct_ettr", "bench_cct"),
     ("topology_scenarios", "bench_topology"),
     ("job_ettr", "bench_job_ettr"),
+    ("cluster_contention", "bench_cluster"),
     ("spray_throughput", "bench_spray_throughput"),
     ("sprayed_collective_tpu", "bench_sprayed_collective"),
     ("fountain_transport", "bench_fountain"),

@@ -1,0 +1,59 @@
+"""Emergent cross-job contention in 60 seconds.
+
+Two training jobs — an SSM and a dense transformer — co-scheduled on ONE
+leaf–spine fabric.  On disjoint leaves ("uncontended") their solo and
+contended runs are identical; with overlapped rings every uplink is shared
+and each job's collectives slow the other down — interference that EMERGES
+from the second job's actual traffic, not from an injected arrival trace.
+Deterministic spraying (WAM) keeps both jobs' ETTR above flow-hash routing
+(ECMP) precisely because it refuses to stack both jobs' packets onto the
+same colliding spine path.
+
+    PYTHONPATH=src python examples/cluster_contention_demo.py
+"""
+import jax
+import numpy as np
+
+from repro.net.cluster import run_cluster
+from repro.net.jobs import compile_job
+from repro.net.scenarios import cluster_scenarios
+from repro.net.sender import SenderSpec, sender_params
+from repro.net.transport import Policy
+
+WORKERS, RATE, HORIZON = 4, 32, 512
+
+# --- 1. compile two heterogeneous jobs -----------------------------------
+jobs = [
+    compile_job("xlstm-350m", workers=WORKERS, tp=8, iterations=1,
+                rate=RATE, max_shard=96),
+    compile_job("qwen3-8b", workers=WORKERS, tp=8, iterations=1,
+                rate=RATE, max_shard=96),
+]
+for job in jobs:
+    print(f"{job.arch}: {job.total_steps} ring steps/iteration, "
+          f"compute:comm ratio {job.compute_comm_ratio:.2f}")
+
+# --- 2. co-schedule them on one fabric, contended vs not -----------------
+scens = cluster_scenarios(jobs, horizon=2048)
+spec = SenderSpec(rate_cap=RATE)
+key = jax.random.PRNGKey(0)
+
+print(f"\n{'scenario':<18} {'policy':<6} "
+      f"{'job0 ETTR (xslow)':>18} {'job1 ETTR (xslow)':>18} {'jain':>7}")
+for name in ("uncontended", "rings_overlapped", "staggered_start"):
+    cluster, topo, sched = scens[name]
+    for pol in (Policy.ECMP, Policy.WAM):
+        r = run_cluster(
+            topo, sched, spec, sender_params(pol, rate=RATE), cluster, key,
+            horizon=HORIZON,
+        )
+        cells = [
+            f"{r.ettr[j]:.4f} (x{r.slowdown[j]:.2f})" for j in range(2)
+        ]
+        print(f"{name:<18} {pol.name:<6} {cells[0]:>18} {cells[1]:>18} "
+              f"{float(r.jain):>7.4f}")
+
+print("\nThe solo baselines run INSIDE the same compiled program (every "
+      "other\njob's flows silenced to zero-size), so the slowdown column "
+      "is a paired\ncomparison: x1.00 on disjoint leaves proves the "
+      "contention above it is\nemergent, not simulator noise.")

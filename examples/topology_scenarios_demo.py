@@ -58,11 +58,12 @@ print("\n== ring all-reduce with a straggler worker (shared fabric) ==")
 topo, sched = straggler_worker(workers=4, n_spines=4, factor=0.25)
 ccfg = CollectiveConfig(workers=4, shard_packets=256, horizon=2048)
 for pol in POLICIES:
-    total, per_step = allreduce_cct_shared(
+    total, per_step, finished = allreduce_cct_shared(
         topo, sched, TransportConfig(policy=pol, rate=32), ccfg,
         jax.random.PRNGKey(1),
     )
+    note = "" if bool(finished.all()) else "  (hit horizon!)"
     print(
         f"{pol.name:5s} total CCT = {float(total):7.1f}"
-        f"  per-step max = {float(per_step.max()):6.1f}"
+        f"  per-step max = {float(per_step.max()):6.1f}{note}"
     )

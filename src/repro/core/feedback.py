@@ -158,20 +158,35 @@ def restore_path(
 ) -> ControllerState:
     """Graceful re-ramp of a recovered path (§1 'graceful adaptation'):
     shave floor(beta * b(i)) from every other path, give to `path`
-    (embodiment 3 with Kbar = {path})."""
+    (embodiment 3 with Kbar = {path}).
+
+    Small-m guard: when every other path holds so few balls that
+    floor(beta * b(i)) == 0, the shave would be empty and the recovered
+    path could never re-ramp (it stays starved forever on small-m
+    profiles).  In that case shave a single ball from the largest donor
+    instead — the minimum non-degenerate restore step.
+
+    With Kbar = {path} the redistribution is a direct transfer (x = sum(e),
+    y = 0 in embodiment 3's terms): every removed ball lands on `path`,
+    even when some donors' floor(beta * b) is 0 (a generic embodiment-3
+    call would leak those donors into Kbar and hand them part of the
+    restore).  The residual index r is untouched — a zero-remainder
+    redistribution never walks it.
+    """
     profile = state.profile
     b = profile.b
     n = profile.n
     idx = jnp.arange(n)
     e = jnp.where(idx != path, (beta * b).astype(jnp.int32), 0)
-    any_removal = jnp.any(e > 0)
-    b_new, r_new = jax.lax.cond(
-        any_removal,
-        lambda args: update_embodiment3(*args),
-        lambda args: (args[0], args[1]),
-        (b, state.r, e),
+    # fallback: one ball from the largest donor (no-op if donors are empty)
+    donor_b = jnp.where(idx != path, b, -1)
+    donor = jnp.argmax(donor_b)
+    one_ball = jnp.zeros_like(e).at[donor].set(
+        jnp.clip(donor_b[donor], 0, 1)
     )
-    return dataclasses.replace(state, profile=_rebuild(profile, b_new), r=r_new)
+    e = jnp.where(jnp.any(e > 0), e, one_ball)
+    b_new = (b - e).at[path].add(jnp.sum(e))
+    return dataclasses.replace(state, profile=_rebuild(profile, b_new))
 
 
 def controller_step(
@@ -196,13 +211,17 @@ def controller_step(
     state = whack_down(
         state, w, degraded_threshold=degraded_threshold, proportional=proportional
     )
-    # Recovery: pick the most under-allocated healthy path, if any.
+    # Recovery: pick the most under-allocated healthy path, if any — rank
+    # the starved set by allocation share and restore the true minimum
+    # (argmax over the bool mask would restore the *first* starved path,
+    # leaving later, more-starved paths stuck behind it indefinitely).
     m = state.profile.m
     share = state.profile.b.astype(jnp.float32) / m
     starved = (w < recovery_threshold) & (share < recovery_share)
 
     def do_restore(s):
-        return restore_path(s, jnp.argmax(starved))
+        target = jnp.argmin(jnp.where(starved, share, jnp.inf))
+        return restore_path(s, target)
 
     state = jax.lax.cond(jnp.any(starved), do_restore, lambda s: s, state)
     return state, w

@@ -75,6 +75,9 @@ def main(argv=None) -> None:
 
     print(f"\nscenario {args.scenario} ({args.draws} draws, "
           f"horizon {args.horizon}):")
+    if not bool(np.all(out["finished"])):
+        print("  WARNING: some ring steps hit the horizon sentinel — ETTR "
+              "below is an upper bound, not a measurement (raise --horizon)")
     rows = {}
     for i, pol in enumerate(policies):
         ettr = out["ettr"][i, :, 0]

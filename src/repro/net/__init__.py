@@ -48,7 +48,18 @@ from repro.net.collectives import (
     step_cct_shared,
     sweep_ring_cct_shared,
 )
-from repro.net.scenarios import SCENARIOS, job_scenarios
+from repro.net.scenarios import SCENARIOS, cluster_scenarios, job_scenarios
+from repro.net.cluster import (
+    Cluster,
+    ClusterJob,
+    ClusterResult,
+    cluster_topology,
+    jain_index,
+    link_utilization,
+    place_jobs,
+    run_cluster,
+    sweep_cluster,
+)
 from repro.net.jobs import (
     JobPhase,
     JobResult,

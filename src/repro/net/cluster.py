@@ -1,0 +1,446 @@
+"""Cluster layer: J co-scheduled training jobs contending on ONE fabric.
+
+The paper's headline metrics (CCT, ETTR) matter because training jobs SHARE
+a fabric — yet a single `repro.net.jobs` run gives a job the whole
+leaf–spine topology to itself, and the only cross-job scenario below it
+(`crossjob_background`) injects a synthetic open-loop arrival trace.  That
+trace never reacts: it cannot slow down when WaM whacks load off a hot
+link, and it cannot speed up when the foreground job stalls.  This module
+makes the interference EMERGENT instead of injected:
+
+  1. `place_jobs` maps J heterogeneous `JobSchedule`s (different models,
+     worker counts, start offsets) onto the leaves of one shared topology —
+     each job keeps its own ring placement (worker w -> worker (w+1) % W_j),
+     either on disjoint leaves (the uncontended reference) or co-located on
+     the same leaves (jobs share every uplink/downlink, the multi-tenant
+     regime PRIME and the AI-training load-balancing literature evaluate).
+  2. `cluster_round_table` aligns the jobs' flattened step tables into
+     global ROUNDS: round r runs step (r - start_j) of every job j that is
+     active then.  All active steps execute as ONE coupled-flow simulation
+     (`sender.run_flows_sized` with a per-flow size vector): a flow whose
+     job is idle or not yet started gets size 0, completes at tick 0 and
+     emits nothing.  One job's burst therefore raises the queues the other
+     job's packets sit in — and a whacked-down path sheds load the OTHER
+     job immediately feels — with no injected trace anywhere.
+  3. `run_cluster` / `sweep_cluster` keep the one-compile idiom: jobs x
+     5 policies x PRNG draws x rounds x (contended + per-job solo) variants
+     are a single XLA program per scenario.  The solo variants (every other
+     job's flows silenced to size 0, same PRNG stream) run INSIDE that
+     program, so cross-job slowdown is a paired comparison for free.
+
+Metrics beyond per-job ETTR (`jobs.job_ettr` applied per job):
+
+  * slowdown      — (compute + exposed comm, contended) / (same, solo): how
+                    much whole-job time co-location costs this job.
+  * Jain fairness — (sum x)^2 / (J * sum x^2) over x_j = 1/slowdown_j: 1.0
+                    when co-location taxes every job equally.
+  * link utilization — per-link served packets (including background) over
+                    nominal capacity x busy ticks, read straight from the
+                    shared fabric's conservation counters.
+
+Approximation note: rounds are a bulk-synchronous alignment — job A's step
+r and job B's step r start together even though real jobs drift.  This is
+the same per-step discretization the job layer already makes (actual
+completion times feed the metrics, planned times feed the event clock), and
+it is what keeps the whole cluster one `jax.vmap`-able program.  The global
+planned timeline (for positioning scenario events such as a mid-run flap)
+is anchored to job 0's planned offsets, extended at its trailing cadence
+past its end; staggered jobs read events from the rounds they are active
+in, exactly like `jobs.scheduled_events`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.net.jobs import JobSchedule, job_ettr, scheduled_events, step_table
+from repro.net.sender import SenderParams, SenderSpec, run_flows_sized
+from repro.net.topology import EventSchedule, TopologyParams, leaf_spine
+
+__all__ = [
+    "ClusterJob",
+    "Cluster",
+    "ClusterResult",
+    "place_jobs",
+    "cluster_topology",
+    "cluster_round_table",
+    "solo_size_variants",
+    "cluster_inputs",
+    "run_cluster_rounds",
+    "sweep_cluster_rounds",
+    "jain_index",
+    "link_utilization",
+    "cluster_metrics",
+    "run_cluster",
+    "sweep_cluster",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterJob:
+    """One job's placement on the shared fabric (static, host-side)."""
+
+    job: JobSchedule
+    start_step: int           # global round in which the job's step 0 runs
+    leaves: Tuple[int, ...]   # leaf hosting each worker (len == job.workers)
+
+    def __post_init__(self):
+        if len(self.leaves) != self.job.workers:
+            raise ValueError(
+                f"{self.job.arch}: {len(self.leaves)} leaves for "
+                f"{self.job.workers} workers"
+            )
+        if self.start_step < 0:
+            raise ValueError(f"start_step must be >= 0, got {self.start_step}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Cluster:
+    """J placed jobs sharing one leaf–spine fabric."""
+
+    jobs: Tuple[ClusterJob, ...]
+    n_leaves: int
+
+    @property
+    def flows(self) -> int:
+        """Total coupled flows: one per (job, worker)."""
+        return sum(cj.job.workers for cj in self.jobs)
+
+    @property
+    def rounds(self) -> int:
+        """Global rounds R = max over jobs of start_step + total_steps."""
+        return max(cj.start_step + cj.job.total_steps for cj in self.jobs)
+
+    @property
+    def flow_job(self) -> np.ndarray:
+        """int32[F] owning job index of each flow (jobs' flows contiguous)."""
+        return np.concatenate(
+            [
+                np.full(cj.job.workers, j, np.int32)
+                for j, cj in enumerate(self.jobs)
+            ]
+        )
+
+    def flow_pairs(self) -> np.ndarray:
+        """int32[F, 2] (src_leaf, dst_leaf) — each job's own ring."""
+        pairs = []
+        for cj in self.jobs:
+            W = cj.job.workers
+            for w in range(W):
+                pairs.append((cj.leaves[w], cj.leaves[(w + 1) % W]))
+        return np.asarray(pairs, np.int32)
+
+    def job_flows(self, j: int) -> slice:
+        """Flow-axis slice owned by job j."""
+        lo = sum(cj.job.workers for cj in self.jobs[:j])
+        return slice(lo, lo + self.jobs[j].job.workers)
+
+
+def place_jobs(
+    jobs: Sequence[JobSchedule],
+    *,
+    colocated: bool = True,
+    start_steps: Optional[Sequence[int]] = None,
+) -> Cluster:
+    """Place J jobs' rings on one fabric.
+
+    `colocated=True` puts every job's worker w on leaf w — jobs share the
+    per-leaf uplinks and downlinks, the contended multi-tenant regime.
+    `colocated=False` gives each job its own disjoint block of leaves —
+    with a 2-tier leaf–spine there is then NO shared link, which makes it
+    the emergence-free reference placement ("uncontended").
+
+    Job 0 anchors the global planned timeline, so `start_steps[0]` must be
+    0 (stagger the others relative to it).
+    """
+    if not jobs:
+        raise ValueError("need at least one job")
+    if any(j.workers < 2 for j in jobs):
+        raise ValueError("every job needs >= 2 workers to form a ring")
+    starts = tuple(start_steps) if start_steps is not None else (0,) * len(jobs)
+    if len(starts) != len(jobs):
+        raise ValueError(f"{len(starts)} start_steps for {len(jobs)} jobs")
+    if starts[0] != 0:
+        raise ValueError(
+            "job 0 anchors the planned timeline: start_steps[0] must be 0"
+        )
+    placed, base = [], 0
+    for job, start in zip(jobs, starts):
+        if colocated:
+            leaves = tuple(range(job.workers))
+        else:
+            leaves = tuple(range(base, base + job.workers))
+            base += job.workers
+        placed.append(ClusterJob(job=job, start_step=int(start), leaves=leaves))
+    n_leaves = 1 + max(max(cj.leaves) for cj in placed)
+    return Cluster(jobs=tuple(placed), n_leaves=n_leaves)
+
+
+def cluster_topology(
+    cluster: Cluster, n_spines: int = 4, **leaf_spine_kwargs
+) -> TopologyParams:
+    """The shared leaf–spine fabric under a placed cluster: F = sum(W_j)
+    coupled flows, each job riding its own ring over the common links."""
+    return leaf_spine(
+        cluster.n_leaves, n_spines, cluster.flow_pairs(), **leaf_spine_kwargs
+    )
+
+
+def cluster_round_table(
+    cluster: Cluster,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Align the jobs' step tables into global rounds (host, static).
+
+    Returns ``(sizes[R, F], offsets[R])``: sizes[r, f] is flow f's message
+    for round r — its job's shard for step (r - start_j), or 0 when the job
+    is not active (not yet started, or already done) — and offsets[r] the
+    round's planned start tick on the global timeline (job 0's planned
+    offsets, extended past its last step at its trailing cadence), which is
+    where scenario event schedules are read from (`jobs.scheduled_events`).
+    """
+    R, F = cluster.rounds, cluster.flows
+    sizes = np.zeros((R, F), np.int32)
+    tables = [step_table(cj.job) for cj in cluster.jobs]
+    for j, (cj, (shard, _, _)) in enumerate(zip(cluster.jobs, tables)):
+        sl = cluster.job_flows(j)
+        lo, hi = cj.start_step, cj.start_step + len(shard)
+        sizes[lo:hi, sl] = shard[:, None]
+    base = tables[0][2].astype(np.float64)  # job 0's planned offsets
+    if R > len(base):
+        cadence = base[-1] - base[-2] if len(base) > 1 else 1.0
+        cadence = max(cadence, 1.0)
+        extra = base[-1] + cadence * np.arange(1, R - len(base) + 1)
+        base = np.concatenate([base, extra])
+    offsets = np.asarray(np.round(base[:R]), np.int64)
+    return sizes, offsets
+
+
+def solo_size_variants(cluster: Cluster, sizes: np.ndarray) -> np.ndarray:
+    """Stack the contended run with J solo variants: ``[1 + J, R, F]``.
+
+    Variant 0 is the full cluster; variant 1 + j silences every flow NOT
+    owned by job j (size 0 -> completes at tick 0, emits nothing), so the
+    solo baseline runs on the identical fabric, events and PRNG stream —
+    slowdown is a paired comparison inside one compiled program.
+    """
+    variants = [sizes]
+    flow_job = cluster.flow_job
+    for j in range(len(cluster.jobs)):
+        v = sizes.copy()
+        v[:, flow_job != j] = 0
+        variants.append(v)
+    return np.stack(variants)
+
+
+def cluster_inputs(
+    cluster: Cluster, sched: EventSchedule, horizon: int
+) -> Tuple[EventSchedule, jax.Array]:
+    """Batched runner inputs: per-round event schedules re-based at each
+    round's planned offset, plus the [1 + J, R, F] size variants."""
+    sizes, offsets = cluster_round_table(cluster)
+    scheds = scheduled_events(sched, offsets, horizon)
+    return scheds, jnp.asarray(solo_size_variants(cluster, sizes))
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "horizon"))
+def run_cluster_rounds(
+    topo: TopologyParams,
+    scheds: EventSchedule,
+    spec: SenderSpec,
+    sp: SenderParams,
+    sizes: jax.Array,
+    key: jax.Array,
+    horizon: int = 2048,
+) -> Dict[str, jax.Array]:
+    """Every round x size-variant of the cluster, ONE compiled computation.
+
+    `scheds` carries a leading round axis R (from `cluster_inputs`),
+    `sizes[..., R, F]` the traced per-flow messages (any leading variant
+    axes).  Round r folds r into `key` — the SAME stream for every variant,
+    so contended-vs-solo differences are contention, not noise.  Returns
+    ``{"cct": [..., R, F], "finished": [..., R, F],
+    "link_served": [..., R, L]}``.
+    """
+    R = sizes.shape[-2]
+
+    def one_round(sched_r, sizes_rf, idx):
+        k = jax.random.fold_in(key, idx)
+        r = run_flows_sized(topo, sched_r, spec, sp, sizes_rf, k, horizon)
+        return dict(
+            cct=r.cct, finished=r.finished,
+            link_served=r.link_served, link_busy=r.link_busy,
+        )
+
+    rounds = lambda s: jax.vmap(one_round)(scheds, s, jnp.arange(R))  # noqa: E731
+    for _ in range(sizes.ndim - 2):  # map any leading variant axes
+        rounds = jax.vmap(rounds, in_axes=(0,))
+    return rounds(sizes)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "horizon"))
+def sweep_cluster_rounds(
+    topo: TopologyParams,
+    scheds: EventSchedule,
+    spec: SenderSpec,
+    sp: SenderParams,
+    sizes: jax.Array,
+    keys: jax.Array,
+    horizon: int = 2048,
+) -> Dict[str, jax.Array]:
+    """The one-compile cluster sweep: policies x draws x variants x rounds.
+
+    `sp` carries a leading policy/config axis P, `keys` is [D, 2] PRNG
+    draws, `sizes` is [V, R, F] (from `cluster_inputs`: V = 1 + J solo
+    variants).  Returns ``{"cct": [P, D, V, R, F], "finished": ...,
+    "link_served": [P, D, V, R, L]}`` — one XLA program per (scenario,
+    spec, shapes): jobs, policies, draws, solo baselines and every round
+    all ride the same compile.
+    """
+    return jax.vmap(
+        lambda s: jax.vmap(
+            lambda k: run_cluster_rounds(topo, scheds, spec, s, sizes, k, horizon)
+        )(keys)
+    )(sp)
+
+
+def jain_index(x: np.ndarray, axis: int = -1) -> np.ndarray:
+    """Jain's fairness index (sum x)^2 / (J * sum x^2) along `axis`: 1.0
+    when every job gets an equal share, -> 1/J under total capture."""
+    x = np.asarray(x, np.float64)
+    num = x.sum(axis=axis) ** 2
+    den = x.shape[axis] * (x**2).sum(axis=axis)
+    return num / np.maximum(den, 1e-12)
+
+
+def link_utilization(
+    topo: TopologyParams, link_served: np.ndarray, link_busy: np.ndarray
+) -> np.ndarray:
+    """Per-link utilization over the whole cluster run.
+
+    ``link_served[..., R, L]`` / ``link_busy[..., R, L]`` are the fabric's
+    cumulative served-packets and busy-ticks conservation counters per
+    round.  Utilization = served / (nominal capacity x busy ticks): 1.0 is
+    a link serving at line rate whenever it serves at all; events that
+    scale capacity below nominal read as REDUCED utilization, matching how
+    operators read link counters against line rate.  Links that never serve
+    report 0.
+    """
+    served = np.asarray(link_served, np.float64).sum(axis=-2)   # [..., L]
+    busy = np.asarray(link_busy, np.float64).sum(axis=-2)       # [..., L]
+    cap = np.asarray(topo.capacity, np.float64)                 # [L]
+    return served / np.maximum(cap * busy, 1e-9)
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterResult:
+    """Host-side result of one cluster run (see `cluster_metrics`)."""
+
+    cluster: Cluster
+    step_cct: Tuple[np.ndarray, ...]   # per job: [..., S_j] contended barriers
+    ettr: np.ndarray                   # [..., J] contended per-job ETTR
+    solo_ettr: np.ndarray              # [..., J] same fabric, job alone
+    slowdown: np.ndarray               # [..., J] contended time / solo time
+    jain: np.ndarray                   # [...] fairness over 1/slowdown
+    link_util: np.ndarray              # [..., L] contended-run utilization
+    finished: np.ndarray               # bool [...] all variants/rounds done
+
+
+def cluster_metrics(
+    cluster: Cluster,
+    topo: TopologyParams,
+    raw: Dict[str, jax.Array],
+) -> ClusterResult:
+    """Fold the raw ``[..., V, R, F]`` sweep output into per-job metrics.
+
+    Per job j: its contended step barriers come from variant 0's rounds
+    [start_j, start_j + S_j) maxed over its own flows, its solo barriers
+    from variant 1 + j; `jobs.job_ettr` turns both into (ETTR, exposed).
+    slowdown_j = (compute + exposed contended) / (compute + exposed solo),
+    Jain fairness over x_j = 1 / slowdown_j, and link utilization from the
+    contended variant's conservation counters.
+    """
+    cct = np.asarray(raw["cct"], np.float64)          # [..., V, R, F]
+    finished = np.asarray(raw["finished"], bool)      # [..., V, R, F]
+    link_served = np.asarray(raw["link_served"])      # [..., V, R, L]
+    link_busy = np.asarray(raw["link_busy"])          # [..., V, R, L]
+    lead = cct.shape[:-3]
+    J = len(cluster.jobs)
+
+    step_cct, ettrs, solos, slowdowns = [], [], [], []
+    for j, cj in enumerate(cluster.jobs):
+        S = cj.job.total_steps
+        rounds = slice(cj.start_step, cj.start_step + S)
+        fl = cluster.job_flows(j)
+        barrier = cct[..., 0, rounds, fl].max(axis=-1)        # [..., S]
+        barrier_solo = cct[..., 1 + j, rounds, fl].max(axis=-1)
+        e, exp = job_ettr(cj.job, barrier)
+        e_solo, exp_solo = job_ettr(cj.job, barrier_solo)
+        compute = cj.job.compute_ticks * cj.job.iterations
+        step_cct.append(barrier)
+        ettrs.append(e)
+        solos.append(e_solo)
+        slowdowns.append((compute + exp) / (compute + exp_solo))
+    ettr = np.stack(ettrs, axis=-1)                   # [..., J]
+    solo = np.stack(solos, axis=-1)
+    slowdown = np.stack(slowdowns, axis=-1)
+    jain = jain_index(1.0 / np.maximum(slowdown, 1e-9), axis=-1)
+    util = link_utilization(
+        topo, link_served[..., 0, :, :], link_busy[..., 0, :, :]
+    )
+    return ClusterResult(
+        cluster=cluster,
+        step_cct=tuple(step_cct),
+        ettr=ettr,
+        solo_ettr=solo,
+        slowdown=slowdown,
+        jain=jain,
+        link_util=util,
+        finished=finished.reshape(lead + (-1,)).all(axis=-1),
+    )
+
+
+def run_cluster(
+    topo: TopologyParams,
+    sched: EventSchedule,
+    spec: SenderSpec,
+    sp: SenderParams,
+    cluster: Cluster,
+    key: jax.Array,
+    horizon: int = 2048,
+) -> ClusterResult:
+    """Run the whole cluster under one scenario with scalar sender params."""
+    if topo.flows != cluster.flows:
+        raise ValueError(
+            f"topology has {topo.flows} flows but the cluster places "
+            f"{cluster.flows}"
+        )
+    scheds, sizes = cluster_inputs(cluster, sched, horizon)
+    raw = run_cluster_rounds(topo, scheds, spec, sp, sizes, key, horizon)
+    return cluster_metrics(cluster, topo, raw)
+
+
+def sweep_cluster(
+    topo: TopologyParams,
+    sched: EventSchedule,
+    spec: SenderSpec,
+    sp: SenderParams,
+    cluster: Cluster,
+    keys: jax.Array,
+    horizon: int = 2048,
+) -> ClusterResult:
+    """Host convenience over `sweep_cluster_rounds`: P policies x D draws,
+    one compile.  Metric fields carry leading [P, D] axes
+    (``ettr[P, D, J]``, ``jain[P, D]``, ``link_util[P, D, L]``, ...)."""
+    if topo.flows != cluster.flows:
+        raise ValueError(
+            f"topology has {topo.flows} flows but the cluster places "
+            f"{cluster.flows}"
+        )
+    scheds, sizes = cluster_inputs(cluster, sched, horizon)
+    raw = sweep_cluster_rounds(topo, scheds, spec, sp, sizes, keys, horizon)
+    return cluster_metrics(cluster, topo, raw)

@@ -184,14 +184,16 @@ def ring_steps_cct_shared(
     shard_packets: int,
     keys: jax.Array,
     horizon: int = 4096,
-) -> jax.Array:
+) -> Tuple[jax.Array, jax.Array]:
     """Barrier times for every ring step in ONE compiled computation: vmap
     the coupled-flows sender core over per-step PRNG keys.  Returns
-    per_step[steps] = max-over-workers CCT of each step."""
+    ``(per_step[steps], finished[steps])`` — the max-over-workers CCT of
+    each step plus a bool mask that is True only when EVERY worker finished
+    within the horizon (a False entry means the barrier time is the horizon
+    sentinel, not a measurement)."""
     def one_step(k):
-        return jnp.max(
-            run_flows(topo, sched, spec, sp, shard_packets, k, horizon).cct
-        )
+        r = run_flows(topo, sched, spec, sp, shard_packets, k, horizon)
+        return jnp.max(r.cct), jnp.all(r.finished)
 
     return jax.vmap(one_step)(keys)
 
@@ -207,10 +209,11 @@ def sweep_ring_cct_shared(
     shard_packets: int,
     keys: jax.Array,
     horizon: int = 4096,
-) -> jax.Array:
+) -> Tuple[jax.Array, jax.Array]:
     """Policy/config sweep of a shared-fabric ring: `sp` carries a leading
-    sweep axis P, `keys` is [steps, 2] — returns per_step[P, steps], still
-    one XLA program for the whole grid."""
+    sweep axis P, `keys` is [steps, 2] — returns
+    ``(per_step[P, steps], finished[P, steps])``, still one XLA program for
+    the whole grid."""
     return jax.vmap(
         lambda s: ring_steps_cct_shared(
             topo, sched, spec, s, shard_packets, keys, horizon
@@ -220,11 +223,11 @@ def sweep_ring_cct_shared(
 
 def _ring_cct_shared(topo, sched, tcfg, cfg, key, steps):
     keys = jax.random.split(key, steps)
-    per_step = ring_steps_cct_shared(
+    per_step, finished = ring_steps_cct_shared(
         topo, sched, tcfg.spec(), tcfg.params(), cfg.shard_packets, keys,
         cfg.horizon,
     )
-    return jnp.sum(per_step), per_step
+    return jnp.sum(per_step), per_step, finished
 
 
 def allreduce_cct_shared(
@@ -233,9 +236,12 @@ def allreduce_cct_shared(
     tcfg: TransportConfig,
     cfg: CollectiveConfig,
     key: jax.Array,
-) -> Tuple[jax.Array, jax.Array]:
-    """(total CCT, per-step barriers) for a ring all-reduce whose workers
-    share the fabric.  `topo` should come from `ring_topology(cfg.workers)`."""
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """(total CCT, per-step barriers, per-step finished mask) for a ring
+    all-reduce whose workers share the fabric.  `topo` should come from
+    `ring_topology(cfg.workers)`.  A False entry in the finished mask means
+    that step's barrier is the horizon sentinel, not a measurement — treat
+    the total as a lower bound."""
     if topo.flows != cfg.workers:
         raise ValueError(
             f"topology has {topo.flows} flows but cfg.workers={cfg.workers}"
@@ -249,7 +255,7 @@ def allgather_cct_shared(
     tcfg: TransportConfig,
     cfg: CollectiveConfig,
     key: jax.Array,
-) -> Tuple[jax.Array, jax.Array]:
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
     if topo.flows != cfg.workers:
         raise ValueError(
             f"topology has {topo.flows} flows but cfg.workers={cfg.workers}"

@@ -133,6 +133,10 @@ class JobResult:
     step_cct: np.ndarray         # [..., total_steps] barrier per ring step
     ettr: np.ndarray             # [...] compute / (compute + exposed comm)
     exposed_comm_ticks: np.ndarray  # [...] summed over iterations + phases
+    # per-step: every worker finished within the horizon.  A False entry
+    # means that step's barrier is the horizon sentinel — the ETTR built on
+    # it is an upper bound, not a measurement.
+    finished: np.ndarray         # bool [..., total_steps]
 
 
 def compile_job(
@@ -317,22 +321,22 @@ def run_job_steps(
     shard: jax.Array,
     key: jax.Array,
     horizon: int = 2048,
-) -> jax.Array:
+) -> Tuple[jax.Array, jax.Array]:
     """Barrier time of every schedule step, ONE compiled computation.
 
     `scheds` carries a leading step axis S (from `scheduled_events`),
     `shard[S]` the traced per-step message sizes.  Step s folds s into
     `key`, runs the W coupled ring flows via the traced-size sender core,
     and reports the synchronous barrier (max over workers).  Returns
-    cct[S].
+    ``(cct[S], finished[S])`` — finished is True only when every worker
+    completed within the horizon (False: the barrier is the sentinel).
     """
     S = shard.shape[0]
 
     def one(sched_s, shard_s, idx):
         k = jax.random.fold_in(key, idx)
-        return jnp.max(
-            run_flows_sized(topo, sched_s, spec, sp, shard_s, k, horizon).cct
-        )
+        r = run_flows_sized(topo, sched_s, spec, sp, shard_s, k, horizon)
+        return jnp.max(r.cct), jnp.all(r.finished)
 
     return jax.vmap(one)(scheds, shard, jnp.arange(S))
 
@@ -346,14 +350,15 @@ def sweep_job_steps(
     shard: jax.Array,
     keys: jax.Array,
     horizon: int = 2048,
-) -> jax.Array:
+) -> Tuple[jax.Array, jax.Array]:
     """The one-compile job sweep: policies x draws x models x steps.
 
     `sp` carries a leading policy/config axis P, `keys` is [D, 2] PRNG
     draws, `scheds`/`shard` carry leading [M, S] axes (from
-    `job_step_inputs`).  Returns cct[P, D, M, S] — one XLA program per
-    (scenario, spec, shapes), exactly like `sender.sweep_flows` but with
-    the message-size and event-offset axes of the job layer on top.
+    `job_step_inputs`).  Returns ``(cct[P, D, M, S], finished[P, D, M, S])``
+    — one XLA program per (scenario, spec, shapes), exactly like
+    `sender.sweep_flows` but with the message-size and event-offset axes of
+    the job layer on top.
     """
     def per_model(s, k):
         return jax.vmap(
@@ -408,11 +413,15 @@ def run_job(
         )
     shard, _, offsets = step_table(job)
     scheds = scheduled_events(sched, offsets, horizon)
-    cct = np.asarray(
-        run_job_steps(topo, scheds, spec, sp, jnp.asarray(shard), key, horizon)
+    cct, finished = run_job_steps(
+        topo, scheds, spec, sp, jnp.asarray(shard), key, horizon
     )
+    cct, finished = np.asarray(cct), np.asarray(finished)
     ettr, exposed = job_ettr(job, cct)
-    return JobResult(job=job, step_cct=cct, ettr=ettr, exposed_comm_ticks=exposed)
+    return JobResult(
+        job=job, step_cct=cct, ettr=ettr, exposed_comm_ticks=exposed,
+        finished=finished,
+    )
 
 
 def sweep_job(
@@ -426,16 +435,18 @@ def sweep_job(
 ) -> Dict[str, np.ndarray]:
     """Host convenience over `sweep_job_steps`: M jobs x P policies x D
     draws under one scenario, one compile.  Returns
-    ``{"cct": [P, D, M, S], "ettr": [P, D, M], "exposed": [P, D, M]}``.
+    ``{"cct": [P, D, M, S], "finished": [P, D, M, S], "ettr": [P, D, M],
+    "exposed": [P, D, M]}``.
     """
     if any(topo.flows != j.workers for j in jobs):
         raise ValueError("every job's workers must equal the topology's flows")
     scheds, shard = job_step_inputs(jobs, sched, horizon)
-    cct = np.asarray(
-        sweep_job_steps(topo, scheds, spec, sp, shard, keys, horizon)
+    cct, finished = sweep_job_steps(
+        topo, scheds, spec, sp, shard, keys, horizon
     )
+    cct, finished = np.asarray(cct), np.asarray(finished)
     ettr = np.zeros(cct.shape[:-1])
     exposed = np.zeros(cct.shape[:-1])
     for m, job in enumerate(jobs):
         ettr[..., m], exposed[..., m] = job_ettr(job, cct[..., m, :])
-    return {"cct": cct, "ettr": ettr, "exposed": exposed}
+    return {"cct": cct, "finished": finished, "ettr": ettr, "exposed": exposed}

@@ -30,14 +30,22 @@ training workers (worker w -> worker (w+1) % W) so the job layer
 (`repro.net.jobs`) can run a whole training iteration's collective schedule
 — allreduce grads, allgather params — against every scenario with one
 shared topology shape.
+
+`cluster_scenarios` goes one level up: J whole jobs co-scheduled on ONE
+fabric (`repro.net.cluster`), where the interference between them is
+EMERGENT — the competing traffic is another job's actual collectives, not
+an injected arrival trace — across placements (disjoint vs overlapped
+rings), start offsets, per-job stragglers, flaps and oversubscription.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.net.cluster import Cluster, cluster_topology, place_jobs
+from repro.net.jobs import JobSchedule
 from repro.net.topology import (
     EventSchedule,
     TopologyParams,
@@ -57,6 +65,8 @@ __all__ = [
     "SCENARIOS",
     "job_scenarios",
     "JOB_SCENARIO_NAMES",
+    "cluster_scenarios",
+    "CLUSTER_SCENARIO_NAMES",
 ]
 
 Scenario = Tuple[TopologyParams, EventSchedule]
@@ -357,4 +367,112 @@ def job_scenarios(
         ),
     }
     assert tuple(out) == JOB_SCENARIO_NAMES
+    return out
+
+
+# --- cluster scenarios: J whole jobs co-scheduled on ONE fabric -----------
+
+CLUSTER_SCENARIO_NAMES = (
+    "uncontended",
+    "rings_overlapped",
+    "staggered_start",
+    "straggler_job_a",
+    "flap_during_overlap",
+    "oversubscribed",
+)
+
+ClusterScenario = Tuple[Cluster, TopologyParams, EventSchedule]
+
+
+def cluster_scenarios(
+    jobs: Sequence[JobSchedule],
+    n_spines: int = 4,
+    *,
+    horizon: int = 2048,
+    link_capacity: float = 8.0,
+    host_rate: float = 32.0,
+    oversub_ratio: float = 2.0,
+    stagger_steps: Optional[int] = None,
+    straggler_factor: float = 0.25,
+    flap_period: int = 128,
+    flap_duty: float = 0.5,
+    flap_spine: int = 0,
+    **kw,
+) -> Dict[str, ClusterScenario]:
+    """Co-scheduled multi-job contention library for `repro.net.cluster`.
+
+    Returns {name: (Cluster, TopologyParams, EventSchedule)} for every
+    entry in `CLUSTER_SCENARIO_NAMES`:
+
+      * uncontended        — disjoint leaf blocks: with a 2-tier leaf–spine
+                             the jobs share NO link; the reference point.
+      * rings_overlapped   — every job's worker w on leaf w: the jobs share
+                             every uplink/downlink their rings touch, so
+                             interference emerges from the other job's
+                             actual collectives.
+      * staggered_start    — overlapped rings, job j starts j *
+                             `stagger_steps` rounds late (default: half of
+                             job 0's schedule): contention switches on and
+                             off mid-job.
+      * straggler_job_a    — overlapped rings; job A's worker-0 uplinks run
+                             at `straggler_factor` of nominal for the whole
+                             run — does A's straggler leak into B?
+      * flap_during_overlap— overlapped rings; spine `flap_spine` flaps on
+                             a duty cycle while both jobs are live, so both
+                             controllers whack the same mole concurrently.
+      * oversubscribed     — overlapped rings with the spine layer at
+                             1/`oversub_ratio` of the aggregate host
+                             demand: steady-state queueing everywhere.
+
+    Every scenario shares the flow layout of its placement, so one
+    `sweep_cluster` compile per scenario covers jobs x policies x draws.
+    """
+    jobs = list(jobs)
+    if stagger_steps is None:
+        stagger_steps = max(1, jobs[0].total_steps // 2)
+    coloc = place_jobs(jobs, colocated=True)
+    disjoint = place_jobs(jobs, colocated=False)
+    staggered = place_jobs(
+        jobs,
+        colocated=True,
+        start_steps=[j * stagger_steps for j in range(len(jobs))],
+    )
+    topo_c = cluster_topology(
+        coloc, n_spines, uplink_capacity=link_capacity, **kw
+    )
+    topo_d = cluster_topology(
+        disjoint, n_spines, uplink_capacity=link_capacity, **kw
+    )
+    topo_o = cluster_topology(
+        coloc, n_spines,
+        uplink_capacity=host_rate / (oversub_ratio * n_spines), **kw
+    )
+    L, n_leaves = topo_c.links, coloc.n_leaves
+
+    straggle = np.ones((1, L), np.float32)
+    leaf_a0 = coloc.jobs[0].leaves[0]
+    for s in range(n_spines):
+        straggle[0, uplink_id(leaf_a0, s, n_leaves, n_spines)] = straggler_factor
+
+    out: Dict[str, ClusterScenario] = {
+        "uncontended": (disjoint, topo_d, null_schedule(topo_d.links)),
+        "rings_overlapped": (coloc, topo_c, null_schedule(L)),
+        "staggered_start": (staggered, topo_c, null_schedule(L)),
+        "straggler_job_a": (
+            coloc, topo_c,
+            _schedule(straggle, np.zeros((1, L), np.float32)),
+        ),
+        "flap_during_overlap": (
+            coloc, topo_c,
+            _schedule(
+                _flap_caps(
+                    n_leaves, n_spines, L, horizon,
+                    flap_period, flap_duty, flap_spine,
+                ),
+                np.zeros((horizon, L), np.float32),
+            ),
+        ),
+        "oversubscribed": (coloc, topo_o, null_schedule(L)),
+    }
+    assert tuple(out) == CLUSTER_SCENARIO_NAMES
     return out

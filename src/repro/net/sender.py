@@ -171,6 +171,17 @@ class SimResult:
     dropped_total: jax.Array  # float32[n]
     final_b: jax.Array        # int32[n] final profile allocation
     received: jax.Array       # float32
+    # True iff the flow completed within the horizon.  cct == horizon is the
+    # sentinel for "did not finish" — without this mask a too-short horizon
+    # silently flattens every tail-latency statistic, so gated benchmarks
+    # must check it (benchmarks.common.check_finished) and fail loudly.
+    finished: jax.Array       # bool
+    # cumulative per-link served packets / busy ticks (shared leaf-spine
+    # fabric only; empty [0] on the independent-bundle fabric, which has no
+    # link concept).  Feed the cluster layer's per-link utilization metric:
+    # served / (nominal capacity x busy ticks) is exact and <= 1.
+    link_served: jax.Array    # float32[L] or float32[0]
+    link_busy: jax.Array      # float32[L] or float32[0]
 
 
 def completion_need(n_packets, coded: bool, code_overhead) -> jax.Array:
@@ -267,12 +278,16 @@ def run_sender(
     received_fn: Callable,
     dropped_fn: Callable,
     k_loop: jax.Array,
+    link_fn: Callable | None = None,
 ) -> SimResult:
     """THE sender tick core, generic over a leading flow axis `lead`.
 
     Per-flow scalars have shape `lead` (() for one flow, (F,) for coupled
-    flows); per-path arrays have shape `lead + (n,)`.  The specializations
-    differ only in their initial states and in four injected callables:
+    flows); per-path arrays have shape `lead + (n,)`.  `n_packets` may be a
+    Python int, a traced scalar, or a traced array of shape `lead` (per-flow
+    message sizes — the cluster layer's heterogeneous-job plumbing); it only
+    feeds arithmetic, nothing shape-depends on it.  The specializations
+    differ only in their initial states and in the injected callables:
 
       * stepper(fabric, arrivals, key) -> (fabric', fb) — the fabric, any
         model honouring the `fabric_tick` feedback contract.
@@ -283,6 +298,8 @@ def run_sender(
         over flows where applicable).
       * received_fn / dropped_fn — read completion/drop totals out of the
         (otherwise opaque) fabric state.
+      * link_fn — read cumulative per-link (served packets, busy ticks) out
+        of the fabric state (None: no link concept, report empty [0] arrays).
 
     Everything in `sp` is traced: the policy runs through `lax.switch`
     inside `assign_fn`, and non-adaptive policies simply never take the
@@ -374,12 +391,19 @@ def run_sender(
         sender_tick, carry0, jnp.arange(horizon)
     )
     cct = jnp.where(done_at >= 0, done_at.astype(jnp.float32), float(horizon))
+    if link_fn is not None:
+        link_served, link_busy = link_fn(fabric)
+    else:
+        link_served = link_busy = jnp.zeros((0,), jnp.float32)
     return SimResult(
         cct=cct,
         sent_total=sent_pp,
         dropped_total=dropped_fn(fabric),
         final_b=ctrl.profile.b,
         received=received_fn(fabric),
+        finished=done_at >= 0,
+        link_served=link_served,
+        link_busy=link_busy,
     )
 
 
@@ -523,7 +547,7 @@ def _run_flows(
         spray0=spray0, ctrl0=ctrl0, ecmp_path=ecmp_path,
         assign_fn=assign_fn, ctrl_update=ctrl_update,
         received_fn=lambda s: s.received, dropped_fn=lambda s: s.dropped,
-        k_loop=k_loop,
+        k_loop=k_loop, link_fn=lambda s: (s.link_served, s.link_busy),
     )
 
 
@@ -559,7 +583,7 @@ def run_flows_sized(
     key: jax.Array,
     horizon: int = 4096,
 ) -> SimResult:
-    """`run_flows` with the message size TRACED (int32 scalar).
+    """`run_flows` with the message size TRACED (int32 scalar or [F] vector).
 
     Nothing in the sender core shape-depends on `n_packets` — it only feeds
     the completion threshold and the ARQ emit budget — so the payload can be
@@ -567,6 +591,12 @@ def run_flows_sized(
     job layer (`repro.net.jobs`) run several model configs' collective
     schedules (different shard sizes per model and per phase) as ONE
     compiled program per scenario instead of one per distinct size.
+
+    A PER-FLOW `n_packets[F]` gives each coupled flow its own message size:
+    flows with size 0 complete at tick 0 and emit nothing, which is how the
+    cluster layer (`repro.net.cluster`) runs several co-scheduled jobs'
+    concurrently-active ring steps — each flow tagged with its owning job —
+    as one coupled simulation where idle/not-yet-started jobs are silent.
     """
     return _run_flows(topo, sched, spec, sp, n_packets, key, horizon)
 

@@ -203,6 +203,7 @@ class SharedFabricState:
     link_arrivals: jax.Array  # float32[L] all traffic that entered the link
     link_served: jax.Array    # float32[L] all traffic the link served
     link_dropped: jax.Array   # float32[L] all traffic tail-dropped
+    link_busy: jax.Array      # float32[L] ticks with nonzero service
     t: jax.Array           # int32 tick counter
 
 
@@ -227,6 +228,7 @@ def init_shared_fabric(topo: TopologyParams) -> SharedFabricState:
         link_arrivals=jnp.zeros((L,), f32),
         link_served=jnp.zeros((L,), f32),
         link_dropped=jnp.zeros((L,), f32),
+        link_busy=jnp.zeros((L,), f32),
         t=jnp.zeros((), jnp.int32),
     )
 
@@ -343,6 +345,7 @@ def shared_fabric_tick(
         link_arrivals=state.link_arrivals + incoming,
         link_served=state.link_served + served_l,
         link_dropped=state.link_dropped + dropable,
+        link_busy=state.link_busy + (served_l > 0).astype(jnp.float32),
         t=t + 1,
     )
     return new_state, fb

@@ -18,8 +18,9 @@ historical behaviour.  For sweeps, skip the wrapper and hand a batched
 every other traced knob become vmap axes of a single compiled program.
 
 `simulate_message` scans a fixed horizon and reports the first completion
-tick (inf-like sentinel if the horizon was insufficient; empty messages
-complete at tick 0).  The scan body is generic over a *fabric stepper* —
+tick (`cct == horizon` sentinel if the horizon was insufficient — check
+`SimResult.finished`, which is False exactly when the sentinel was hit;
+empty messages complete at tick 0).  The scan body is generic over a *fabric stepper* —
 any callable ``(state, arrivals[n], key) -> (state', feedback)`` honouring
 the `fabric_tick` feedback contract (per-path sent/marked/dropped/qdelay
 plus landed).  `simulate_message` binds the independent-bundle

@@ -1,0 +1,268 @@
+"""Cluster layer: placement, round alignment, emergent contention, metrics.
+
+Covers the placement contract (disjoint vs co-located leaves, per-job
+rings, heterogeneous worker counts), the round table (size conservation,
+stagger shifting, silence outside a job's window), the per-flow-size sender
+path (a uniform size vector is bit-identical to the scalar path; a zeroed
+flow completes at tick 0), and the headline physics: on disjoint leaves the
+paired solo runs reproduce the contended runs EXACTLY (slowdown == 1 — the
+placement shares no link), while overlapped rings slow both jobs down —
+contention that emerges from the other job's actual collectives.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.net.cluster import (
+    cluster_inputs,
+    cluster_round_table,
+    cluster_topology,
+    jain_index,
+    place_jobs,
+    run_cluster,
+    run_cluster_rounds,
+    solo_size_variants,
+    sweep_cluster,
+)
+from repro.net.jobs import compile_job, total_packets
+from repro.net.scenarios import CLUSTER_SCENARIO_NAMES, cluster_scenarios
+from repro.net.sender import (
+    SenderSpec,
+    policy_sweep_params,
+    run_flows,
+    run_flows_sized,
+    sender_params,
+)
+from repro.net.topology import leaf_spine, null_schedule
+from repro.net.transport import Policy
+
+WORKERS = 4
+RATE = 32
+SPEC = SenderSpec(rate_cap=RATE)
+
+
+def tiny_job(arch, workers=WORKERS, iterations=1, **kw):
+    # zero overlap: every tick of communication is exposed, so contention
+    # moves ETTR instead of hiding under the compute window
+    kw.setdefault("overlap", {"allreduce": 0.0, "allgather": 0.0})
+    return compile_job(
+        arch, workers=workers, tp=8, iterations=iterations,
+        rate=RATE, min_shard=16, max_shard=48, **kw
+    )
+
+
+@pytest.fixture(scope="module")
+def jobs():
+    return [tiny_job("xlstm-350m"), tiny_job("qwen3-8b")]
+
+
+def test_placement_disjoint_vs_colocated(jobs):
+    disjoint = place_jobs(jobs, colocated=False)
+    coloc = place_jobs(jobs, colocated=True)
+    assert disjoint.n_leaves == 2 * WORKERS and coloc.n_leaves == WORKERS
+    assert disjoint.flows == coloc.flows == 2 * WORKERS
+    # disjoint: leaf sets don't intersect; colocated: identical
+    a, b = (set(cj.leaves) for cj in disjoint.jobs)
+    assert not (a & b)
+    a, b = (set(cj.leaves) for cj in coloc.jobs)
+    assert a == b
+    # each job rides its own ring
+    pairs = coloc.flow_pairs()
+    fj = coloc.flow_job
+    assert pairs.shape == (2 * WORKERS, 2)
+    assert np.array_equal(fj, np.repeat([0, 1], WORKERS))
+    for j in range(2):
+        mine = pairs[fj == j]
+        assert np.array_equal(
+            mine, [(w, (w + 1) % WORKERS) for w in range(WORKERS)]
+        )
+
+
+def test_placement_heterogeneous_workers():
+    jobs = [tiny_job("xlstm-350m", workers=4), tiny_job("qwen3-8b", workers=2)]
+    coloc = place_jobs(jobs, colocated=True)
+    assert coloc.flows == 6 and coloc.n_leaves == 4
+    topo = cluster_topology(coloc, n_spines=4)
+    assert topo.flows == 6
+    sizes, offsets = cluster_round_table(coloc)
+    # R follows the longer schedule; the short job is silent past its end
+    assert sizes.shape == (coloc.rounds, 6)
+    short = coloc.jobs[1].job
+    assert np.all(sizes[short.total_steps:, coloc.job_flows(1)] == 0)
+
+
+def test_placement_validation(jobs):
+    with pytest.raises(ValueError, match="start_steps\\[0\\]"):
+        place_jobs(jobs, start_steps=[1, 0])
+    with pytest.raises(ValueError, match="start_steps"):
+        place_jobs(jobs, start_steps=[0])
+    with pytest.raises(ValueError, match="ring"):
+        place_jobs([jobs[0], compile_job("qwen3-8b", workers=1, tp=8)])
+
+
+def test_round_table_conservation_and_stagger(jobs):
+    coloc = place_jobs(jobs, colocated=True)
+    sizes, offsets = cluster_round_table(coloc)
+    R, F = sizes.shape
+    assert R == coloc.rounds and F == coloc.flows
+    # every packet of every job's schedule lands in exactly one round
+    assert int(sizes.sum()) == sum(total_packets(cj.job) for cj in coloc.jobs)
+    # and each flow carries exactly its job's per-worker payload
+    for j, cj in enumerate(coloc.jobs):
+        per_worker = total_packets(cj.job) // cj.job.workers
+        assert np.all(sizes[:, coloc.job_flows(j)].sum(axis=0) == per_worker)
+    # offsets strictly advance on the global timeline
+    assert np.all(np.diff(offsets) > 0)
+
+    stag = place_jobs(jobs, colocated=True, start_steps=[0, 3])
+    s_sizes, s_offsets = cluster_round_table(stag)
+    assert s_sizes.shape[0] == coloc.rounds + 3
+    # job 1's rows are shifted down by 3, job 0's unchanged
+    f0, f1 = stag.job_flows(0), stag.job_flows(1)
+    assert np.array_equal(s_sizes[:R, f0], sizes[:, f0])
+    assert np.all(s_sizes[:3, f1] == 0)
+    assert np.array_equal(s_sizes[3:, f1], sizes[:, f1])
+    # conservation is stagger-invariant
+    assert int(s_sizes.sum()) == int(sizes.sum())
+
+
+def test_solo_variants_silence_other_jobs(jobs):
+    coloc = place_jobs(jobs, colocated=True)
+    sizes, _ = cluster_round_table(coloc)
+    v = solo_size_variants(coloc, sizes)
+    assert v.shape == (3,) + sizes.shape
+    assert np.array_equal(v[0], sizes)
+    fj = coloc.flow_job
+    for j in range(2):
+        assert np.array_equal(v[1 + j][:, fj == j], sizes[:, fj == j])
+        assert np.all(v[1 + j][:, fj != j] == 0)
+
+
+def test_per_flow_sizes_match_scalar_path():
+    """A uniform per-flow size vector is bit-identical to the scalar traced
+    path, and a zeroed flow completes at tick 0 without emitting."""
+    topo = leaf_spine(
+        WORKERS, 4, [(w, (w + 1) % WORKERS) for w in range(WORKERS)]
+    )
+    sched = null_schedule(topo.links)
+    sp = sender_params(Policy.WAM, rate=RATE)
+    key = jax.random.PRNGKey(3)
+    r_scalar = run_flows_sized(topo, sched, SPEC, sp, jnp.int32(48), key, 256)
+    r_vec = run_flows_sized(
+        topo, sched, SPEC, sp, jnp.full((WORKERS,), 48, jnp.int32), key, 256
+    )
+    for field in ("cct", "sent_total", "dropped_total", "received", "finished"):
+        assert np.array_equal(
+            np.asarray(getattr(r_scalar, field)),
+            np.asarray(getattr(r_vec, field)),
+        ), field
+
+    sizes = jnp.asarray([48, 0, 48, 48], jnp.int32)
+    r_hole = run_flows_sized(topo, sched, SPEC, sp, sizes, key, 256)
+    assert float(r_hole.cct[1]) == 0.0
+    assert bool(r_hole.finished[1])
+    assert float(r_hole.sent_total[1].sum()) == 0.0
+    assert np.all(np.asarray(r_hole.cct)[[0, 2, 3]] > 0)
+
+
+def test_link_accounting_in_simresult():
+    """SimResult now surfaces the shared fabric's conservation counters."""
+    topo = leaf_spine(2, 4, [(0, 1)])
+    sched = null_schedule(topo.links)
+    r = run_flows(
+        topo, sched, SPEC, sender_params(Policy.WAM, rate=RATE), 64,
+        jax.random.PRNGKey(0), 256,
+    )
+    assert r.link_served.shape == (topo.links,)
+    assert r.link_busy.shape == (topo.links,)
+    # serving happened, and busy ticks never exceed capacity-normalized work
+    assert float(r.link_served.sum()) > 0
+    served, busy = np.asarray(r.link_served), np.asarray(r.link_busy)
+    cap = np.asarray(topo.capacity)
+    assert np.all(served <= cap * busy + 1e-4)
+
+
+def test_uncontended_solo_identity_and_overlap_slows(jobs):
+    """THE emergence check: disjoint placements share no link, so the
+    paired solo variants reproduce the contended run exactly (slowdown 1);
+    co-located rings contend and both jobs slow down."""
+    scens = cluster_scenarios(jobs, horizon=512)
+    key = jax.random.PRNGKey(0)
+    sp = sender_params(Policy.WAM, rate=RATE)
+
+    cluster, topo, sched = scens["uncontended"]
+    r = run_cluster(topo, sched, SPEC, sp, cluster, key, horizon=384)
+    assert bool(r.finished)
+    assert np.allclose(r.slowdown, 1.0)
+    assert np.allclose(r.jain, 1.0)
+    assert np.all((r.ettr > 0) & (r.ettr <= 1))
+
+    cluster, topo, sched = scens["rings_overlapped"]
+    r2 = run_cluster(topo, sched, SPEC, sp, cluster, key, horizon=384)
+    assert bool(r2.finished)
+    # both jobs pay for co-location, and nobody gets a free ride
+    assert np.all(r2.slowdown > 1.02)
+    assert np.all(r2.ettr <= r2.solo_ettr + 1e-9)
+    # utilization is a true fraction of line rate
+    assert np.all((r2.link_util >= 0) & (r2.link_util <= 1 + 1e-6))
+
+
+def test_cluster_scenarios_registry(jobs):
+    scens = cluster_scenarios(jobs, horizon=256)
+    assert tuple(scens) == CLUSTER_SCENARIO_NAMES
+    for name, (cluster, topo, sched) in scens.items():
+        assert topo.flows == cluster.flows, name
+        assert sched.cap_scale.shape[-1] == topo.links, name
+    # staggered placement really staggers
+    stag = scens["staggered_start"][0]
+    assert stag.jobs[0].start_step == 0 and stag.jobs[1].start_step > 0
+    # oversubscribed really has less uplink capacity
+    assert float(scens["oversubscribed"][1].capacity[0]) < float(
+        scens["rings_overlapped"][1].capacity[0]
+    )
+
+
+def test_sweep_cluster_matches_scalar_runs(jobs):
+    """The one-compile policy sweep reproduces per-policy scalar runs."""
+    scens = cluster_scenarios(jobs, horizon=512)
+    cluster, topo, sched = scens["rings_overlapped"]
+    policies = (Policy.ECMP, Policy.WAM)
+    sp = policy_sweep_params(policies, rate=RATE)
+    keys = jax.random.split(jax.random.PRNGKey(7), 2)
+    r = sweep_cluster(topo, sched, SPEC, sp, cluster, keys, horizon=384)
+    assert r.ettr.shape == (2, 2, 2)       # [P, D, J]
+    assert r.jain.shape == (2, 2)
+    assert r.link_util.shape == (2, 2, topo.links)
+
+    from repro.net.cluster import cluster_metrics
+
+    scheds, sizes = cluster_inputs(cluster, sched, 384)
+    for pi, pol in enumerate(policies):
+        for di in range(2):
+            raw = run_cluster_rounds(
+                topo, scheds, SPEC, sender_params(pol, rate=RATE), sizes,
+                keys[di], 384,
+            )
+            want = cluster_metrics(cluster, topo, raw)
+            assert np.allclose(r.ettr[pi, di], want.ettr), (pol, di)
+            assert np.allclose(r.slowdown[pi, di], want.slowdown), (pol, di)
+            assert np.allclose(r.jain[pi, di], want.jain), (pol, di)
+
+
+def test_jain_index():
+    assert jain_index(np.ones(4)) == pytest.approx(1.0)
+    skew = jain_index(np.asarray([1.0, 0.0, 0.0, 0.0]))
+    assert skew == pytest.approx(0.25)
+    assert jain_index(np.asarray([1.0, 1.0, 0.5, 0.5])) < 1.0
+
+
+def test_run_cluster_validates_topology(jobs):
+    coloc = place_jobs(jobs, colocated=True)
+    wrong = leaf_spine(2, 4, [(0, 1)])
+    with pytest.raises(ValueError, match="flows"):
+        run_cluster(
+            wrong, null_schedule(wrong.links), SPEC,
+            sender_params(Policy.WAM, rate=RATE), coloc,
+            jax.random.PRNGKey(0), 128,
+        )

@@ -1,6 +1,15 @@
-"""Feedback controller (paper §5-6): whack-down, recovery, objective."""
+"""Feedback controller (paper §5-6): whack-down, recovery, objective.
+
+Includes the recovery-probe contract (the probe restores the MOST
+under-allocated starved path, not merely the first starved index), the
+small-m restore guard (floor(beta * b) == 0 everywhere must still re-ramp
+by shaving one ball from the largest donor), and — when hypothesis is
+installed — a conservation property: sum(b) == m survives ARBITRARY
+whack-down / restore / controller_step sequences.
+"""
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core.feedback import (
     PathStats,
@@ -11,7 +20,14 @@ from repro.core.feedback import (
     weighted_badness,
     whack_down,
 )
-from repro.core.profile import uniform_profile
+from repro.core.profile import make_profile, uniform_profile
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # property tests auto-skip, like the spray properties
+    HAVE_HYPOTHESIS = False
 
 
 def _stats(ecn=None, loss=None, rtt=None, n=5):
@@ -78,3 +94,93 @@ def test_controller_step_recovers_after_health_returns():
         ctrl, _ = controller_step(ctrl, healthy)
     assert int(np.asarray(ctrl.profile.b)[3]) > low
     assert int(np.asarray(ctrl.profile.b).sum()) == 1024
+
+
+def test_recovery_targets_most_underallocated_path():
+    """The probe must restore the path with the SMALLEST allocation share
+    among the starved set — not the first starved index (the old
+    argmax-over-bool bug restored path 1 here and left path 3 stuck)."""
+    # m=1024 over 5 paths; paths 1 and 3 starved, 3 strictly worse off
+    prof = make_profile([500, 12, 500, 4, 8], 10)
+    ctrl = make_controller(prof)
+    healthy = _stats(n=5)  # all severities 0 -> no whack, recovery only
+    ctrl2, _ = controller_step(ctrl, healthy, recovery_share=0.02)
+    b0, b1 = np.asarray(ctrl.profile.b), np.asarray(ctrl2.profile.b)
+    assert int(b1.sum()) == 1024
+    gained = b1 - b0
+    assert gained[3] > 0, "most-starved path must receive the restore"
+    assert gained[1] <= 0, "less-starved path must wait its turn"
+
+
+def test_restore_path_small_m_reramps():
+    """floor(beta * b) == 0 on every donor must not no-op: the recovered
+    path re-ramps by one ball shaved from the largest donor."""
+    prof = make_profile([6, 7, 2, 1], 4)  # m=16: 0.125 * 7 floors to 0
+    ctrl = make_controller(prof)
+    ctrl2 = restore_path(ctrl, 3, beta=0.125)
+    b0, b1 = np.asarray(ctrl.profile.b), np.asarray(ctrl2.profile.b)
+    assert int(b1.sum()) == 16
+    assert b1[3] == b0[3] + 1
+    assert b1[1] == b0[1] - 1  # largest donor paid
+
+
+def test_restore_path_noop_when_donors_empty():
+    """Degenerate case: every other path already at 0 — nothing to shave,
+    the profile is unchanged (and still sums to m)."""
+    prof = make_profile([16, 0, 0, 0], 4)
+    ctrl = make_controller(prof)
+    ctrl2 = restore_path(ctrl, 0, beta=0.125)
+    assert np.array_equal(np.asarray(ctrl2.profile.b), [16, 0, 0, 0])
+
+
+if not HAVE_HYPOTHESIS:
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_sum_b_conserved_over_arbitrary_sequences():
+        pass
+
+else:
+
+    @settings(max_examples=50, deadline=None)
+    @given(
+        n=st.integers(2, 8),
+        ell=st.integers(4, 10),
+        data=st.data(),
+    )
+    def test_sum_b_conserved_over_arbitrary_sequences(n, ell, data):
+        """sum(profile.b) == m across ARBITRARY whack-down / restore /
+        controller_step sequences — the §7 invariant the integer updates
+        promise, exercised through the controller's composite ops."""
+        m = 1 << ell
+        ctrl = make_controller(uniform_profile(n, ell))
+        for _ in range(data.draw(st.integers(1, 12), label="ops")):
+            op = data.draw(st.sampled_from(["whack", "restore", "step"]))
+            if op == "whack":
+                w = jnp.asarray(
+                    data.draw(
+                        st.lists(
+                            st.floats(0.0, 1.0), min_size=n, max_size=n
+                        ),
+                        label="w",
+                    ),
+                    jnp.float32,
+                )
+                ctrl = whack_down(ctrl, w)
+            elif op == "restore":
+                path = data.draw(st.integers(0, n - 1), label="path")
+                beta = data.draw(st.floats(0.01, 0.5), label="beta")
+                ctrl = restore_path(ctrl, path, beta=beta)
+            else:
+                loss = data.draw(
+                    st.lists(st.floats(0.0, 1.0), min_size=n, max_size=n),
+                    label="loss",
+                )
+                stats = PathStats(
+                    ecn_rate=jnp.zeros(n),
+                    loss_rate=jnp.asarray(loss, jnp.float32),
+                    rtt=jnp.ones(n) * 10,
+                )
+                ctrl, _ = controller_step(ctrl, stats)
+            b = np.asarray(ctrl.profile.b)
+            assert int(b.sum()) == m, (op, b)
+            assert np.all(b >= 0), (op, b)

@@ -182,13 +182,16 @@ def test_sweep_job_matches_per_policy_runs():
         spi = sender_params(pol, rate=RATE)
         for di in range(2):
             for m in range(2):
-                want = run_job_steps(
+                want, want_fin = run_job_steps(
                     topo,
                     jax.tree.map(lambda x: x[m], scheds),
                     SPEC, spi, shard[m], keys[di], 384,
                 )
                 assert np.array_equal(
                     out["cct"][pi, di, m], np.asarray(want)
+                ), (pol, di, m)
+                assert np.array_equal(
+                    out["finished"][pi, di, m], np.asarray(want_fin)
                 ), (pol, di, m)
 
 

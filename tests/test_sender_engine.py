@@ -164,6 +164,26 @@ def test_tiny_messages_complete_without_overhead(coded):
         assert float(r.received) >= n_packets - 0.25
 
 
+@pytest.mark.parametrize("coded", [True, False], ids=["coded", "arq"])
+def test_finished_mask_tracks_horizon_sentinel(coded):
+    """finished is True exactly when cct < horizon; a too-short horizon
+    yields the sentinel AND finished == False (no silent flattening)."""
+    params = mkparams()
+    cfg = TransportConfig(policy=Policy.WAM, coded=coded, rate=16)
+    ok = simulate_message(params, cfg, 64, jax.random.PRNGKey(0), 512)
+    assert bool(ok.finished) and float(ok.cct) < 512
+    short = simulate_message(params, cfg, 4096, jax.random.PRNGKey(0), 8)
+    assert not bool(short.finished)
+    assert float(short.cct) == 8.0  # the sentinel, flagged as such
+
+    topo = leaf_spine(2, 4, [(0, 1)], uplink_capacity=8.0)
+    rf = simulate_flows(
+        topo, null_schedule(topo.links), cfg, 4096, jax.random.PRNGKey(0), 8
+    )
+    assert not np.any(np.asarray(rf.finished))
+    assert np.all(np.asarray(rf.cct) == 8.0)
+
+
 def test_transport_config_seed_validation():
     """Concrete configs keep the historical host-side seed guard (the
     engine's traced seeds are normalized instead — flow-0 semantics)."""
@@ -221,7 +241,7 @@ def test_ring_steps_shared_single_compile_matches_loop():
     sched = null(topo.links)
     tcfg = TransportConfig(policy=Policy.WAM, rate=16)
     keys = jax.random.split(jax.random.PRNGKey(0), 3)
-    per_step = ring_steps_cct_shared(
+    per_step, finished = ring_steps_cct_shared(
         topo, sched, tcfg.spec(), tcfg.params(), 64, keys, 256
     )
     want = [
@@ -231,3 +251,4 @@ def test_ring_steps_shared_single_compile_matches_loop():
         for k in keys
     ]
     assert np.allclose(np.asarray(per_step), np.asarray(want), atol=0)
+    assert bool(np.asarray(finished).all())

@@ -253,11 +253,13 @@ def test_shared_allreduce_contends():
     tcfg = TransportConfig(policy=Policy.WAM, rate=16)
     ccfg = CollectiveConfig(workers=4, shard_packets=128, horizon=1024)
     topo = ring_topology(4, n_spines=4, uplink_capacity=8.0)
-    total, per_step = allreduce_cct_shared(
+    total, per_step, finished = allreduce_cct_shared(
         topo, null_schedule(topo.links), tcfg, ccfg, jax.random.PRNGKey(0)
     )
     assert per_step.shape == (6,)
     assert float(total) > 0 and float(per_step.max()) < 1024
+    # every step completed within the horizon -> the mask agrees with cct
+    assert finished.shape == (6,) and bool(finished.all())
 
 
 def test_scenario_registry_shapes():
