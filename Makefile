@@ -2,17 +2,25 @@
 #   make check      - tier-1 pytest + benchmark smoke pass + docs checks
 #   make test       - tier-1 pytest only
 #   make bench      - full benchmark pass (CSV to stdout)
+#   make perf-smoke - gated smoke bench: finished/compile-count gates armed,
+#                     JSON (with meta.perf + meta.compile) to BENCH_smoke.json
 #   make docs-check - core doctests + markdown relative-link checker
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: check test bench bench-smoke docs-check
+.PHONY: check test bench bench-smoke perf-smoke docs-check
 
 test:
 	python -m pytest -x -q
 
 bench-smoke:
 	python -m benchmarks.run --smoke --json BENCH_smoke.json
+
+# the CI perf gate: every family sweep must stay ONE compiled program
+# (--max-compiles bounds the whole run) and every gated flow must finish
+# (check_finished fails loudly inside the benches)
+perf-smoke:
+	python -m benchmarks.run --smoke --json BENCH_smoke.json --max-compiles 10
 
 bench:
 	python -m benchmarks.run
@@ -21,4 +29,4 @@ docs-check:
 	python -m pytest --doctest-modules src/repro/core -q
 	python tools/check_links.py
 
-check: test bench-smoke docs-check
+check: test perf-smoke docs-check

@@ -6,13 +6,18 @@ topology (`repro.net.cluster`), so the interference is emergent (the
 competitor is another job's actual collectives reacting to the same queues)
 rather than an injected arrival trace.
 
-Per scenario the WHOLE grid — J jobs x 5 policies x PRNG draws x every
-round x (contended + per-job solo baselines) — is ONE compiled XLA program:
-per-flow message sizes ride the traced-size sender path
-(`run_flows_sized` with a size vector), policies the traced `lax.switch`
-dispatch, and the solo variants a vmap axis.  Compile accounting
-(`compile_count=1`, `compile_s`, `run_s`) lands in the bench JSON per
-scenario.
+The WHOLE section — scenario library x J jobs x 5 policies x PRNG draws x
+every round x (contended + per-job solo baselines) — is ONE compiled XLA
+program: scenarios ride a stacked leading vmap axis (common leaf grid from
+`cluster_scenarios`, round counts padded to the family maximum with silent
+rounds — `cluster_inputs(..., rounds=R_max)` +
+`cluster.sweep_cluster_rounds_scenarios`), per-flow message sizes the
+traced-size sender path (`run_flows_sized` with a size vector), policies
+the traced `lax.switch` dispatch, and the solo variants a vmap axis; the
+early-exit engine retires dead ticks once every flow of a round settles.
+Compile accounting (`compile_count=1` for the family, guarded by
+`common.compile_gate`) and a `meta.perf` throughput row land in the bench
+JSON.
 
 Gates per scenario:
   * every gated flow finished within the horizon (loud failure otherwise —
@@ -25,13 +30,24 @@ fairness over jobs, and the hottest link's utilization.
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
-from benchmarks.common import aot_compile, check_finished, emit, timed_call
-from repro.net.cluster import cluster_inputs, cluster_metrics, sweep_cluster_rounds
+from benchmarks.common import (
+    aot_compile,
+    check_finished,
+    compile_gate,
+    emit,
+    timed_call,
+)
+from repro.net.cluster import (
+    cluster_inputs,
+    cluster_metrics,
+    sweep_cluster_rounds_scenarios,
+)
 from repro.net.jobs import compile_job
-from repro.net.scenarios import cluster_scenarios
+from repro.net.scenarios import cluster_scenarios, stack_pytrees
 from repro.net.sender import SenderSpec, policy_sweep_params
 from repro.net.transport import Policy
 
@@ -65,24 +81,50 @@ def main() -> None:
         )
         for a in ARCHES
     ]
-    spec = SenderSpec(rate_cap=RATE)
+    spec = SenderSpec(rate_cap=RATE, early_exit=True, exit_chunk=16)
     sp = policy_sweep_params(POLICIES, rate=RATE)
     keys = jax.random.split(jax.random.PRNGKey(0), draws)
     scens = cluster_scenarios(jobs, horizon=max(horizon, 2048))
 
-    ie, iw = POLICIES.index(Policy.ECMP), POLICIES.index(Policy.WAM)
-    for scen_name, (cluster, topo, sched) in scens.items():
-        scheds, sizes = cluster_inputs(cluster, sched, horizon)
-        swept, compile_s = aot_compile(
-            sweep_cluster_rounds, topo, scheds, spec, sp, sizes, keys,
-            horizon=horizon,
-        )
-        raw, run_s = timed_call(swept, topo, scheds, sp, sizes, keys)
-        # gate precondition: sentinels would flatten every number below
-        check_finished(f"cluster/{scen_name}", raw["finished"])
-        r = cluster_metrics(cluster, topo, raw)
+    # stack the scenario axis: placements share one leaf grid (built by
+    # `cluster_scenarios`), round counts pad to the family maximum with
+    # silent rounds, schedules/sizes tree-stack onto a leading vmap axis
+    r_max = max(c.rounds for c, _, _ in scens.values())
+    inputs = [
+        cluster_inputs(c, sched, horizon, rounds=r_max)
+        for c, _, sched in scens.values()
+    ]
+    scheds = stack_pytrees([sc for sc, _ in inputs])
+    sizes = jnp.stack([sz for _, sz in inputs])
+    topos = stack_pytrees([t for _, t, _ in scens.values()])
 
-        n_sims = np.asarray(raw["cct"]).size
+    # --- ONE compile: scenarios x policies x draws x variants x rounds ---
+    with compile_gate("cluster family", max_compiles=1):
+        swept, compile_s = aot_compile(
+            sweep_cluster_rounds_scenarios, topos, scheds, spec, sp, sizes,
+            keys, horizon=horizon,
+        )
+        raw, run_s = timed_call(swept, topos, scheds, sp, sizes, keys)
+    # gate precondition: sentinels would flatten every number below
+    check_finished("cluster family", raw["finished"])
+    n_sims = np.asarray(raw["cct"]).size
+    common.perf(
+        "cluster_family",
+        fabric_ticks=n_sims // np.asarray(raw["cct"]).shape[-1] * horizon,
+        # nominal payload: the round sweep returns barriers, not sent_total
+        path_decisions=float(
+            np.asarray(sizes, np.float64).sum()
+        ) * len(POLICIES) * draws,
+        compile_s=compile_s,
+        run_s=run_s,
+        nominal_decisions=True,
+    )
+
+    ie, iw = POLICIES.index(Policy.ECMP), POLICIES.index(Policy.WAM)
+    for si, (scen_name, (cluster, topo, sched)) in enumerate(scens.items()):
+        r = cluster_metrics(
+            cluster, topo, {k: np.asarray(v)[si] for k, v in raw.items()}
+        )
         for j, cj in enumerate(cluster.jobs):
             for pi, pol in enumerate(POLICIES):
                 e = r.ettr[pi, :, j]
@@ -107,11 +149,18 @@ def main() -> None:
             f"cluster/{scen_name}/wam_vs_ecmp",
             0.0,
             f"min_perjob_ettr_margin={margin:.4f};wam_ge_ecmp={int(margin >= 0)}",
-            compile_count=1,
-            compile_s=round(compile_s, 3),
-            run_s=round(run_s, 3),
-            total_s=round(compile_s + run_s, 3),
         )
+    sweep_total = compile_s + run_s
+    emit(
+        "cluster/family/sweep",
+        sweep_total * 1e6,
+        f"compiles=1_for_{len(scens)}_scenarios_x_{len(POLICIES)}_policies"
+        f"_x_{len(jobs)}_jobs",
+        compile_count=1,
+        compile_s=round(compile_s, 3),
+        run_s=round(run_s, 3),
+        total_s=round(sweep_total, 3),
+    )
 
 
 if __name__ == "__main__":

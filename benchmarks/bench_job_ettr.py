@@ -5,13 +5,16 @@ training step into a collective schedule (`repro.net.jobs.compile_job`),
 run every ring step of every iteration against each job scenario, and
 report ETTR = compute / (compute + exposed comm) per (model, policy).
 
-Per scenario the WHOLE grid — M model configs x 5 policies x PRNG draws x
-all schedule steps — is ONE compiled XLA program: message sizes ride the
-traced-size sender path (`run_flows_sized`), policies the traced
-`lax.switch` dispatch, and per-step event-schedule offsets a vmap axis.
-Compile accounting (`compile_count=1`, `compile_s`, `run_s`) lands in the
-bench JSON per scenario, so a regression that silently splits the sweep
-back into per-model or per-policy programs is visible in the trajectory.
+The WHOLE section is ONE compiled XLA program: the scenario library rides
+a stacked leading vmap axis (the job scenarios already share one topology
+shape — `jobs.sweep_job_steps_scenarios`), message sizes the traced-size
+sender path (`run_flows_sized`), policies the traced `lax.switch`
+dispatch, and per-step event-schedule offsets a vmap axis; the early-exit
+engine retires dead ticks past each step's barrier.  Compile accounting
+(`compile_count=1` for the family, guarded by `common.compile_gate`) and a
+`meta.perf` throughput row land in the bench JSON, so a regression that
+silently splits the sweep back into per-scenario, per-model or per-policy
+programs is visible — and loud — in the trajectory.
 
 The summary row per scenario records the minimum over models of
 (ETTR_WAM - ETTR_ECMP): the paper's claim is that this is >= 0 in every
@@ -24,9 +27,20 @@ import jax
 import numpy as np
 
 from benchmarks import common
-from benchmarks.common import aot_compile, check_finished, emit, timed_call
-from repro.net.jobs import compile_job, job_ettr, job_step_inputs, sweep_job_steps
-from repro.net.scenarios import job_scenarios
+from benchmarks.common import (
+    aot_compile,
+    check_finished,
+    compile_gate,
+    emit,
+    timed_call,
+)
+from repro.net.jobs import (
+    compile_job,
+    job_ettr,
+    job_step_inputs,
+    sweep_job_steps_scenarios,
+)
+from repro.net.scenarios import job_scenarios, stack_pytrees
 from repro.net.sender import SenderSpec, policy_sweep_params
 from repro.net.transport import Policy
 
@@ -61,27 +75,48 @@ def main() -> None:
         )
         for a in ARCHES
     ]
-    spec = SenderSpec(rate_cap=RATE)
+    spec = SenderSpec(rate_cap=RATE, early_exit=True, exit_chunk=16)
     sp = policy_sweep_params(POLICIES, rate=RATE)
     keys = jax.random.split(jax.random.PRNGKey(0), draws)
     scens = job_scenarios(workers=WORKERS, horizon=max(horizon, 2048))
 
-    for scen_name, (topo, sched) in scens.items():
-        scheds, shard = job_step_inputs(jobs, sched, horizon)
+    # stack the scenario axis: one `job_step_inputs` per scenario (shard is
+    # scenario-independent), tree-stacked onto a leading vmap axis
+    inputs = [
+        job_step_inputs(jobs, sched, horizon) for _, sched in scens.values()
+    ]
+    scheds = stack_pytrees([sc for sc, _ in inputs])
+    topos = stack_pytrees([topo for topo, _ in scens.values()])
+    shard = inputs[0][1]
+
+    # --- ONE compile: scenarios x policies x draws x models x steps ---
+    with compile_gate("job_ettr family", max_compiles=1):
         swept, compile_s = aot_compile(
-            sweep_job_steps, topo, scheds, spec, sp, shard, keys,
+            sweep_job_steps_scenarios, topos, scheds, spec, sp, shard, keys,
             horizon=horizon,
         )
         (cct, finished), run_s = timed_call(
-            swept, topo, scheds, sp, shard, keys
+            swept, topos, scheds, sp, shard, keys
         )
-        cct = np.asarray(cct)  # [P, D, M, S]
-        # gate precondition: a sentinel row would fake a flat tail
-        check_finished(f"job_ettr/{scen_name}", finished)
+    cct = np.asarray(cct)  # [C, P, D, M, S]
+    # gate precondition: a sentinel row would fake a flat tail
+    check_finished("job_ettr family", finished)
+    n_sweeps = cct.size // (cct.shape[-1] * cct.shape[-2])  # C x P x D
+    common.perf(
+        "job_ettr_family",
+        fabric_ticks=cct.size * horizon,
+        # nominal payload: the step sweep returns barriers, not sent_total
+        path_decisions=float(np.asarray(shard).sum()) * WORKERS * n_sweeps,
+        compile_s=compile_s,
+        run_s=run_s,
+        nominal_decisions=True,
+    )
 
-        ettr = np.zeros(cct.shape[:-1])
+    ie, iw = POLICIES.index(Policy.ECMP), POLICIES.index(Policy.WAM)
+    for si, scen_name in enumerate(scens):
+        ettr = np.zeros(cct.shape[1:-1])
         for m, job in enumerate(jobs):
-            ettr[..., m], _ = job_ettr(job, cct[..., m, :])
+            ettr[..., m], _ = job_ettr(job, cct[si, ..., m, :])
         for m, job in enumerate(jobs):
             for pi, pol in enumerate(POLICIES):
                 e = ettr[pi, :, m]
@@ -93,17 +128,23 @@ def main() -> None:
                     f";steps={job.total_steps};draws={draws}",
                 )
         # headline gate: WAM whole-job ETTR never below ECMP's
-        ie, iw = POLICIES.index(Policy.ECMP), POLICIES.index(Policy.WAM)
         margin = (ettr[iw].mean(axis=0) - ettr[ie].mean(axis=0)).min()
         emit(
             f"job_ettr/{scen_name}/wam_vs_ecmp",
             0.0,
             f"min_ettr_margin={margin:.4f};wam_ge_ecmp={int(margin >= 0)}",
-            compile_count=1,
-            compile_s=round(compile_s, 3),
-            run_s=round(run_s, 3),
-            total_s=round(compile_s + run_s, 3),
         )
+    sweep_total = compile_s + run_s
+    emit(
+        "job_ettr/family/sweep",
+        sweep_total * 1e6,
+        f"compiles=1_for_{len(scens)}_scenarios_x_{len(POLICIES)}_policies"
+        f"_x_{len(jobs)}_models",
+        compile_count=1,
+        compile_s=round(compile_s, 3),
+        run_s=round(run_s, 3),
+        total_s=round(sweep_total, 3),
+    )
 
 
 if __name__ == "__main__":

@@ -1,15 +1,21 @@
-"""Shared-fabric scenario sweep: all policies x the scenario library.
+"""Shared-fabric scenario sweep: policies x the scenario library, ONE compile.
 
-Per scenario the whole policy grid is ONE compiled computation:
-`sender.sweep_flows` vmaps the unified sender core over a traced
-`SenderParams` policy axis x PRNG draws x the coupled flows — policy is a
-`lax.switch` index, not a recompile.  For contrast (and as the regression
-guard for the sweep-speed claim) the pre-engine idiom is also timed: one
-XLA program per policy via the static-`TransportConfig` wrapper.  Both
-paths' compile counts and compile-vs-run wall-clock are emitted into the
-bench JSON (`compile_count`, `compile_s`, `run_s`, `total_s`), so a
-regression that silently reintroduces per-policy compiles is visible in
-the trajectory.
+The WHOLE section is a single compiled computation: the uniform-grid
+scenario family (`scenarios.pair_scenarios`) rides a stacked leading vmap
+axis (`scenarios.stack_scenarios` -> `sender.sweep_flows_scenarios`), the
+policy grid a traced `SenderParams` axis (`lax.switch` dispatch), PRNG
+draws a key axis, and the coupled flows the engine's flow axis — scenarios
+x 5 policies x draws x flows with exactly one XLA program and the
+early-exit engine retiring dead ticks past the last completion.
+`common.compile_gate` turns any regression back to per-scenario compiles
+into a hard error, and a `meta.perf` row records fabric ticks/s, path
+decisions/s and the run-vs-compile wall split.
+
+For contrast (and as the regression guard for the sweep-speed claim) the
+pre-engine idiom — one XLA program per policy via the static
+`TransportConfig` wrapper — is also timed on the full (non-smoke) pass and
+checked element-wise against the swept results; the smoke pass skips it
+(tier-1 pins the same equivalence at smaller shapes) so CI stays fast.
 
 Reports per-scenario CCT p50/p99 (over flows x draws) and the WAM-vs-ECMP
 p99 speedup — the headline the independent-bundle fabric cannot produce:
@@ -24,16 +30,19 @@ import jax
 import numpy as np
 
 from benchmarks import common
-from benchmarks.common import aot_compile, check_finished, emit, timed_call
-from repro.net.scenarios import (
-    crossjob_background,
-    incast,
-    link_flap,
-    oversubscription,
-    pfc_storm,
-    straggler_worker,
+from benchmarks.common import (
+    aot_compile,
+    check_finished,
+    compile_gate,
+    emit,
+    timed_call,
 )
-from repro.net.sender import SenderSpec, policy_sweep_params, sweep_flows
+from repro.net.scenarios import pair_scenarios, stack_scenarios
+from repro.net.sender import (
+    SenderSpec,
+    policy_sweep_params,
+    sweep_flows_scenarios,
+)
 from repro.net.transport import Policy, TransportConfig, simulate_flows
 
 POLICIES = (
@@ -45,21 +54,8 @@ POLICIES = (
 )
 
 RATE = 32
-
-
-def _scenarios(horizon):
-    """Scenario instances sized so the event schedules overlap the transfer
-    (messages below run for a few hundred ticks at rate 32).  Schedules are
-    built out to the full simulation horizon — a shorter schedule would
-    freeze at its last row and stop flapping/bursting mid-measurement."""
-    return [
-        ("incast", incast(k=8, n_spines=8)),
-        ("oversubscription", oversubscription(ratio=2.0, flows=8, n_spines=4)),
-        ("link_flap", link_flap(flows=4, n_spines=4, period=64, duty=0.5, horizon=horizon)),
-        ("straggler_worker", straggler_worker(workers=4, n_spines=4, factor=0.25)),
-        ("pfc_storm", pfc_storm(flows=4, n_spines=4, start=16, spread=16, duration=128, horizon=horizon)),
-        ("crossjob_background", crossjob_background(flows=4, n_spines=4, load=0.8, burst_len=32, gap_len=32, horizon=horizon)),
-    ]
+FLOWS = 8
+N_SPINES = 4
 
 
 def _baseline_per_policy(topo, sched, n_packets, horizon, keys):
@@ -90,60 +86,86 @@ def main() -> None:
     n_packets = 256 if smoke else 1024
     horizon = 1024 if smoke else 4096
     keys = jax.random.split(jax.random.PRNGKey(0), draws)
-    spec = SenderSpec(rate_cap=RATE)
+    spec = SenderSpec(rate_cap=RATE, early_exit=True)
     sp = policy_sweep_params(POLICIES, rate=RATE)
 
-    for scen_name, (topo, sched) in _scenarios(horizon):
-        # --- unified engine: ONE compile, all 5 policies x draws x flows ---
-        swept, sweep_compile_s = aot_compile(
-            sweep_flows, topo, sched, spec, sp, n_packets, keys,
+    # schedules built to the full simulation horizon — a shorter schedule
+    # would freeze at its last row and stop flapping/bursting mid-measure
+    scens = pair_scenarios(FLOWS, N_SPINES, horizon=horizon)
+    topos, scheds = stack_scenarios(list(scens.values()))
+
+    # --- ONE compile: scenarios x 5 policies x draws x flows ---
+    with compile_gate("topo family", max_compiles=1):
+        swept, compile_s = aot_compile(
+            sweep_flows_scenarios, topos, scheds, spec, sp, n_packets, keys,
             horizon=horizon,
         )
-        r, sweep_run_s = timed_call(swept, topo, sched, sp, keys)
-        ccts = np.asarray(r.cct)  # [policies, draws, F]
-        # gate precondition: p99s over sentinel rows are not measurements
-        check_finished(f"topo/{scen_name}", r.finished)
+        r, run_s = timed_call(swept, topos, scheds, sp, keys)
+    ccts = np.asarray(r.cct)  # [scenarios, policies, draws, F]
+    # gate precondition: p99s over sentinel rows are not measurements
+    check_finished("topo family", r.finished)
+    common.perf(
+        "topo_family",
+        fabric_ticks=ccts.size // FLOWS * horizon,
+        path_decisions=float(np.asarray(r.sent_total).sum()),
+        compile_s=compile_s,
+        run_s=run_s,
+    )
 
-        # --- baseline: the per-policy-compile idiom it replaces ---
-        base_ccts, base_compile_s, base_run_s = _baseline_per_policy(
-            topo, sched, n_packets, horizon, keys
-        )
+    for si, scen_name in enumerate(scens):
+        # --- baseline: the per-policy-compile idiom the engine replaced
+        # (full pass only; tier-1 pins swept==static at smaller shapes) ---
+        if not smoke:
+            topo_s, sched_s = scens[scen_name]
+            base_ccts, base_compile_s, base_run_s = _baseline_per_policy(
+                topo_s, sched_s, n_packets, horizon, keys
+            )
 
         p99s = {}
         mismatch = 0
         for pi, pol in enumerate(POLICIES):
-            flat = ccts[pi].reshape(-1)
+            flat = ccts[si, pi].reshape(-1)
             p50, p99 = np.percentile(flat, 50), np.percentile(flat, 99)
             p99s[pol] = p99
-            mismatch += int(not np.array_equal(ccts[pi], base_ccts[pol]))
+            if not smoke:
+                mismatch += int(
+                    not np.array_equal(ccts[si, pi], base_ccts[pol])
+                )
             emit(
                 f"topo/{scen_name}/{pol.name}",
-                sweep_run_s * 1e6 / ccts.size,
+                run_s * 1e6 / ccts.size,
                 f"p50={p50:.1f};p99={p99:.1f};mean={flat.mean():.1f}"
-                f";flows={topo.flows};draws={draws}",
+                f";flows={FLOWS};draws={draws}",
             )
         emit(
             f"topo/{scen_name}/wam_vs_ecmp",
             0.0,
             f"p99_speedup={p99s[Policy.ECMP] / max(p99s[Policy.WAM], 1e-9):.2f}",
         )
-        sweep_total = sweep_compile_s + sweep_run_s
-        base_total = base_compile_s + base_run_s
-        emit(
-            f"topo/{scen_name}/sweep",
-            sweep_total * 1e6,
-            f"compiles=1_vs_{len(POLICIES)}"
-            f";total_speedup={base_total / max(sweep_total, 1e-9):.2f}"
-            f";swept_matches_static={int(mismatch == 0)}",
-            compile_count=1,
-            compile_s=round(sweep_compile_s, 3),
-            run_s=round(sweep_run_s, 3),
-            total_s=round(sweep_total, 3),
-            baseline_compile_count=len(POLICIES),
-            baseline_compile_s=round(base_compile_s, 3),
-            baseline_run_s=round(base_run_s, 3),
-            baseline_total_s=round(base_total, 3),
-        )
+        if not smoke:
+            base_total = base_compile_s + base_run_s
+            emit(
+                f"topo/{scen_name}/static_baseline",
+                base_total * 1e6,
+                f"compiles={len(POLICIES)}"
+                f";swept_matches_static={int(mismatch == 0)}",
+                baseline_compile_count=len(POLICIES),
+                baseline_compile_s=round(base_compile_s, 3),
+                baseline_run_s=round(base_run_s, 3),
+                baseline_total_s=round(base_total, 3),
+            )
+
+    # the family's compile accounting: one row, one program
+    sweep_total = compile_s + run_s
+    emit(
+        "topo/family/sweep",
+        sweep_total * 1e6,
+        f"compiles=1_for_{len(scens)}_scenarios_x_{len(POLICIES)}_policies",
+        compile_count=1,
+        compile_s=round(compile_s, 3),
+        run_s=round(run_s, 3),
+        total_s=round(sweep_total, 3),
+    )
 
 
 if __name__ == "__main__":

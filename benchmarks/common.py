@@ -17,6 +17,7 @@ pass — CI-sized sanity numbers rather than paper-sized tables.
 """
 from __future__ import annotations
 
+import contextlib
 import time
 from typing import Callable, Dict, List, Tuple
 
@@ -26,11 +27,14 @@ import numpy as np
 __all__ = [
     "timeit",
     "emit",
+    "perf",
     "aot_compile",
+    "compile_gate",
     "timed_call",
     "check_finished",
     "RESULTS",
     "COMPILE_STATS",
+    "PERF_STATS",
     "SMOKE",
     "set_smoke",
 ]
@@ -40,6 +44,14 @@ RESULTS: List[Dict[str, object]] = []
 
 # per-emit compile accounting: {"name", "compile_count", "compile_s"} rows
 COMPILE_STATS: List[Dict[str, object]] = []
+
+# per-family perf accounting (meta.perf in the bench JSON): fabric
+# throughput + run-vs-compile wall split rows appended by `perf`
+PERF_STATS: List[Dict[str, object]] = []
+
+# total `aot_compile` invocations this process (the compile-count gate
+# reads deltas of this around a family sweep — see `compile_gate`)
+AOT_COMPILES = 0
 
 SMOKE = False
 
@@ -102,12 +114,76 @@ def check_finished(name: str, finished) -> None:
         )
 
 
+def perf(
+    name: str,
+    *,
+    fabric_ticks: float,
+    path_decisions: float,
+    compile_s: float,
+    run_s: float,
+    nominal_decisions: bool = False,
+) -> None:
+    """Record one meta.perf row: simulator throughput + wall split.
+
+    `fabric_ticks` is the NOMINAL tick count of the family sweep (number of
+    flow-coupled simulations x horizon) — with early-exit enabled the
+    engine may retire dead ticks early, so ticks/s is a lower bound on true
+    throughput and exactly comparable across bench runs of the same shapes.
+    `path_decisions` is the total packets assigned to paths: the ACTUAL sum
+    of `sent_total` where the sweep returns it, else the nominal payload
+    (message sizes x grid — excludes coded overhead and retransmissions);
+    pass `nominal_decisions=True` in the latter case so the JSON row says
+    which one it is and rows are never cross-compared as the same metric.
+    run.py surfaces these rows as `meta.perf` in the bench JSON so the perf
+    trajectory is diffable run over run.
+    """
+    total = compile_s + run_s
+    PERF_STATS.append(
+        {
+            "name": name,
+            "fabric_ticks": int(fabric_ticks),
+            "path_decisions": int(path_decisions),
+            "path_decisions_nominal": bool(nominal_decisions),
+            "fabric_ticks_per_s": round(fabric_ticks / max(run_s, 1e-9), 1),
+            "path_decisions_per_s": round(
+                path_decisions / max(run_s, 1e-9), 1
+            ),
+            "compile_s": round(compile_s, 3),
+            "run_s": round(run_s, 3),
+            "run_frac": round(run_s / max(total, 1e-9), 3),
+        }
+    )
+
+
 def aot_compile(jit_fn, *args, **kwargs) -> Tuple[Callable, float]:
     """Compile a jitted function ahead of time; returns (compiled,
     compile_seconds).  Call `compiled` with the dynamic args only."""
+    global AOT_COMPILES
+    AOT_COMPILES += 1
     t0 = time.perf_counter()
     compiled = jit_fn.lower(*args, **kwargs).compile()
     return compiled, time.perf_counter() - t0
+
+
+@contextlib.contextmanager
+def compile_gate(name: str, max_compiles: int = 1):
+    """Fail LOUDLY if a block compiles more than `max_compiles` programs.
+
+    The scenario-family sweeps stake their speed on compiling ONE program
+    per family (scenarios ride a vmap axis, not a Python loop).  Wrapping
+    the family's `aot_compile` + run in this gate turns a regression that
+    quietly reintroduces per-scenario compiles back into a hard error
+    instead of a slow CI run someone has to notice.
+    """
+    start = AOT_COMPILES
+    yield
+    used = AOT_COMPILES - start
+    if used > max_compiles:
+        raise RuntimeError(
+            f"{name}: {used} programs compiled where <= {max_compiles} "
+            f"allowed — a scenario-family sweep has split back into "
+            f"per-scenario compiles"
+        )
 
 
 def timed_call(compiled: Callable, *args) -> Tuple[object, float]:

@@ -56,6 +56,11 @@ def main(argv=None) -> None:
     ap.add_argument("--smoke", action="store_true", help="fast small-shape pass")
     ap.add_argument("--json", metavar="PATH", help="write results dict to PATH")
     ap.add_argument("--only", metavar="NAME", help="run sections matching NAME")
+    ap.add_argument(
+        "--max-compiles", type=int, metavar="N", default=None,
+        help="fail if the run compiles more than N programs in total "
+        "(the scenario-family batching gate: see docs/BENCHMARKS.md)",
+    )
     args = ap.parse_args(argv)
     common.set_smoke(args.smoke)
 
@@ -72,6 +77,7 @@ def main(argv=None) -> None:
         timings[name] = round(time.time() - t0, 1)
         print(f"# {name} done in {timings[name]:.1f}s", file=sys.stderr)
 
+    total_compiles = sum(r["compile_count"] for r in common.COMPILE_STATS)
     if args.json:
         payload = {
             "meta": {
@@ -84,13 +90,23 @@ def main(argv=None) -> None:
                 # a sweep silently falling back to per-policy programs)
                 # shows up directly in the bench trajectory.
                 "compile": {
-                    "total_compiles": sum(
-                        r["compile_count"] for r in common.COMPILE_STATS
-                    ),
+                    "total_compiles": total_compiles,
                     "total_compile_s": round(
                         sum(r["compile_s"] for r in common.COMPILE_STATS), 3
                     ),
                     "rows": common.COMPILE_STATS,
+                },
+                # simulator throughput trajectory: fabric ticks/s and path
+                # decisions/s per family sweep, with the run-vs-compile wall
+                # split (see benchmarks.common.perf / docs/BENCHMARKS.md)
+                "perf": {
+                    "rows": common.PERF_STATS,
+                    "total_run_s": round(
+                        sum(r["run_s"] for r in common.PERF_STATS), 3
+                    ),
+                    "total_compile_s": round(
+                        sum(r["compile_s"] for r in common.PERF_STATS), 3
+                    ),
                 },
             },
             "results": common.RESULTS,
@@ -98,6 +114,21 @@ def main(argv=None) -> None:
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=1)
         print(f"# wrote {len(common.RESULTS)} rows to {args.json}", file=sys.stderr)
+
+    # compile-count gate: the family sweeps promise one program per family,
+    # so the whole run's program count is a small constant — fail loudly if
+    # a change reintroduces per-scenario (or per-policy) compiles.  Gate on
+    # BOTH the self-declared emit rows and the actual `aot_compile` call
+    # count, so a section that loops aot_compile without emitting a
+    # compile_count row cannot pass vacuously.
+    actual = max(total_compiles, common.AOT_COMPILES)
+    if args.max_compiles is not None and actual > args.max_compiles:
+        raise SystemExit(
+            f"compile-count gate: {actual} compiled programs (declared "
+            f"{total_compiles}, aot_compile calls {common.AOT_COMPILES}) > "
+            f"--max-compiles {args.max_compiles} (per-scenario compiles "
+            f"have crept back in; see meta.compile rows)"
+        )
 
 
 if __name__ == "__main__":

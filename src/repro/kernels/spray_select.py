@@ -85,22 +85,36 @@ def spray_select_pallas(
     ell: int,
     method: int,
     block: int = 1024,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
-    """Batched path selection; B must be a multiple of `block`."""
+    """Batched path selection for any B >= 1.
+
+    A batch that is not a multiple of `block` is zero-padded up to the next
+    block boundary (the padding lanes compute throwaway selections that are
+    sliced off) — the grid stays fully dense so the kernel body never needs
+    a bounds mask.  `interpret=None` auto-detects: real Pallas lowering on
+    TPU, interpret mode (kernel body executed by XLA:CPU) elsewhere.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     (B,) = counters.shape
     n = c.shape[0]
+    if B == 0:
+        raise ValueError("empty counter batch")
     if n > PATH_PAD:
         raise ValueError(f"at most {PATH_PAD} paths supported, got {n}")
-    if B % block != 0:
-        raise ValueError(f"batch {B} not a multiple of block {block}")
+    pad = -B % block
+    if pad:
+        counters = jnp.concatenate(
+            [counters, jnp.zeros((pad,), counters.dtype)]
+        )
     m = jnp.int32(1 << ell)
     c_pad = jnp.full((PATH_PAD,), m, jnp.int32).at[:n].set(c.astype(jnp.int32))
     seed = jnp.stack(
         [jnp.asarray(sa, jnp.uint32), jnp.asarray(sb, jnp.uint32)]
     )
-    grid = (B // block,)
-    return pl.pallas_call(
+    grid = ((B + pad) // block,)
+    out = pl.pallas_call(
         functools.partial(_kernel, ell=ell, method=method),
         grid=grid,
         in_specs=[
@@ -109,6 +123,7 @@ def spray_select_pallas(
             pl.BlockSpec((2,), lambda i: (0,)),  # seed (sa, sb)
         ],
         out_specs=pl.BlockSpec((block,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((B,), jnp.int32),
+        out_shape=jax.ShapeDtypeStruct((B + pad,), jnp.int32),
         interpret=interpret,
     )(counters, c_pad, seed)
+    return out[:B] if pad else out

@@ -73,6 +73,7 @@ __all__ = [
     "cluster_inputs",
     "run_cluster_rounds",
     "sweep_cluster_rounds",
+    "sweep_cluster_rounds_scenarios",
     "jain_index",
     "link_utilization",
     "cluster_metrics",
@@ -182,12 +183,26 @@ def place_jobs(
 
 
 def cluster_topology(
-    cluster: Cluster, n_spines: int = 4, **leaf_spine_kwargs
+    cluster: Cluster,
+    n_spines: int = 4,
+    *,
+    n_leaves: Optional[int] = None,
+    **leaf_spine_kwargs,
 ) -> TopologyParams:
     """The shared leaf–spine fabric under a placed cluster: F = sum(W_j)
-    coupled flows, each job riding its own ring over the common links."""
+    coupled flows, each job riding its own ring over the common links.
+
+    `n_leaves` may over-provision the grid beyond the placement's own leaf
+    count so that different placements (e.g. co-located vs disjoint) share
+    one link-array shape and can ride a stacked scenario axis
+    (`scenarios.stack_scenarios`); the extra leaves' links idle and change
+    nothing.
+    """
     return leaf_spine(
-        cluster.n_leaves, n_spines, cluster.flow_pairs(), **leaf_spine_kwargs
+        max(cluster.n_leaves, n_leaves or 0),
+        n_spines,
+        cluster.flow_pairs(),
+        **leaf_spine_kwargs,
     )
 
 
@@ -238,11 +253,41 @@ def solo_size_variants(cluster: Cluster, sizes: np.ndarray) -> np.ndarray:
 
 
 def cluster_inputs(
-    cluster: Cluster, sched: EventSchedule, horizon: int
+    cluster: Cluster,
+    sched: EventSchedule,
+    horizon: int,
+    rounds: Optional[int] = None,
 ) -> Tuple[EventSchedule, jax.Array]:
     """Batched runner inputs: per-round event schedules re-based at each
-    round's planned offset, plus the [1 + J, R, F] size variants."""
+    round's planned offset, plus the [1 + J, R, F] size variants.
+
+    `rounds` pads the round axis up to a common length (R = rounds) with
+    all-silent rounds — every flow size 0, so they complete at tick 0 and
+    emit nothing — letting clusters with different round counts (e.g. a
+    staggered placement next to an aligned one) share one array shape on a
+    stacked scenario axis.  Padded rounds read events past the planned
+    timeline at job 0's trailing cadence and are never consulted by
+    `cluster_metrics` (each job's slice ends at its real last round).
+    """
     sizes, offsets = cluster_round_table(cluster)
+    if rounds is not None:
+        if rounds < cluster.rounds:
+            raise ValueError(
+                f"rounds={rounds} < the cluster's {cluster.rounds} rounds"
+            )
+        pad = rounds - cluster.rounds
+        if pad:
+            sizes = np.concatenate(
+                [sizes, np.zeros((pad, cluster.flows), np.int32)]
+            )
+            cadence = (
+                max(float(offsets[-1] - offsets[-2]), 1.0)
+                if len(offsets) > 1 else 1.0
+            )
+            extra = offsets[-1] + np.round(
+                cadence * np.arange(1, pad + 1)
+            ).astype(offsets.dtype)
+            offsets = np.concatenate([offsets, extra])
     scheds = scheduled_events(sched, offsets, horizon)
     return scheds, jnp.asarray(solo_size_variants(cluster, sizes))
 
@@ -265,6 +310,12 @@ def run_cluster_rounds(
     so contended-vs-solo differences are contention, not noise.  Returns
     ``{"cct": [..., R, F], "finished": [..., R, F],
     "link_served": [..., R, L]}``.
+
+    The round axis runs as a SEQUENTIAL `lax.map` (variant axes vmap
+    inside each round): with the engine's early-exit mode every round then
+    stops at its own last completion instead of synchronizing with the
+    slowest round of the whole batch — silent rounds (size 0 everywhere,
+    e.g. staggered-start padding) cost one chunk, not the global maximum.
     """
     R = sizes.shape[-2]
 
@@ -276,10 +327,17 @@ def run_cluster_rounds(
             link_served=r.link_served, link_busy=r.link_busy,
         )
 
-    rounds = lambda s: jax.vmap(one_round)(scheds, s, jnp.arange(R))  # noqa: E731
-    for _ in range(sizes.ndim - 2):  # map any leading variant axes
-        rounds = jax.vmap(rounds, in_axes=(0,))
-    return rounds(sizes)
+    def per_round(sched_r, sizes_r, idx):
+        f = lambda s: one_round(sched_r, s, idx)  # noqa: E731
+        for _ in range(sizes.ndim - 2):  # map any leading variant axes
+            f = jax.vmap(f)
+        return f(sizes_r)
+
+    out = jax.lax.map(
+        lambda args: per_round(*args),
+        (scheds, jnp.moveaxis(sizes, -2, 0), jnp.arange(R)),
+    )
+    return {k: jnp.moveaxis(v, 0, -2) for k, v in out.items()}
 
 
 @functools.partial(jax.jit, static_argnames=("spec", "horizon"))
@@ -306,6 +364,38 @@ def sweep_cluster_rounds(
             lambda k: run_cluster_rounds(topo, scheds, spec, s, sizes, k, horizon)
         )(keys)
     )(sp)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "horizon"))
+def sweep_cluster_rounds_scenarios(
+    topos: TopologyParams,
+    scheds: EventSchedule,
+    spec: SenderSpec,
+    sp: SenderParams,
+    sizes: jax.Array,
+    keys: jax.Array,
+    horizon: int = 2048,
+) -> Dict[str, jax.Array]:
+    """`sweep_cluster_rounds` with a leading SCENARIO axis C everywhere.
+
+    `topos` / `scheds` / `sizes` carry stacked per-scenario arrays (uniform
+    shapes — pad round counts via `cluster_inputs(..., rounds=R_max)` and
+    build placements on a common leaf grid), so the whole cluster scenario
+    library x policies x draws x variants x rounds compiles ONCE:
+    ``{"cct": [C, P, D, V, R, F], ...}``.  Scenario c computes exactly what
+    `sweep_cluster_rounds(topos[c], scheds[c], ..., sizes[c], ...)` would.
+
+    Like the round axis, the scenario axis is a SEQUENTIAL `lax.map`
+    (policies/draws/variants stay vmapped inside): early-exit then settles
+    per scenario, so an uncontended library entry doesn't pay for the
+    oversubscribed one's tail ticks.
+    """
+    return jax.lax.map(
+        lambda args: sweep_cluster_rounds(
+            args[0], args[1], spec, sp, args[2], keys, horizon
+        ),
+        (topos, scheds, sizes),
+    )
 
 
 def jain_index(x: np.ndarray, axis: int = -1) -> np.ndarray:

@@ -72,6 +72,7 @@ __all__ = [
     "job_step_inputs",
     "run_job_steps",
     "sweep_job_steps",
+    "sweep_job_steps_scenarios",
     "run_job",
     "sweep_job",
     "job_ettr",
@@ -330,15 +331,20 @@ def run_job_steps(
     and reports the synchronous barrier (max over workers).  Returns
     ``(cct[S], finished[S])`` — finished is True only when every worker
     completed within the horizon (False: the barrier is the sentinel).
+
+    The step axis is a SEQUENTIAL `lax.map` so that, with the engine's
+    early-exit mode, each ring step stops at its own barrier instead of
+    synchronizing with the slowest step of the schedule.
     """
     S = shard.shape[0]
 
-    def one(sched_s, shard_s, idx):
+    def one(args):
+        sched_s, shard_s, idx = args
         k = jax.random.fold_in(key, idx)
         r = run_flows_sized(topo, sched_s, spec, sp, shard_s, k, horizon)
         return jnp.max(r.cct), jnp.all(r.finished)
 
-    return jax.vmap(one)(scheds, shard, jnp.arange(S))
+    return jax.lax.map(one, (scheds, shard, jnp.arange(S)))
 
 
 @functools.partial(jax.jit, static_argnames=("spec", "horizon"))
@@ -370,6 +376,39 @@ def sweep_job_steps(
     return jax.vmap(
         lambda s: jax.vmap(lambda k: per_model(s, k))(keys)
     )(sp)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "horizon"))
+def sweep_job_steps_scenarios(
+    topos: TopologyParams,
+    scheds: EventSchedule,
+    spec: SenderSpec,
+    sp: SenderParams,
+    shard: jax.Array,
+    keys: jax.Array,
+    horizon: int = 2048,
+) -> Tuple[jax.Array, jax.Array]:
+    """`sweep_job_steps` with a leading SCENARIO axis C on topology/events.
+
+    `topos` carries stacked per-scenario `TopologyParams` arrays and
+    `scheds` stacked [C, M, S, horizon, L] event schedules (one
+    `job_step_inputs` per scenario, tree-stacked; the job scenario library
+    already shares one topology shape).  `shard[M, S]` is scenario-
+    independent.  Returns ``(cct[C, P, D, M, S], finished[...])`` — the
+    WHOLE scenario library x policies x draws x models x steps as ONE
+    compiled XLA program; scenario c computes exactly what
+    `sweep_job_steps(topos[c], scheds[c], ...)` would.
+
+    The scenario axis is a SEQUENTIAL `lax.map` (policies/draws/models stay
+    vmapped inside): with early-exit enabled each scenario settles at its
+    own pace instead of paying for the slowest library entry's tail.
+    """
+    return jax.lax.map(
+        lambda args: sweep_job_steps(
+            args[0], args[1], spec, sp, shard, keys, horizon
+        ),
+        (topos, scheds),
+    )
 
 
 def job_ettr(

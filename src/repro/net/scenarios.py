@@ -41,6 +41,7 @@ from __future__ import annotations
 
 from typing import Dict, Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -63,6 +64,10 @@ __all__ = [
     "pfc_storm",
     "crossjob_background",
     "SCENARIOS",
+    "pair_scenarios",
+    "PAIR_SCENARIO_NAMES",
+    "stack_pytrees",
+    "stack_scenarios",
     "job_scenarios",
     "JOB_SCENARIO_NAMES",
     "cluster_scenarios",
@@ -276,6 +281,178 @@ SCENARIOS: Dict[str, callable] = {
 }
 
 
+# --- uniform-grid pair scenarios: the library as ONE stackable family -----
+
+PAIR_SCENARIO_NAMES = (
+    "incast",
+    "oversubscription",
+    "link_flap",
+    "straggler_worker",
+    "pfc_storm",
+    "crossjob_background",
+)
+
+
+def pair_scenarios(
+    flows: int = 8,
+    n_spines: int = 4,
+    *,
+    horizon: int = 2048,
+    link_capacity: float = 8.0,
+    host_rate: float = 32.0,
+    oversub_ratio: float = 2.0,
+    flap_period: int = 64,
+    flap_duty: float = 0.5,
+    straggler_factor: float = 0.25,
+    storm_start: int = 16,
+    storm_spread: int = 16,
+    storm_duration: int = 128,
+    bg_load: float = 0.8,
+    bg_burst: int = 32,
+    bg_gap: int = 32,
+    bg_seed: int = 0,
+    **kw,
+) -> Dict[str, Scenario]:
+    """The contention library re-placed on ONE uniform leaf–spine grid.
+
+    Every entry shares the grid (2 * flows leaves, `n_spines` spines) and
+    flow count, so the whole family has uniform array shapes: F flows, n =
+    n_spines paths, L = 4 * flows * n_spines links.  Entries differ only in
+    their (traced) flow placement, capacities and event schedules — which
+    is what lets `stack_scenarios` put the library on a leading vmap axis
+    and `sender.sweep_flows_scenarios` compile the whole family x policies
+    x draws as ONE XLA program (the one-compile-per-family idiom; the
+    per-scenario constructors above keep their historical shapes for
+    scenario-at-a-time use).
+
+    Placements: incast fans flows 1..F into leaf 0, straggler_worker runs a
+    ring over leaves 0..F-1 (leaf 0's uplinks at `straggler_factor`), and
+    the rest use disjoint pairs (2f -> 2f+1); unused leaves' links idle
+    (they change nothing — degradations default off and no traffic ever
+    routes over them).
+    """
+    n_leaves = 2 * flows
+
+    def grid(pairs, cap):
+        return leaf_spine(
+            n_leaves, n_spines, pairs, uplink_capacity=cap, **kw
+        )
+
+    disjoint = [(2 * f, 2 * f + 1) for f in range(flows)]
+    fan_in = [(f + 1, 0) for f in range(flows)]
+    ring = [(w, (w + 1) % flows) for w in range(flows)]
+    topo = grid(disjoint, link_capacity)
+    L = topo.links
+    straggle = np.ones((1, L), np.float32)
+    for s in range(n_spines):
+        straggle[0, uplink_id(0, s, n_leaves, n_spines)] = straggler_factor
+    out: Dict[str, Scenario] = {
+        "incast": (grid(fan_in, link_capacity), null_schedule(L)),
+        "oversubscription": (
+            grid(disjoint, host_rate / (oversub_ratio * n_spines)),
+            null_schedule(L),
+        ),
+        "link_flap": (
+            topo,
+            _schedule(
+                _flap_caps(
+                    n_leaves, n_spines, L, horizon, flap_period, flap_duty, 0
+                ),
+                np.zeros((horizon, L), np.float32),
+            ),
+        ),
+        "straggler_worker": (
+            grid(ring, link_capacity),
+            _schedule(straggle, np.zeros((1, L), np.float32)),
+        ),
+        "pfc_storm": (
+            topo,
+            _schedule(
+                _storm_caps(
+                    n_leaves, n_spines, L, horizon,
+                    storm_start, storm_spread, storm_duration,
+                ),
+                np.zeros((horizon, L), np.float32),
+            ),
+        ),
+        "crossjob_background": (
+            topo,
+            _schedule(
+                np.ones((horizon, L), np.float32),
+                _background_arrivals(
+                    np.asarray(topo.capacity), horizon,
+                    bg_load, bg_burst, bg_gap, bg_seed,
+                ),
+            ),
+        ),
+    }
+    assert tuple(out) == PAIR_SCENARIO_NAMES
+    return out
+
+
+def stack_pytrees(trees: Sequence):
+    """`jnp.stack` the leaves of uniform pytrees onto a new leading axis.
+
+    The bench families use this to stack per-scenario runner inputs
+    (topology pytrees, pre-based event schedules) for the one-compile
+    scenario-axis sweeps.  Static fields (e.g. `TopologyParams.fb_delay` /
+    `ring_len`) are part of the tree structure, so entries with different
+    statics raise a tree-structure mismatch rather than silently splitting
+    the jit cache; mismatched leaf shapes raise from `jnp.stack`.
+    """
+    trees = list(trees)
+    if not trees:
+        raise ValueError("need at least one pytree to stack")
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def stack_scenarios(scens: Sequence[Scenario]) -> Scenario:
+    """Stack uniform-shaped scenarios on a NEW leading vmap axis.
+
+    Topologies must agree on static fields (fb_delay, ring_len — jit cache
+    keys) and array shapes; their array leaves (routing, capacities,
+    latencies, degradation rates) become per-scenario rows.  Event
+    schedules may have different horizons: each is first extended to the
+    longest by repeating its final row, which is bit-identical under the
+    fabric's "last row persists" read (`shared_fabric_tick` reads row
+    min(t, T-1)).  The result feeds `sender.sweep_flows_scenarios` /
+    `jobs.sweep_job_steps_scenarios`-style family sweeps: one compiled
+    program for the whole library.
+    """
+    scens = list(scens)
+    if not scens:
+        raise ValueError("need at least one scenario to stack")
+    topos = [t for t, _ in scens]
+    scheds = [s for _, s in scens]
+    statics = {(t.fb_delay, t.ring_len) for t in topos}
+    if len(statics) != 1:
+        raise ValueError(f"scenario statics differ: {statics}")
+    shapes = {
+        tuple(leaf.shape for leaf in jax.tree.leaves(t)) for t in topos
+    }
+    if len(shapes) != 1:
+        raise ValueError(
+            f"scenario topology shapes differ (not stackable): {shapes}"
+        )
+    T = max(s.horizon for s in scheds)
+
+    def extend(s: EventSchedule) -> EventSchedule:
+        pad = T - s.horizon
+        if pad == 0:
+            return s
+        rep = lambda x: jnp.concatenate(  # noqa: E731
+            [x, jnp.repeat(x[-1:], pad, axis=0)]
+        )
+        return EventSchedule(
+            cap_scale=rep(s.cap_scale), bg_arrivals=rep(s.bg_arrivals)
+        )
+
+    return (
+        stack_pytrees(topos),
+        stack_pytrees([extend(s) for s in scheds]),
+    )
+
+
 # --- job scenarios: the same contention patterns on a RING placement ------
 
 JOB_SCENARIO_NAMES = (
@@ -437,17 +614,25 @@ def cluster_scenarios(
         colocated=True,
         start_steps=[j * stagger_steps for j in range(len(jobs))],
     )
+    # every placement is built on the LARGEST placement's leaf grid so the
+    # whole family shares one link-array shape (co-located jobs leave the
+    # disjoint grid's extra leaves idle, which changes nothing) — this is
+    # what lets benchmarks stack the scenarios on a vmap axis and compile
+    # the family once (`stack_scenarios` + `sweep_cluster_rounds_scenarios`)
+    n_leaves = max(coloc.n_leaves, disjoint.n_leaves)
     topo_c = cluster_topology(
-        coloc, n_spines, uplink_capacity=link_capacity, **kw
+        coloc, n_spines, n_leaves=n_leaves,
+        uplink_capacity=link_capacity, **kw
     )
     topo_d = cluster_topology(
-        disjoint, n_spines, uplink_capacity=link_capacity, **kw
+        disjoint, n_spines, n_leaves=n_leaves,
+        uplink_capacity=link_capacity, **kw
     )
     topo_o = cluster_topology(
-        coloc, n_spines,
+        coloc, n_spines, n_leaves=n_leaves,
         uplink_capacity=host_rate / (oversub_ratio * n_spines), **kw
     )
-    L, n_leaves = topo_c.links, coloc.n_leaves
+    L = topo_c.links
 
     straggle = np.ones((1, L), np.float32)
     leaf_a0 = coloc.jobs[0].leaves[0]

@@ -28,6 +28,24 @@ The one-compile sweep idiom::
     r = sweep_flows(topo, sched, spec, sp, n_packets, keys, horizon=2048)
     r.cct                                        # [policies, draws, flows]
 
+Hot-loop fast paths (all bit-identical to the formulations they replaced;
+pinned by the golden traces and tests/test_fastpath.py):
+
+  * per-tick PRNG is pre-split into a [horizon] key array (`tick_keys`)
+    instead of fold_in+split inside the scan body;
+  * path assignment segment-sums the emission lanes onto their paths via
+    a branchless compare-count (no float [rate_cap, n] one-hot per tick;
+    a literal scatter-add was measured and rejected — XLA:CPU lowers it
+    to a serial per-lane loop inside the scan);
+  * `SenderSpec(early_exit=True)` scans the horizon in `exit_chunk`-tick
+    chunks inside a while_loop that stops once every flow completed, ARQ
+    debt drained and the fabric drained (`fabric_quiescent`) — identical
+    `cct`/`sent_total`/`dropped_total`/`received`/`finished`, dead ticks
+    skipped;
+  * `sweep_flows_scenarios` adds a stacked scenario axis on top of the
+    policy/draw sweep: a whole scenario library in ONE compiled program
+    (see `scenarios.stack_scenarios`).
+
 Policies (§2, §4 + the baselines the paper positions against):
 
   * ECMP          — flow-hash: every packet of the flow on one fixed path.
@@ -81,6 +99,8 @@ __all__ = [
     "policy_sweep_params",
     "completion_need",
     "assign_paths",
+    "tick_keys",
+    "fabric_quiescent",
     "run_sender",
     "run_message_on",
     "run_message",
@@ -88,6 +108,7 @@ __all__ = [
     "run_flows_sized",
     "sweep_message",
     "sweep_flows",
+    "sweep_flows_scenarios",
 ]
 
 
@@ -113,6 +134,15 @@ class SenderSpec:
     ell: int = 10                          # profile precision (m = 2**ell)
     method: SprayMethod = SprayMethod.SHUFFLE_1
     rate_cap: int = 32                     # emission lane width (packets/tick)
+    # Early-exit execution mode: scan the horizon in `exit_chunk`-tick
+    # chunks inside a while_loop that stops once every flow completed, ARQ
+    # debt is drained and the fabric is quiescent (`fabric_quiescent`).
+    # Bit-identical to the full-horizon scan on cct / sent_total /
+    # dropped_total / received / finished (the stop condition freezes all of
+    # them); final_b and the link counters may differ (the controller and
+    # background traffic would keep evolving over the skipped dead ticks).
+    early_exit: bool = False
+    exit_chunk: int = 64                   # ticks per early-exit scan chunk
 
 
 @jax.tree_util.register_dataclass
@@ -253,10 +283,94 @@ def assign_paths(
         return select_path(profile.c, keys)
 
     paths = jax.lax.switch(policy, [ecmp, rr, rand_static, rand_adaptive, wam])
-    onehot = jax.nn.one_hot(paths, n, dtype=jnp.float32)
-    arrivals = jnp.sum(onehot * live[:, None], axis=0)
+    # segment-sum of the live lanes onto their paths as a branchless
+    # compare-count (the spray_select kernel's sum-of-comparisons idiom):
+    # bit-identical to the historical one_hot(paths, n) float reduction
+    # (0/1 contributions sum exactly in any order).  Measured on XLA:CPU
+    # this beats both that float einsum and a `.at[paths].add` scatter —
+    # scatter lowers to a serial per-lane loop inside the hot scan body.
+    hits = (paths[None, :] == jnp.arange(n, dtype=jnp.int32)[:, None])
+    arrivals = jnp.sum(hits & live[None, :], axis=1).astype(jnp.float32)
     spray = dataclasses.replace(spray, j=spray.j + k_emit.astype(jnp.uint32))
     return arrivals, spray
+
+
+def tick_keys(k_loop: jax.Array, horizon: int) -> jax.Array:
+    """Pre-split the per-tick PRNG keys, hoisted out of the scan body.
+
+    Bit-identical to the historical in-loop ``split(fold_in(k_loop, t))``:
+    fold_in and split are deterministic functions of (key, tick), so
+    vmapping them over the tick index yields exactly the key stream the
+    per-tick derivation produced — the scan body then just reads its slice
+    instead of re-hashing the loop key every tick.  Returns the stacked
+    split outputs with a leading [horizon] axis (row t = (ka_t, kb_t)).
+    """
+    return jax.vmap(
+        lambda t: jax.random.split(jax.random.fold_in(k_loop, t))
+    )(jnp.arange(horizon))
+
+
+def fabric_quiescent(state) -> jax.Array:
+    """True when no flow traffic is left anywhere in the fabric state.
+
+    Checks the queue backlog, the delivery ring, and the pending-drop
+    feedback ring (plus the store-and-forward pipeline on fabrics that have
+    one) — the pieces that could still emit, drop, or deliver a flow packet
+    on a later tick.  Combined with "every flow done" (and "ARQ debt
+    drained"), this is the early-exit stop condition: once it holds, no
+    completion-relevant SimResult field can change again.
+    """
+    parts = [state.queue, state.arrive_ring, state.drop_ring]
+    forward = getattr(state, "forward", None)
+    if forward is not None:
+        parts.append(forward)
+    quiet = jnp.all(parts[0] == 0)
+    for p in parts[1:]:
+        quiet = quiet & jnp.all(p == 0)
+    return quiet
+
+
+def _scan_early_exit(spec, sender_tick, carry0, tkeys, horizon: int):
+    """Run `sender_tick` over the horizon with early termination.
+
+    Chunked `lax.scan` inside a `lax.while_loop`: after each `exit_chunk`
+    ticks the loop re-checks the stop condition — every flow completed
+    (`done_at >= 0`), retransmission debt drained (ARQ only), and the
+    fabric quiescent (`fabric_quiescent`).  Once that holds, no further
+    tick can emit, drop or deliver a flow packet, so skipping the remaining
+    ticks is bit-identical on every completion-relevant field; a carry that
+    never settles runs all ceil-chunks and matches the full scan exactly.
+    The tail ticks (horizon % exit_chunk) always run: on a settled carry
+    they are no-ops on those fields, on an unsettled one they are the last
+    ticks of the horizon.  Under vmap the while_loop runs until every batch
+    element settles, with settled elements' carries frozen by the batching
+    rule's select — the invariant above keeps those extra body applications
+    observation-free.
+    """
+    chunk = max(1, min(spec.exit_chunk, horizon))
+    n_full, rem = divmod(horizon, chunk)
+
+    def settled(carry):
+        fabric, _ctrl, _spray, _sched, debt, done_at, _sent, _known = carry
+        done = jnp.all(done_at >= 0) & fabric_quiescent(fabric)
+        if not spec.coded:
+            done = done & jnp.all(debt == 0)
+        return done
+
+    def cond(loop):
+        i, carry = loop
+        return (i < n_full) & ~settled(carry)
+
+    def body(loop):
+        i, carry = loop
+        ks = jax.lax.dynamic_slice_in_dim(tkeys, i * chunk, chunk)
+        carry, _ = jax.lax.scan(sender_tick, carry, ks)
+        return (i + 1, carry)
+
+    _, carry = jax.lax.while_loop(cond, body, (jnp.int32(0), carry0))
+    if rem:
+        carry, _ = jax.lax.scan(sender_tick, carry, tkeys[n_full * chunk:])
+    return carry
 
 
 def run_sender(
@@ -309,11 +423,12 @@ def run_sender(
     need = completion_need(n_packets, spec.coded, sp.code_overhead)
     rate = jnp.minimum(sp.rate, spec.rate_cap)  # lanes are rate_cap wide
     adaptive = (sp.policy == Policy.RAND_ADAPTIVE) | (sp.policy == Policy.WAM)
+    tkeys = tick_keys(k_loop, horizon)
 
-    def sender_tick(carry, _):
+    def sender_tick(carry, kt):
         (fabric, ctrl, spray, sent_sched, debt, done_at, sent_pp, known) = carry
         t = fabric.t
-        ka, kb = jax.random.split(jax.random.fold_in(k_loop, t))
+        ka, kb = kt[0], kt[1]
 
         # --- emit budget ---
         if spec.coded:
@@ -387,9 +502,11 @@ def run_sender(
         jnp.zeros(lead + (n,), jnp.float32),
         (zeros, zeros),
     )
-    (fabric, ctrl, _, _, _, done_at, sent_pp, _), _ = jax.lax.scan(
-        sender_tick, carry0, jnp.arange(horizon)
-    )
+    if spec.early_exit:
+        carry = _scan_early_exit(spec, sender_tick, carry0, tkeys, horizon)
+    else:
+        carry, _ = jax.lax.scan(sender_tick, carry0, tkeys)
+    (fabric, ctrl, _, _, _, done_at, sent_pp, _) = carry
     cct = jnp.where(done_at >= 0, done_at.astype(jnp.float32), float(horizon))
     if link_fn is not None:
         link_served, link_busy = link_fn(fabric)
@@ -635,5 +752,42 @@ def sweep_flows(
     return jax.vmap(
         lambda s: jax.vmap(
             lambda k: run_flows(topo, sched, spec, s, n_packets, k, horizon)
+        )(keys)
+    )(sp)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "n_packets", "horizon"))
+def sweep_flows_scenarios(
+    topos: TopologyParams,
+    scheds: EventSchedule,
+    spec: SenderSpec,
+    sp: SenderParams,
+    n_packets: int,
+    keys: jax.Array,
+    horizon: int = 4096,
+) -> SimResult:
+    """`sweep_flows` with a leading SCENARIO axis on the topology/schedule.
+
+    `topos` / `scheds` carry stacked per-scenario arrays (uniform shapes —
+    see `scenarios.stack_scenarios`), so the whole scenario library x P
+    sweep points x D draws x F flows compiles into ONE XLA program instead
+    of one per scenario: `cct[C, P, D, F]`.  Scenario c runs exactly the
+    computation `sweep_flows(topos[c], scheds[c], ...)` would — the
+    scenario axis is an outer vmap, not a semantic change.
+    """
+    return jax.vmap(
+        lambda tp, sc: _sweep_flows_traced(
+            tp, sc, spec, sp, n_packets, keys, horizon
+        )
+    )(topos, scheds)
+
+
+def _sweep_flows_traced(
+    topo, sched, spec, sp, n_packets, keys, horizon
+) -> SimResult:
+    """Unjitted `sweep_flows` body (vmap-able over topology pytrees)."""
+    return jax.vmap(
+        lambda s: jax.vmap(
+            lambda k: _run_flows(topo, sched, spec, s, n_packets, k, horizon)
         )(keys)
     )(sp)

@@ -50,6 +50,7 @@ __all__ = [
     "leaf_spine",
     "null_schedule",
     "init_shared_fabric",
+    "scatter_delivery",
     "shared_fabric_tick",
     "single_flow_stepper",
 ]
@@ -240,6 +241,25 @@ def _link_sum(vals: jax.Array, route: jax.Array, links: int) -> jax.Array:
     )
 
 
+def scatter_delivery(
+    arrive_ring: jax.Array,  # float32[F, ring_len]
+    slot: jax.Array,         # int32[F, n] landing slot per (flow, path)
+    exiting: jax.Array,      # float32[F, n] packets leaving the last hop
+) -> jax.Array:
+    """Deposit each (flow, path)'s exiting packets into its landing slot.
+
+    Replaces the historical ``one_hot(slot, ring_len)`` + einsum update,
+    which materialized an [F, n, ring_len] tensor every tick.  The per-slot
+    contributions are accumulated into a zero buffer first and added to the
+    ring in one op, preserving the einsum's float association
+    (ring + sum_n(contribs)) bit for bit.
+    """
+    F = arrive_ring.shape[0]
+    fidx = jnp.broadcast_to(jnp.arange(F)[:, None], slot.shape)
+    deposits = jnp.zeros_like(arrive_ring).at[fidx, slot].add(exiting)
+    return arrive_ring + deposits
+
+
 def shared_fabric_tick(
     topo: TopologyParams,
     sched: EventSchedule,
@@ -309,10 +329,7 @@ def shared_fabric_tick(
     delay = topo.latency + jnp.round(path_qdelay).astype(jnp.int32)
     delay = jnp.minimum(delay, topo.ring_len - 1)
     slot = (t + 1 + delay) % topo.ring_len              # [F, n]
-    ring_idx = jax.nn.one_hot(slot, topo.ring_len, dtype=exiting.dtype)
-    arrive_ring = state.arrive_ring + jnp.einsum(
-        "fn,fnr->fr", exiting, ring_idx
-    )
+    arrive_ring = scatter_delivery(state.arrive_ring, slot, exiting)
     cur = t % topo.ring_len
     landed = arrive_ring[:, cur]
     arrive_ring = arrive_ring.at[:, cur].set(0.0)

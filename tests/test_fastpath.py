@@ -1,0 +1,303 @@
+"""Fast-path equivalence suite: every hot-loop transform == its reference.
+
+The perf pass (scatter delivery ring, compare-count path assignment,
+hoisted pre-split RNG, early-exit horizons, scenario-axis batching, padded
+spray_select blocks) must be REFACTORS, not semantic changes: each test
+here pins one transform against the formulation it replaced.  Golden
+traces (tests/test_sender_engine.py) additionally pin the composed engine
+bit-for-bit; this file isolates the individual claims so a regression
+points at the guilty transform.
+
+Property tests use hypothesis where available and fall back to a fixed
+seed sweep otherwise (the seed image ships without hypothesis).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.profile import quantize_profile
+from repro.kernels import ops, ref
+from repro.net.sender import (
+    Policy,
+    SenderSpec,
+    fabric_quiescent,
+    policy_sweep_params,
+    run_flows_sized,
+    sender_params,
+    sweep_flows,
+    sweep_flows_scenarios,
+    sweep_message,
+    tick_keys,
+)
+from repro.net.fabric import FabricParams
+from repro.net.scenarios import pair_scenarios, stack_scenarios
+from repro.net.topology import leaf_spine, null_schedule, scatter_delivery
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+# the fields the early-exit mode promises bit-identical (final_b and the
+# link counters are exempt: controller/background keep evolving over the
+# dead ticks a full-horizon scan still executes)
+COMPLETION_FIELDS = ("cct", "sent_total", "dropped_total", "received", "finished")
+
+RNG = np.random.default_rng(0)
+
+
+def _params(n=4):
+    return FabricParams(
+        capacity=jnp.full((n,), 4.0),
+        latency=jnp.full((n,), 2, jnp.int32),
+        queue_limit=jnp.full((n,), 24.0),
+        ecn_threshold=jnp.full((n,), 6.0),
+        degrade_p=jnp.full((n,), 0.02),
+        recover_p=jnp.full((n,), 0.1),
+        degrade_factor=jnp.full((n,), 0.05),
+        fb_delay=4,
+        ring_len=64,
+    )
+
+
+def _assert_completion_equal(a, b, ctx=""):
+    for field in COMPLETION_FIELDS:
+        x = np.asarray(getattr(a, field))
+        y = np.asarray(getattr(b, field))
+        assert np.array_equal(x, y), (ctx, field)
+
+
+# ---------------------------------------------------------------------------
+# scatter delivery ring == one-hot/einsum reference
+# ---------------------------------------------------------------------------
+def _check_scatter_ring(seed: int) -> None:
+    rng = np.random.default_rng(seed)
+    F, n, R = int(rng.integers(1, 7)), int(rng.integers(1, 9)), 32
+    ring = jnp.asarray(rng.random((F, R)).astype(np.float32) * 8)
+    slot = jnp.asarray(rng.integers(0, R, (F, n)), jnp.int32)
+    exiting = jnp.asarray(rng.random((F, n)).astype(np.float32) * 3)
+    got = jax.jit(scatter_delivery)(ring, slot, exiting)
+    onehot = jax.nn.one_hot(slot, R, dtype=exiting.dtype)
+    want = ring + jnp.einsum("fn,fnr->fr", exiting, onehot)
+    assert np.array_equal(np.asarray(got), np.asarray(want)), seed
+
+
+if HAVE_HYPOTHESIS:
+
+    @given(st.integers(0, 2**20))
+    @settings(max_examples=30, deadline=None)
+    def test_scatter_ring_matches_onehot_einsum(seed):
+        _check_scatter_ring(seed)
+
+else:
+
+    @pytest.mark.parametrize("seed", list(range(30)))
+    def test_scatter_ring_matches_onehot_einsum(seed):
+        _check_scatter_ring(seed)
+
+
+def test_scatter_ring_colliding_slots():
+    """All paths landing in one slot (the zero-delay common case) must sum
+    exactly like the einsum reduction."""
+    ring = jnp.asarray(RNG.random((3, 16)).astype(np.float32))
+    slot = jnp.full((3, 5), 7, jnp.int32)
+    exiting = jnp.asarray(RNG.random((3, 5)).astype(np.float32))
+    got = scatter_delivery(ring, slot, exiting)
+    onehot = jax.nn.one_hot(slot, 16, dtype=exiting.dtype)
+    want = ring + jnp.einsum("fn,fnr->fr", exiting, onehot)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# hoisted RNG == per-tick fold_in + split
+# ---------------------------------------------------------------------------
+def test_tick_keys_match_per_tick_fold_in():
+    for seed in (0, 7, 123):
+        k_loop = jax.random.PRNGKey(seed)
+        keys = np.asarray(tick_keys(k_loop, 19))
+        for t in range(19):
+            want = np.asarray(
+                jax.random.split(jax.random.fold_in(k_loop, t))
+            )
+            assert np.array_equal(keys[t], want), (seed, t)
+
+
+# ---------------------------------------------------------------------------
+# early-exit mode == full-horizon mode
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("coded", [True, False], ids=["coded", "arq"])
+def test_early_exit_matches_full_horizon_shared_fabric(coded):
+    """All five policies x draws on the shared fabric: the chunked
+    while_loop engine reports identical completion fields, including when
+    it genuinely exits early (horizon far beyond the last completion)."""
+    topo = leaf_spine(4, 4, [(0, 1), (2, 3)], uplink_capacity=8.0)
+    sched = null_schedule(topo.links)
+    keys = jax.random.split(jax.random.PRNGKey(3), 2)
+    spec = SenderSpec(coded=coded, rate_cap=16)
+    spec_ee = dataclasses.replace(spec, early_exit=True, exit_chunk=32)
+    sp = policy_sweep_params(rate=16)
+    full = sweep_flows(topo, sched, spec, sp, 96, keys, horizon=512)
+    fast = sweep_flows(topo, sched, spec_ee, sp, 96, keys, horizon=512)
+    _assert_completion_equal(full, fast, ("shared", coded))
+    # the early exit actually had dead ticks to skip
+    assert float(np.asarray(full.cct).max()) < 512
+
+
+@pytest.mark.parametrize("coded", [True, False], ids=["coded", "arq"])
+def test_early_exit_matches_full_horizon_bundle_fabric(coded):
+    params = _params()
+    keys = jax.random.split(jax.random.PRNGKey(5), 2)
+    spec = SenderSpec(coded=coded, rate_cap=16)
+    spec_ee = dataclasses.replace(spec, early_exit=True, exit_chunk=32)
+    sp = policy_sweep_params(rate=16)
+    full = sweep_message(params, spec, sp, 64, keys, horizon=512)
+    fast = sweep_message(params, spec_ee, sp, 64, keys, horizon=512)
+    _assert_completion_equal(full, fast, ("bundle", coded))
+
+
+def test_early_exit_unfinished_flows_keep_sentinel():
+    """A horizon too short to finish must report the identical sentinel —
+    the while_loop may not run past the horizon's tick budget."""
+    topo = leaf_spine(2, 4, [(0, 1)], uplink_capacity=8.0)
+    sched = null_schedule(topo.links)
+    key = jax.random.PRNGKey(0)
+    sp = policy_sweep_params((Policy.WAM,), rate=16)
+    spec = SenderSpec(rate_cap=16)
+    # horizon 40 with exit_chunk 32 exercises the tail scan (40 = 32 + 8)
+    spec_ee = dataclasses.replace(spec, early_exit=True, exit_chunk=32)
+    keys = key[None] if key.ndim == 1 else key
+    full = sweep_flows(topo, sched, spec, sp, 4096, keys, horizon=40)
+    fast = sweep_flows(topo, sched, spec_ee, sp, 4096, keys, horizon=40)
+    _assert_completion_equal(full, fast, "sentinel")
+    assert not np.asarray(full.finished).any()
+    assert np.all(np.asarray(full.cct) == 40.0)
+
+
+def test_early_exit_per_flow_sizes_with_silent_flows():
+    """The cluster layer's regime: size-0 flows complete at tick 0 and the
+    whole coupled simulation settles once the one live flow drains."""
+    topo = leaf_spine(4, 4, [(0, 1), (2, 3)], uplink_capacity=8.0)
+    sched = null_schedule(topo.links)
+    sizes = jnp.asarray([64, 0], jnp.int32)
+    sp = sender_params(Policy.WAM, rate=16)
+    key = jax.random.PRNGKey(1)
+    spec = SenderSpec(rate_cap=16)
+    spec_ee = dataclasses.replace(spec, early_exit=True)
+    full = run_flows_sized(topo, sched, spec, sp, sizes, key, 384)
+    fast = run_flows_sized(topo, sched, spec_ee, sp, sizes, key, 384)
+    _assert_completion_equal(full, fast, "per-flow sizes")
+    assert float(np.asarray(full.cct)[1]) == 0.0
+
+
+def test_fabric_quiescent_flags_inflight_traffic():
+    from repro.net.topology import init_shared_fabric, shared_fabric_tick
+
+    topo = leaf_spine(2, 2, [(0, 1)], uplink_capacity=8.0)
+    sched = null_schedule(topo.links)
+    state = init_shared_fabric(topo)
+    assert bool(fabric_quiescent(state))
+    arrivals = jnp.ones((1, topo.n), jnp.float32)
+    state, _ = shared_fabric_tick(
+        topo, sched, state, arrivals, jax.random.PRNGKey(0)
+    )
+    assert not bool(fabric_quiescent(state))
+
+
+# ---------------------------------------------------------------------------
+# scenario-axis batching == per-scenario sweeps
+# ---------------------------------------------------------------------------
+def test_stacked_scenarios_match_per_scenario_sweeps():
+    scens = pair_scenarios(flows=2, n_spines=2, horizon=192)
+    topos, scheds = stack_scenarios(list(scens.values()))
+    spec = SenderSpec(rate_cap=16, early_exit=True)
+    sp = policy_sweep_params((Policy.ECMP, Policy.WAM), rate=16)
+    keys = jax.random.split(jax.random.PRNGKey(2), 1)
+    fam = sweep_flows_scenarios(topos, scheds, spec, sp, 48, keys, horizon=192)
+    for i, (name, (topo, sched)) in enumerate(scens.items()):
+        one = sweep_flows(topo, sched, spec, sp, 48, keys, horizon=192)
+        for field in COMPLETION_FIELDS:
+            got = np.asarray(getattr(fam, field))[i]
+            want = np.asarray(getattr(one, field))
+            assert np.array_equal(got, want), (name, field)
+
+
+def test_stack_scenarios_extends_schedules_by_last_row():
+    scens = pair_scenarios(flows=2, n_spines=2, horizon=32)
+    _, scheds = stack_scenarios(list(scens.values()))
+    T = scheds.cap_scale.shape[1]
+    assert T == 32
+    # the null-schedule entries were extended by repeating their only row
+    incast_cap = np.asarray(scheds.cap_scale)[0]
+    assert np.array_equal(incast_cap, np.ones_like(incast_cap))
+
+
+def test_stack_scenarios_rejects_mismatched_shapes():
+    a = pair_scenarios(flows=2, n_spines=2, horizon=32)["incast"]
+    b = pair_scenarios(flows=4, n_spines=2, horizon=32)["incast"]
+    with pytest.raises(ValueError, match="not stackable"):
+        stack_scenarios([a, b])
+
+
+# ---------------------------------------------------------------------------
+# spray_select: padded final block + interpret auto-detect
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("method", [0, 1, 2])
+@pytest.mark.parametrize("B", [1, 5, 1000, 1537, 2051])
+def test_spray_select_non_multiple_batches(method, B):
+    """Any batch size works: the final block is zero-padded and the
+    padding lanes' throwaway selections sliced off."""
+    ell, n = 10, 7
+    prof = quantize_profile(RNG.random(n) + 0.01, ell)
+    counters = jnp.asarray(RNG.integers(0, 2**31, B, dtype=np.uint32))
+    got = ops.spray_select(
+        counters, prof.c, 17, 9, ell=ell, method=method, backend="pallas"
+    )
+    want = ref.spray_select_ref(
+        counters, prof.c, 17, 9, ell=ell, method=method
+    )
+    assert got.shape == (B,)
+    assert np.array_equal(np.asarray(got), np.asarray(want)), (method, B)
+
+
+def test_spray_select_batch_smaller_than_block():
+    from repro.kernels.spray_select import spray_select_pallas
+
+    ell, n = 8, 3
+    prof = quantize_profile(np.arange(1, n + 1, dtype=float), ell)
+    counters = jnp.arange(37, dtype=jnp.uint32)
+    got = spray_select_pallas(
+        counters, prof.c, 5, 3, ell=ell, method=1, block=256
+    )
+    want = ref.spray_select_ref(counters, prof.c, 5, 3, ell=ell, method=1)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_spray_select_rejects_empty_batch():
+    from repro.kernels.spray_select import spray_select_pallas
+
+    with pytest.raises(ValueError, match="empty"):
+        spray_select_pallas(
+            jnp.zeros((0,), jnp.uint32), jnp.asarray([1, 2], jnp.int32),
+            0, 1, ell=4, method=0,
+        )
+
+
+# ---------------------------------------------------------------------------
+# compile-count gate (benchmarks.common)
+# ---------------------------------------------------------------------------
+def test_compile_gate_trips_on_extra_compiles():
+    common = pytest.importorskip("benchmarks.common")
+
+    f = jax.jit(lambda x: x + 1)
+    x = jnp.ones((4,))
+    with common.compile_gate("one allowed", max_compiles=1):
+        common.aot_compile(f, x)
+    with pytest.raises(RuntimeError, match="per-scenario compiles"):
+        with common.compile_gate("one allowed", max_compiles=1):
+            common.aot_compile(f, x)
+            common.aot_compile(f, jnp.ones((8,)))
