@@ -3,12 +3,16 @@
 #   make test       - tier-1 pytest only
 #   make bench      - full benchmark pass (CSV to stdout)
 #   make perf-smoke - gated smoke bench: finished/compile-count gates armed,
-#                     JSON (with meta.perf + meta.compile) to BENCH_smoke.json
+#                     telemetry pass on, JSON (with meta.perf + meta.compile
+#                     + meta.telemetry) to BENCH_smoke.json, trace artifacts
+#                     under traces/ (validated by tools/trace_report.py)
+#   make trace-demo - run examples/telemetry_quickstart.py: one flap run,
+#                     trace export + report under traces/demo/
 #   make docs-check - core doctests + markdown relative-link checker
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: check test bench bench-smoke perf-smoke docs-check
+.PHONY: check test bench bench-smoke perf-smoke trace-demo docs-check
 
 test:
 	python -m pytest -x -q
@@ -17,10 +21,20 @@ bench-smoke:
 	python -m benchmarks.run --smoke --json BENCH_smoke.json
 
 # the CI perf gate: every family sweep must stay ONE compiled program
-# (--max-compiles bounds the whole run) and every gated flow must finish
-# (check_finished fails loudly inside the benches)
+# (--max-compiles bounds the whole run: 7 family programs + 3 telemetry
+# programs, with headroom) and every gated flow must finish
+# (check_finished fails loudly inside the benches); the telemetry pass
+# adds meta.telemetry recovery rows + traces/ artifacts, and the exported
+# traces must survive their own reader (trace_report exits non-zero on a
+# round-trip or Perfetto-structure failure)
 perf-smoke:
-	python -m benchmarks.run --smoke --json BENCH_smoke.json --max-compiles 10
+	python -m benchmarks.run --smoke --json BENCH_smoke.json \
+	  --telemetry --trace-dir traces --max-compiles 13
+	python tools/trace_report.py --summary traces/*.jsonl
+	python tools/trace_report.py --check-perfetto traces/*.trace.json
+
+trace-demo:
+	python examples/telemetry_quickstart.py
 
 bench:
 	python -m benchmarks.run

@@ -44,6 +44,7 @@ from benchmarks.common import (
 from repro.net.cluster import (
     cluster_inputs,
     cluster_metrics,
+    sweep_cluster_rounds,
     sweep_cluster_rounds_scenarios,
 )
 from repro.net.jobs import compile_job
@@ -160,6 +161,76 @@ def main() -> None:
         compile_s=round(compile_s, 3),
         run_s=round(run_s, 3),
         total_s=round(sweep_total, 3),
+    )
+
+    if common.TELEMETRY:
+        _telemetry(scens, horizon, keys, smoke)
+
+
+def _telemetry(scens, horizon, keys, smoke) -> None:
+    """Observability pass (`run.py --telemetry`): the flap-during-overlap
+    cluster scenario (a link fails while two jobs' collectives overlap) with
+    in-scan capture, contended variant only — ONE extra compiled program for
+    [ECMP, WAM] x every round — pooling per-round recovery ticks."""
+    from repro.net.telemetry import (
+        TelemetrySpec,
+        event_onsets,
+        frame_select,
+        series,
+    )
+
+    scen_name = "flap_during_overlap"
+    cluster, topo, sched = scens[scen_name]
+    scheds, sizes = cluster_inputs(cluster, sched, horizon)
+    sizes0 = sizes[0]  # [R, F]: the contended (all-jobs) variant
+    tel_policies = (Policy.ECMP, Policy.WAM)
+    sp = policy_sweep_params(tel_policies, rate=RATE)
+    stride = 2 if smoke else 4
+    tspec = SenderSpec(
+        rate_cap=RATE, early_exit=True, exit_chunk=16,
+        telemetry=TelemetrySpec(stride=stride, window=horizon // stride),
+    )
+    with compile_gate("cluster telemetry", max_compiles=1):
+        swept, compile_s = aot_compile(
+            sweep_cluster_rounds, topo, scheds, tspec, sp, sizes0,
+            keys[:1], horizon=horizon,
+        )
+        raw, run_s = timed_call(swept, topo, scheds, sp, sizes0, keys[:1])
+    check_finished(
+        "cluster telemetry", raw["finished"],
+        axes=("policy", "draw", "round", "flow"),
+    )
+    frame = raw["telemetry"]  # leaves [P, D, R, ...]
+    rounds = int(sizes0.shape[0])
+    # re-converged = within m/32 per path of the post-event steady profile
+    tol = (1 << tspec.ell) / 32
+    onsets = [
+        event_onsets(jax.tree.map(lambda a: a[r], scheds))
+        for r in range(rounds)
+    ]
+    for pi, pol in enumerate(tel_policies):
+        runs = [
+            (series(frame_select(frame, (pi, 0, r))), onsets[r])
+            for r in range(rounds)
+        ]
+        common.telemetry_row(
+            f"cluster/{scen_name}/{pol.name}",
+            runs,
+            tol=tol,
+            meta={"bench": "cluster", "scenario": scen_name,
+                  "policy": pol.name, "rounds": rounds, "stride": stride,
+                  "tol": tol},
+        )
+    total = compile_s + run_s
+    emit(
+        "cluster/telemetry/sweep",
+        total * 1e6,
+        f"compiles=1_for_{scen_name}_x_{len(tel_policies)}_policies"
+        f"_x_{rounds}_rounds_telemetry",
+        compile_count=1,
+        compile_s=round(compile_s, 3),
+        run_s=round(run_s, 3),
+        total_s=round(total, 3),
     )
 
 

@@ -146,6 +146,82 @@ def main() -> None:
         total_s=round(sweep_total, 3),
     )
 
+    if common.TELEMETRY:
+        _telemetry(jobs[0], scens, horizon, keys, smoke)
+
+
+def _telemetry(job, scens, horizon, keys, smoke) -> None:
+    """Observability pass (`run.py --telemetry`): one model's schedule on
+    the fault-injection scenarios with in-scan capture — ONE extra compiled
+    program for [link_flap, pfc_storm] x [ECMP, WAM] x every ring step —
+    pooling per-step recovery ticks into one row per (scenario, policy)."""
+    from repro.net.telemetry import (
+        TelemetrySpec,
+        event_onsets,
+        frame_select,
+        series,
+    )
+
+    tel_names = ("link_flap", "pfc_storm")
+    tel_policies = (Policy.ECMP, Policy.WAM)
+    sp = policy_sweep_params(tel_policies, rate=RATE)
+    inputs = [
+        job_step_inputs([job], scens[nm][1], horizon) for nm in tel_names
+    ]
+    scheds = stack_pytrees([sc for sc, _ in inputs])
+    topos = stack_pytrees([scens[nm][0] for nm in tel_names])
+    shard = inputs[0][1]
+    stride = 2 if smoke else 4
+    tspec = SenderSpec(
+        rate_cap=RATE, early_exit=True, exit_chunk=16,
+        telemetry=TelemetrySpec(stride=stride, window=horizon // stride),
+    )
+    with compile_gate("job_ettr telemetry", max_compiles=1):
+        swept, compile_s = aot_compile(
+            sweep_job_steps_scenarios, topos, scheds, tspec, sp, shard,
+            keys[:1], horizon=horizon,
+        )
+        (cct, finished, frame), run_s = timed_call(
+            swept, topos, scheds, sp, shard, keys[:1]
+        )
+    check_finished(
+        "job_ettr telemetry", finished,
+        axes=("scenario", "policy", "draw", "model", "step"),
+    )
+    steps = int(shard.shape[-1])
+    # re-converged = within m/32 per path of the post-event steady profile
+    tol = (1 << tspec.ell) / 32
+    for si, scen_name in enumerate(tel_names):
+        sched_steps = inputs[si][0]  # leaves [M=1, S, horizon, ...]
+        onsets = [
+            event_onsets(jax.tree.map(lambda a: a[0, s], sched_steps))
+            for s in range(steps)
+        ]
+        for pi, pol in enumerate(tel_policies):
+            runs = [
+                (series(frame_select(frame, (si, pi, 0, 0, s))), onsets[s])
+                for s in range(steps)
+            ]
+            common.telemetry_row(
+                f"job_ettr/{scen_name}/{job.arch}/{pol.name}",
+                runs,
+                tol=tol,
+                meta={"bench": "job_ettr", "scenario": scen_name,
+                      "policy": pol.name, "arch": job.arch,
+                      "steps": steps, "stride": stride, "tol": tol},
+            )
+    total = compile_s + run_s
+    emit(
+        "job_ettr/telemetry/sweep",
+        total * 1e6,
+        f"compiles=1_for_{len(tel_names)}_scenarios_x_"
+        f"{len(tel_policies)}_policies_x_{steps}_steps_telemetry",
+        compile_count=1,
+        compile_s=round(compile_s, 3),
+        run_s=round(run_s, 3),
+        total_s=round(total, 3),
+    )
+
 
 if __name__ == "__main__":
     main()

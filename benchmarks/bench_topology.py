@@ -167,6 +167,70 @@ def main() -> None:
         total_s=round(sweep_total, 3),
     )
 
+    if common.TELEMETRY:
+        _telemetry(scens, n_packets, horizon, keys, smoke)
+
+
+def _telemetry(scens, n_packets, horizon, keys, smoke) -> None:
+    """Observability pass (`run.py --telemetry`): re-run the fault-injection
+    scenarios with the in-scan telemetry capture enabled — ONE extra
+    compiled program for [link_flap, pfc_storm] x [ECMP, WAM] — and emit
+    recovery-time rows (event onset -> allocation re-converged) plus trace
+    artifacts under `--trace-dir`."""
+    from repro.net.telemetry import (
+        TelemetrySpec,
+        event_onsets,
+        frame_select,
+        series,
+    )
+
+    tel_names = ("link_flap", "pfc_storm")
+    tel_policies = (Policy.ECMP, Policy.WAM)
+    topos, scheds = stack_scenarios([scens[nm] for nm in tel_names])
+    sp = policy_sweep_params(tel_policies, rate=RATE)
+    # stride x window covers the whole horizon: no ring wrap, recovery
+    # measured from the first post-onset sample
+    stride = 2 if smoke else 8
+    tspec = SenderSpec(
+        rate_cap=RATE, early_exit=True,
+        telemetry=TelemetrySpec(stride=stride, window=horizon // stride),
+    )
+    with compile_gate("topo telemetry", max_compiles=1):
+        swept, compile_s = aot_compile(
+            sweep_flows_scenarios, topos, scheds, tspec, sp, n_packets,
+            keys[:1], horizon=horizon,
+        )
+        (r, frame), run_s = timed_call(swept, topos, scheds, sp, keys[:1])
+    check_finished(
+        "topo telemetry", r.finished,
+        axes=("scenario", "policy", "draw", "flow"),
+    )
+    # re-converged = within m/32 per path (L-inf) of the post-event steady
+    # profile: the whack/restore ball, scaled to the allocation grain
+    tol = (1 << tspec.ell) / 32
+    for si, scen_name in enumerate(tel_names):
+        onsets = event_onsets(scens[scen_name][1])
+        for pi, pol in enumerate(tel_policies):
+            ser = series(frame_select(frame, (si, pi, 0)))
+            common.telemetry_row(
+                f"topo/{scen_name}/{pol.name}",
+                [(ser, onsets)],
+                tol=tol,
+                meta={"bench": "topology", "scenario": scen_name,
+                      "policy": pol.name, "stride": stride, "tol": tol},
+            )
+    total = compile_s + run_s
+    emit(
+        "topo/telemetry/sweep",
+        total * 1e6,
+        f"compiles=1_for_{len(tel_names)}_scenarios_x_"
+        f"{len(tel_policies)}_policies_telemetry",
+        compile_count=1,
+        compile_s=round(compile_s, 3),
+        run_s=round(run_s, 3),
+        total_s=round(total, 3),
+    )
+
 
 if __name__ == "__main__":
     main()

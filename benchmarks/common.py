@@ -18,6 +18,7 @@ pass — CI-sized sanity numbers rather than paper-sized tables.
 from __future__ import annotations
 
 import contextlib
+import json
 import time
 from typing import Callable, Dict, List, Tuple
 
@@ -32,11 +33,16 @@ __all__ = [
     "compile_gate",
     "timed_call",
     "check_finished",
+    "telemetry_row",
     "RESULTS",
     "COMPILE_STATS",
     "PERF_STATS",
+    "TELEMETRY_STATS",
     "SMOKE",
+    "TELEMETRY",
+    "TRACE_DIR",
     "set_smoke",
+    "set_telemetry",
 ]
 
 # (name, us_per_call, derived, ...fields) rows accumulated this process
@@ -55,10 +61,32 @@ AOT_COMPILES = 0
 
 SMOKE = False
 
+# set by `run.py --telemetry`: benches run their in-scan telemetry section
+# (one extra compiled program per family) and report recovery-time rows
+TELEMETRY = False
+
+# set by `run.py --trace-dir`: directory for exported trace artifacts
+# (JSONL series + Perfetto trace JSON per telemetry row)
+TRACE_DIR: str | None = None
+
+# recovery/queue observability rows (meta.telemetry in the bench JSON):
+# appended by `telemetry_row`
+TELEMETRY_STATS: List[Dict[str, object]] = []
+
 
 def set_smoke(value: bool) -> None:
     global SMOKE
     SMOKE = value
+
+
+def set_telemetry(value: bool, trace_dir: str | None = None) -> None:
+    global TELEMETRY, TRACE_DIR
+    TELEMETRY = value
+    TRACE_DIR = trace_dir
+    if trace_dir:
+        import os
+
+        os.makedirs(trace_dir, exist_ok=True)
 
 
 def timeit(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
@@ -95,7 +123,7 @@ def emit(name: str, us_per_call: float, derived: str = "", **fields) -> None:
     print(f"{name},{us_per_call:.2f},{derived}")
 
 
-def check_finished(name: str, finished) -> None:
+def check_finished(name: str, finished, axes: Tuple[str, ...] | None = None) -> None:
     """Fail LOUDLY when any gated flow hit the horizon sentinel.
 
     An unfinished flow reports `cct == horizon`, which silently flattens
@@ -103,15 +131,116 @@ def check_finished(name: str, finished) -> None:
     over such rows compares sentinels, not completions.  Benchmarks that
     gate on WAM-vs-ECMP must pass their `SimResult.finished` masks (any
     shape) through this before emitting the gate row.
+
+    The error names the offending indices so a CI log alone identifies
+    which scenario/policy/draw/flow stalled; pass `axes` (one name per
+    array dimension, e.g. ``("scenario", "policy", "draw", "flow")``) to
+    label them, else they print positionally.
     """
     arr = np.asarray(finished)
     if arr.size and not arr.all():
         frac = float(1.0 - arr.mean())
+        bad = np.argwhere(~arr.astype(bool))
+        if axes is not None and len(axes) != arr.ndim:
+            raise ValueError(
+                f"{name}: {len(axes)} axis names for a {arr.ndim}-d mask"
+            )
+
+        def fmt(idx) -> str:
+            if axes is None:
+                return "[" + ",".join(str(int(i)) for i in idx) + "]"
+            return "[" + " ".join(
+                f"{a}={int(i)}" for a, i in zip(axes, idx)
+            ) + "]"
+
+        shown = ", ".join(fmt(i) for i in bad[:8])
+        more = f" (+{len(bad) - 8} more)" if len(bad) > 8 else ""
         raise RuntimeError(
             f"{name}: {frac:.1%} of gated flows unfinished (cct == horizon "
             f"sentinel) — the gate would compare sentinels, not completions; "
-            f"raise the horizon"
+            f"raise the horizon.  Offending indices: {shown}{more}"
         )
+
+
+def telemetry_row(
+    name: str,
+    runs,
+    *,
+    tol: float = 0.0,
+    min_hold: int = 2,
+    export: bool = True,
+    meta: Dict[str, object] | None = None,
+) -> Dict[str, object]:
+    """Fold one telemetry series group into a meta.telemetry row.
+
+    `runs` is a list of ``(series, onsets)`` pairs (from
+    `repro.net.telemetry.series` / `event_onsets`) — e.g. one pair per
+    schedule step or cluster round.  Recovery ticks pool over ALL pairs
+    (`recovery_ticks` on each, concatenated), queue percentiles and the
+    discrepancy-gauge max aggregate over all pairs; the row lands in
+    `TELEMETRY_STATS` (surfaced as ``meta.telemetry.rows`` in the bench
+    JSON) and an `emit` line summarizes it in the CSV stream.  With
+    `TRACE_DIR` set and `export=True`, the FIRST pair's series is written
+    as ``<name>.jsonl`` + ``<name>.trace.json`` artifacts (slashes in
+    `name` become underscores).
+    """
+    import os
+
+    from repro.net.telemetry import (
+        chrome_trace,
+        queue_percentiles,
+        recovery_ticks,
+        summarize_recovery,
+        write_series_jsonl,
+    )
+
+    recs, disc_max, q_hot99 = [], 0.0, 0.0
+    samples = 0
+    for ser, onsets in runs:
+        samples += len(ser.get("tick", ()))
+        if len(onsets) and "alloc" in ser and ser["alloc"].size:
+            recs.append(
+                recovery_ticks(
+                    ser["tick"], ser["alloc"], onsets,
+                    tol=tol, min_hold=min_hold,
+                ).reshape(-1)
+            )
+        if "disc" in ser and ser["disc"].size:
+            disc_max = max(disc_max, float(np.max(ser["disc"])))
+        if "link_queue" in ser and ser["link_queue"].size:
+            q_hot99 = max(q_hot99, queue_percentiles(ser)["hot_p99"])
+    pooled = np.concatenate(recs) if recs else np.zeros((0,))
+    recovery = summarize_recovery(pooled)
+    row: Dict[str, object] = {
+        "name": name,
+        "samples": int(samples),
+        "recovery_ticks": recovery,
+        "disc_max": round(disc_max, 4),
+        "queue_hot_p99": round(q_hot99, 2),
+    }
+    if meta:
+        row.update(meta)
+    if TRACE_DIR and export and runs:
+        ser0, onsets0 = runs[0]
+        stem = os.path.join(TRACE_DIR, name.replace("/", "_"))
+        write_series_jsonl(
+            stem + ".jsonl", ser0,
+            meta={"name": name, "onsets": np.asarray(onsets0).tolist(),
+                  **(meta or {})},
+        )
+        with open(stem + ".trace.json", "w") as f:
+            json.dump(chrome_trace(ser0, onsets=onsets0, max_links=4), f)
+        row["trace"] = stem + ".jsonl"
+    TELEMETRY_STATS.append(row)
+    emit(
+        f"{name}/telemetry",
+        0.0,
+        f"rec_p50={recovery['p50']:.1f};rec_max={recovery['max']:.1f}"
+        f";recovered={recovery['recovered_frac']:.2f}"
+        f";events={recovery['events']}"
+        f";disc_max={disc_max:.2f};q_hot_p99={q_hot99:.1f}",
+    )
+    return row
 
 
 def perf(

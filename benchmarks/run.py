@@ -57,12 +57,24 @@ def main(argv=None) -> None:
     ap.add_argument("--json", metavar="PATH", help="write results dict to PATH")
     ap.add_argument("--only", metavar="NAME", help="run sections matching NAME")
     ap.add_argument(
+        "--telemetry", action="store_true",
+        help="run the in-scan telemetry sections: one extra compiled "
+        "program per bench family, recovery-time rows for link_flap / "
+        "pfc_storm in meta.telemetry (see docs/BENCHMARKS.md)",
+    )
+    ap.add_argument(
+        "--trace-dir", metavar="DIR", default=None,
+        help="with --telemetry: export JSONL series + Perfetto trace JSON "
+        "artifacts per telemetry row into DIR",
+    )
+    ap.add_argument(
         "--max-compiles", type=int, metavar="N", default=None,
         help="fail if the run compiles more than N programs in total "
         "(the scenario-family batching gate: see docs/BENCHMARKS.md)",
     )
     args = ap.parse_args(argv)
     common.set_smoke(args.smoke)
+    common.set_telemetry(args.telemetry, args.trace_dir)
 
     sections = _load_sections(args.only)
     if not sections:
@@ -111,6 +123,14 @@ def main(argv=None) -> None:
             },
             "results": common.RESULTS,
         }
+        if args.telemetry:
+            # observability rows: recovery ticks per fault-injection event
+            # (onset -> allocation re-converged), discrepancy-gauge max,
+            # hot-link queue p99 — plus pointers to the exported traces
+            payload["meta"]["telemetry"] = {
+                "trace_dir": args.trace_dir,
+                "rows": common.TELEMETRY_STATS,
+            }
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=1)
         print(f"# wrote {len(common.RESULTS)} rows to {args.json}", file=sys.stderr)

@@ -1,0 +1,97 @@
+"""Watch the whack happen: in-scan telemetry on a flapping link.
+
+Eight senders share a leaf-spine fabric while spine 0 flaps — loses
+capacity for half of every period, the mole that keeps returning to the
+same hole.  With `SenderSpec.telemetry` set, the sender engine records
+per-tick series INSIDE the one compiled program: per-path allocation,
+per-link queue depth / ECN marks / drops, ARQ debt, and the online
+windowed discrepancy gauge (the traced counterpart of the paper's §9
+deviation bound).  No second run, no host callbacks — the capture rides
+the same `lax.scan` carry as the simulation itself.
+
+The script prints, per policy:
+
+  * recovery ticks — event onset -> allocation profile re-converged
+    (ECMP's allocation never moves, so it "recovers" instantly; WAM's
+    whack/restore response is the number that matters);
+  * the discrepancy-gauge max (how far realized spraying strayed from
+    the commanded profile) and hot-link queue percentiles.
+
+and exports each series under traces/demo/ as a JSONL store plus a
+Chrome/Perfetto trace (open the *.trace.json in ui.perfetto.dev to see
+the flap edges as instant markers over the queue/allocation counters).
+
+    PYTHONPATH=src python examples/telemetry_quickstart.py
+    python tools/trace_report.py --summary traces/demo/*.jsonl
+"""
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.net import (
+    SenderSpec,
+    TelemetrySpec,
+    chrome_trace,
+    event_onsets,
+    frame_select,
+    policy_sweep_params,
+    queue_percentiles,
+    recovery_ticks,
+    series,
+    summarize_recovery,
+    sweep_flows,
+    write_series_jsonl,
+)
+from repro.net.scenarios import link_flap
+from repro.net.transport import Policy
+
+POLICIES = (Policy.ECMP, Policy.RAND_STATIC, Policy.WAM)
+HORIZON = 1024
+OUT = os.path.join("traces", "demo")
+
+topo, sched = link_flap(flows=8, n_spines=4, period=64, horizon=HORIZON)
+spec = SenderSpec(
+    rate_cap=32, early_exit=True,
+    telemetry=TelemetrySpec(stride=2, window=HORIZON // 2),
+)
+sp = policy_sweep_params(POLICIES, rate=32)
+keys = jax.random.split(jax.random.PRNGKey(0), 1)
+
+print("== link_flap with in-scan telemetry: one compiled program ==")
+t0 = time.perf_counter()
+result, frame = jax.block_until_ready(
+    sweep_flows(topo, sched, spec, sp, 512, keys, horizon=HORIZON)
+)
+print(f"   {len(POLICIES)} policies x 8 flows in "
+      f"{time.perf_counter() - t0:.2f}s (capture included)\n")
+
+onsets = event_onsets(sched)
+tol = (1 << spec.ell) / 32  # re-converged = within m/32 per path
+os.makedirs(OUT, exist_ok=True)
+print(f"{'policy':12s} {'samples':>7s} {'events':>6s} {'recovered':>9s} "
+      f"{'rec_p50':>7s} {'rec_max':>7s} {'disc_max':>8s} {'q_hot_p99':>9s}")
+for pi, pol in enumerate(POLICIES):
+    ser = series(frame_select(frame, (pi, 0)))
+    rec = summarize_recovery(
+        recovery_ticks(ser["tick"], ser["alloc"], onsets, tol=tol)
+    )
+    qp = queue_percentiles(ser)
+    print(f"{pol.name:12s} {len(ser['tick']):7d} {rec['events']:6d} "
+          f"{rec['recovered_frac']:9.2f} {rec['p50']:7.1f} "
+          f"{rec['max']:7.1f} {float(np.max(ser['disc'])):8.2f} "
+          f"{qp['hot_p99']:9.1f}")
+    stem = os.path.join(OUT, f"flap_{pol.name}")
+    write_series_jsonl(
+        stem + ".jsonl", ser,
+        meta={"name": f"demo/flap/{pol.name}", "policy": pol.name,
+              "onsets": onsets.tolist(), "tol": tol},
+    )
+    import json
+    with open(stem + ".trace.json", "w") as f:
+        json.dump(chrome_trace(ser, onsets=onsets, max_links=4), f)
+
+print(f"\nwrote JSONL series + Perfetto traces under {OUT}/")
+print("inspect:  python tools/trace_report.py --summary traces/demo/*.jsonl")
+print("visualize: load a *.trace.json in https://ui.perfetto.dev")

@@ -16,6 +16,19 @@ from repro.net.sender import (
     sweep_flows,
     sweep_message,
 )
+from repro.net.telemetry import (
+    TelemetryFrame,
+    TelemetrySpec,
+    chrome_trace,
+    event_onsets,
+    frame_select,
+    queue_percentiles,
+    read_series_jsonl,
+    recovery_ticks,
+    series,
+    summarize_recovery,
+    write_series_jsonl,
+)
 from repro.net.topology import (
     EventSchedule,
     SharedFabricState,

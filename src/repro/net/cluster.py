@@ -316,16 +316,27 @@ def run_cluster_rounds(
     stops at its own last completion instead of synchronizing with the
     slowest round of the whole batch — silent rounds (size 0 everywhere,
     e.g. staggered-start padding) cost one chunk, not the global maximum.
+
+    With `spec.telemetry` set, a "telemetry" key carries the in-scan
+    `TelemetryFrame`; unlike the metric arrays (round axis moved to -2),
+    the frame's leaves keep the ROUND axis leading, then any variant axes:
+    ``telemetry.frame_select(frame, (r, v))`` reads round r of variant v.
     """
     R = sizes.shape[-2]
 
     def one_round(sched_r, sizes_rf, idx):
         k = jax.random.fold_in(key, idx)
         r = run_flows_sized(topo, sched_r, spec, sp, sizes_rf, k, horizon)
-        return dict(
+        frame = None
+        if spec.telemetry is not None:
+            r, frame = r
+        out = dict(
             cct=r.cct, finished=r.finished,
             link_served=r.link_served, link_busy=r.link_busy,
         )
+        if frame is not None:
+            out["telemetry"] = frame
+        return out
 
     def per_round(sched_r, sizes_r, idx):
         f = lambda s: one_round(sched_r, s, idx)  # noqa: E731
@@ -337,7 +348,13 @@ def run_cluster_rounds(
         lambda args: per_round(*args),
         (scheds, jnp.moveaxis(sizes, -2, 0), jnp.arange(R)),
     )
-    return {k: jnp.moveaxis(v, 0, -2) for k, v in out.items()}
+    # the telemetry frame is a nested pytree with non-uniform leaf ranks —
+    # keep its round axis leading rather than forcing it to -2
+    frame = out.pop("telemetry", None)
+    res = {k: jnp.moveaxis(v, 0, -2) for k, v in out.items()}
+    if frame is not None:
+        res["telemetry"] = frame
+    return res
 
 
 @functools.partial(jax.jit, static_argnames=("spec", "horizon"))

@@ -335,6 +335,11 @@ def run_job_steps(
     The step axis is a SEQUENTIAL `lax.map` so that, with the engine's
     early-exit mode, each ring step stops at its own barrier instead of
     synchronizing with the slowest step of the schedule.
+
+    With `spec.telemetry` set the engine's in-scan capture rides along:
+    the return value becomes ``(cct[S], finished[S], frame)`` where the
+    `TelemetryFrame` leaves carry a leading step axis S (peel with
+    `telemetry.frame_select(frame, s)` to read step s's series).
     """
     S = shard.shape[0]
 
@@ -342,6 +347,9 @@ def run_job_steps(
         sched_s, shard_s, idx = args
         k = jax.random.fold_in(key, idx)
         r = run_flows_sized(topo, sched_s, spec, sp, shard_s, k, horizon)
+        if spec.telemetry is not None:
+            r, frame = r
+            return jnp.max(r.cct), jnp.all(r.finished), frame
         return jnp.max(r.cct), jnp.all(r.finished)
 
     return jax.lax.map(one, (scheds, shard, jnp.arange(S)))
@@ -445,22 +453,31 @@ def run_job(
     key: jax.Array,
     horizon: int = 2048,
 ) -> JobResult:
-    """Run one job under one scenario with scalar sender params."""
+    """Run one job under one scenario with scalar sender params.
+
+    With `spec.telemetry` set, returns ``(JobResult, frame)`` — the frame's
+    leaves carry a leading step axis S (see `run_job_steps`)."""
     if topo.flows != job.workers:
         raise ValueError(
             f"topology has {topo.flows} flows but job.workers={job.workers}"
         )
     shard, _, offsets = step_table(job)
     scheds = scheduled_events(sched, offsets, horizon)
-    cct, finished = run_job_steps(
+    out = run_job_steps(
         topo, scheds, spec, sp, jnp.asarray(shard), key, horizon
     )
+    frame = None
+    if spec.telemetry is not None:
+        cct, finished, frame = out
+    else:
+        cct, finished = out
     cct, finished = np.asarray(cct), np.asarray(finished)
     ettr, exposed = job_ettr(job, cct)
-    return JobResult(
+    result = JobResult(
         job=job, step_cct=cct, ettr=ettr, exposed_comm_ticks=exposed,
         finished=finished,
     )
+    return result if frame is None else (result, frame)
 
 
 def sweep_job(
@@ -475,17 +492,27 @@ def sweep_job(
     """Host convenience over `sweep_job_steps`: M jobs x P policies x D
     draws under one scenario, one compile.  Returns
     ``{"cct": [P, D, M, S], "finished": [P, D, M, S], "ettr": [P, D, M],
-    "exposed": [P, D, M]}``.
+    "exposed": [P, D, M]}``; with `spec.telemetry` set, a "telemetry" key
+    holds the `TelemetryFrame` whose leaves carry leading [P, D, M, S]
+    sweep axes (peel with `telemetry.frame_select`).
     """
     if any(topo.flows != j.workers for j in jobs):
         raise ValueError("every job's workers must equal the topology's flows")
     scheds, shard = job_step_inputs(jobs, sched, horizon)
-    cct, finished = sweep_job_steps(
+    out = sweep_job_steps(
         topo, scheds, spec, sp, shard, keys, horizon
     )
+    frame = None
+    if spec.telemetry is not None:
+        cct, finished, frame = out
+    else:
+        cct, finished = out
     cct, finished = np.asarray(cct), np.asarray(finished)
     ettr = np.zeros(cct.shape[:-1])
     exposed = np.zeros(cct.shape[:-1])
     for m, job in enumerate(jobs):
         ettr[..., m], exposed[..., m] = job_ettr(job, cct[..., m, :])
-    return {"cct": cct, "finished": finished, "ettr": ettr, "exposed": exposed}
+    res = {"cct": cct, "finished": finished, "ettr": ettr, "exposed": exposed}
+    if frame is not None:
+        res["telemetry"] = frame
+    return res

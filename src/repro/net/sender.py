@@ -82,10 +82,12 @@ from repro.core.feedback import (
 from repro.core.profile import PathProfile, uniform_profile
 from repro.core.spray import SprayMethod, SprayState, select_path, spray_key
 from repro.net.fabric import FabricParams, fabric_tick, init_fabric
+from repro.net.telemetry import TelemetrySpec, init_frame, record
 from repro.net.topology import (
     EventSchedule,
     TopologyParams,
     init_shared_fabric,
+    link_telemetry,
     shared_fabric_tick,
 )
 
@@ -143,6 +145,15 @@ class SenderSpec:
     # background traffic would keep evolving over the skipped dead ticks).
     early_exit: bool = False
     exit_chunk: int = 64                   # ticks per early-exit scan chunk
+    # In-scan telemetry: when set, a `TelemetryFrame` rides the sender_tick
+    # carry and every engine entry point returns (SimResult, frame) instead
+    # of a bare SimResult — decimated per-tick time series captured inside
+    # the one compiled program (see repro.net.telemetry).  Capture is
+    # observation-only (the SimResult is bit-identical either way) and
+    # freezes once the run settles, so early-exit and full-horizon runs
+    # record identical series.  None (the default) leaves the engine's
+    # code path, carry and outputs untouched.
+    telemetry: TelemetrySpec | None = None
 
 
 @jax.tree_util.register_dataclass
@@ -330,32 +341,42 @@ def fabric_quiescent(state) -> jax.Array:
     return quiet
 
 
-def _scan_early_exit(spec, sender_tick, carry0, tkeys, horizon: int):
+def _settled(spec, carry) -> jax.Array:
+    """The early-exit stop condition on a bare sender carry: every flow
+    completed, ARQ debt drained (uncoded only), fabric quiescent.  Once it
+    holds it holds forever (completed flows stop emitting, nothing is left
+    to drop or deliver), which is what makes both early exit and the
+    telemetry capture freeze sound."""
+    fabric, _ctrl, _spray, _sched, debt, done_at, _sent, _known = carry
+    done = jnp.all(done_at >= 0) & fabric_quiescent(fabric)
+    if not spec.coded:
+        done = done & jnp.all(debt == 0)
+    return done
+
+
+def _scan_early_exit(spec, sender_tick, carry0, tkeys, horizon: int,
+                     settled: Callable):
     """Run `sender_tick` over the horizon with early termination.
 
     Chunked `lax.scan` inside a `lax.while_loop`: after each `exit_chunk`
-    ticks the loop re-checks the stop condition — every flow completed
-    (`done_at >= 0`), retransmission debt drained (ARQ only), and the
-    fabric quiescent (`fabric_quiescent`).  Once that holds, no further
-    tick can emit, drop or deliver a flow packet, so skipping the remaining
-    ticks is bit-identical on every completion-relevant field; a carry that
-    never settles runs all ceil-chunks and matches the full scan exactly.
-    The tail ticks (horizon % exit_chunk) always run: on a settled carry
-    they are no-ops on those fields, on an unsettled one they are the last
+    ticks the loop re-checks the stop condition `settled(carry)` (see
+    `_settled` — every flow completed (`done_at >= 0`), retransmission
+    debt drained (ARQ only), and the fabric quiescent
+    (`fabric_quiescent`)).  Once that holds, no further tick can emit,
+    drop or deliver a flow packet, so skipping the remaining ticks is
+    bit-identical on every completion-relevant field; a carry that never
+    settles runs all ceil-chunks and matches the full scan exactly.  The
+    tail ticks (horizon % exit_chunk) always run: on a settled carry they
+    are no-ops on those fields, on an unsettled one they are the last
     ticks of the horizon.  Under vmap the while_loop runs until every batch
     element settles, with settled elements' carries frozen by the batching
     rule's select — the invariant above keeps those extra body applications
-    observation-free.
+    observation-free.  (Telemetry-wrapped carries gate capture on the same
+    predicate, so their frames also stop changing at settle — the invariant
+    extends to the whole carry.)
     """
     chunk = max(1, min(spec.exit_chunk, horizon))
     n_full, rem = divmod(horizon, chunk)
-
-    def settled(carry):
-        fabric, _ctrl, _spray, _sched, debt, done_at, _sent, _known = carry
-        done = jnp.all(done_at >= 0) & fabric_quiescent(fabric)
-        if not spec.coded:
-            done = done & jnp.all(debt == 0)
-        return done
 
     def cond(loop):
         i, carry = loop
@@ -393,6 +414,7 @@ def run_sender(
     dropped_fn: Callable,
     k_loop: jax.Array,
     link_fn: Callable | None = None,
+    tel_link_fn: Callable | None = None,
 ) -> SimResult:
     """THE sender tick core, generic over a leading flow axis `lead`.
 
@@ -414,6 +436,15 @@ def run_sender(
         (otherwise opaque) fabric state.
       * link_fn — read cumulative per-link (served packets, busy ticks) out
         of the fabric state (None: no link concept, report empty [0] arrays).
+      * tel_link_fn — telemetry reader of per-link (queue, served, dropped,
+        ecn) out of the fabric state (None: no link concept, the telemetry
+        frame's link channels stay zero-width).
+
+    With `spec.telemetry` set, a `TelemetryFrame` rides the scan carry and
+    the return value is ``(SimResult, frame)``; capture happens after each
+    tick, gated on ``(~settled_before_the_tick) & (t % stride == 0)`` — the
+    settle gate makes the recorded series independent of whether the engine
+    early-exits the dead ticks.
 
     Everything in `sp` is traced: the policy runs through `lax.switch`
     inside `assign_fn`, and non-adaptive policies simply never take the
@@ -502,17 +533,66 @@ def run_sender(
         jnp.zeros(lead + (n,), jnp.float32),
         (zeros, zeros),
     )
-    if spec.early_exit:
-        carry = _scan_early_exit(spec, sender_tick, carry0, tkeys, horizon)
+    tspec = spec.telemetry
+    if tspec is None:
+        if spec.early_exit:
+            carry = _scan_early_exit(
+                spec, sender_tick, carry0, tkeys, horizon,
+                lambda c: _settled(spec, c),
+            )
+        else:
+            carry, _ = jax.lax.scan(sender_tick, carry0, tkeys)
+        frame = None
     else:
-        carry, _ = jax.lax.scan(sender_tick, carry0, tkeys)
+        links = 0
+        if tspec.links and tel_link_fn is not None:
+            links = int(tel_link_fn(fabric0)[0].shape[-1])
+        tel0 = init_frame(tspec, lead, n, links)
+        m = 1 << spec.ell
+
+        def tel_tick(wcarry, kt):
+            base, tel = wcarry
+            # settle is ABSORBING (see _settled), so gating capture on the
+            # pre-tick predicate suppresses exactly the dead ticks an
+            # early-exit run would skip: the recorded series is identical
+            # in both execution modes, and a denser stride's samples are a
+            # superset of a coarser one's.
+            settled_pre = _settled(spec, base)
+            t_pre = base[0].t
+            base, _ = sender_tick(base, kt)
+            fabric, ctrl, spray, sent_sched, debt, done_at, sent_pp, _ = base
+            capture = (~settled_pre) & ((t_pre % tspec.stride) == 0)
+            link = None
+            if tspec.links and tel_link_fn is not None:
+                link = tel_link_fn(fabric)
+            tel = record(
+                tspec, tel, capture,
+                tick=t_pre, m=m,
+                alloc=ctrl.profile.b,
+                sent_pp=sent_pp,
+                dropped_pp=dropped_fn(fabric),
+                debt=debt,
+                emitted=sent_sched,
+                received=received_fn(fabric),
+                j=spray.j,
+                link=link,
+            )
+            return (base, tel), None
+
+        if spec.early_exit:
+            carry, frame = _scan_early_exit(
+                spec, tel_tick, (carry0, tel0), tkeys, horizon,
+                lambda wc: _settled(spec, wc[0]),
+            )
+        else:
+            (carry, frame), _ = jax.lax.scan(tel_tick, (carry0, tel0), tkeys)
     (fabric, ctrl, _, _, _, done_at, sent_pp, _) = carry
     cct = jnp.where(done_at >= 0, done_at.astype(jnp.float32), float(horizon))
     if link_fn is not None:
         link_served, link_busy = link_fn(fabric)
     else:
         link_served = link_busy = jnp.zeros((0,), jnp.float32)
-    return SimResult(
+    result = SimResult(
         cct=cct,
         sent_total=sent_pp,
         dropped_total=dropped_fn(fabric),
@@ -522,6 +602,7 @@ def run_sender(
         link_served=link_served,
         link_busy=link_busy,
     )
+    return result if frame is None else (result, frame)
 
 
 def run_message_on(
@@ -665,6 +746,7 @@ def _run_flows(
         assign_fn=assign_fn, ctrl_update=ctrl_update,
         received_fn=lambda s: s.received, dropped_fn=lambda s: s.dropped,
         k_loop=k_loop, link_fn=lambda s: (s.link_served, s.link_busy),
+        tel_link_fn=lambda s: link_telemetry(topo, s),
     )
 
 

@@ -1,0 +1,542 @@
+"""In-scan telemetry: per-tick fabric/path time series from ONE compiled run.
+
+The paper's central claims are *dynamic* — bounded per-interval discrepancy
+(§9) and fast whack/restore convergence after congestion feedback — but a
+`SimResult` only reports endpoint aggregates (CCT, final counters).  This
+module makes the dynamics first-class: a static `TelemetrySpec` attached to
+`SenderSpec` threads a `TelemetryFrame` pytree through the `sender_tick`
+scan carry, so decimated per-tick time series are captured INSIDE the one
+compiled program — no host round-trips, no second run, and the capture
+composes with every sweep axis (policies / draws / scenarios / steps /
+rounds just add leading axes to the frame).
+
+Captured channels (sampled every `stride` ticks, ring-buffered over
+`window` samples):
+
+  * per-path   — allocation profile ``b(t)`` (the controller's live whack /
+                 restore state), cumulative per-path emissions and drops;
+  * per-flow   — ARQ debt, cumulative emitted / received packets, and an
+                 ONLINE windowed discrepancy gauge: the traced counterpart
+                 of `repro.core.deviation` (§9), computed per capture
+                 window as ``max_i |m * hits_i - b_i * X| / m`` with
+                 ``hits_i`` the window's per-path selections and ``X`` the
+                 window's total selections.  Division by m = 2**ell is
+                 exact in float32, so the gauge equals the §9 integer
+                 oracle bit-for-bit whenever the profile is constant over
+                 the window (pinned by tests/test_telemetry.py).
+  * per-link   — instantaneous queue depth (flow + background backlog),
+                 cumulative served / dropped counters, and an over-ECN-
+                 threshold indicator (shared leaf–spine fabric only; the
+                 independent-bundle fabric has no link concept).
+
+Invariants (all pinned by tests):
+
+  * `TelemetrySpec` disabled (``SenderSpec.telemetry is None``, the
+    default) leaves the sender engine's code path UNTOUCHED — the scan
+    carry, program and outputs are byte-identical to the pre-telemetry
+    engine (golden traces hold, `compile_gate` still sees one program per
+    family).
+  * Capture is observation-only: the enabled run's `SimResult` is
+    bit-identical to the disabled run's.
+  * Capture freezes once the simulation settles (every flow done, ARQ debt
+    drained, fabric quiescent — the early-exit stop condition), so the
+    recorded series is identical whether or not the engine early-exits the
+    dead ticks, and identical rows come back under any `stride` that
+    divides a denser one's.
+
+Derived metrics (host-side, over the extracted series):
+
+  * `recovery_ticks` — per scenario event (`event_onsets` reads the
+    `EventSchedule`), ticks from event onset until the allocation profile
+    re-converges to its post-event steady state within `tol` balls and
+    stays there — the whack/restore convergence speed the ROADMAP calls
+    "currently unmeasured".
+  * `queue_percentiles` — windowed p50/p99 link-queue occupancy.
+
+Export (host-side): `write_series_jsonl` / `read_series_jsonl` (a line-
+oriented series store that round-trips exactly) and `chrome_trace` (an
+event-annotated Chrome/Perfetto ``traceEvents`` JSON: counter tracks per
+channel, instant events at scenario onsets).  `tools/trace_report.py`
+summarizes or diffs the exported files from the command line.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.net.topology import EventSchedule
+
+__all__ = [
+    "TelemetrySpec",
+    "TelemetryFrame",
+    "init_frame",
+    "record",
+    "frame_select",
+    "series",
+    "event_onsets",
+    "recovery_ticks",
+    "summarize_recovery",
+    "queue_percentiles",
+    "write_series_jsonl",
+    "read_series_jsonl",
+    "chrome_trace",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetrySpec:
+    """Static, shape-affecting telemetry description (a jit cache key).
+
+    ``stride`` decimates capture to every stride-th tick; ``window`` sizes
+    the sample ring buffer (samples beyond it wrap, keeping the most recent
+    `window`).  Channel groups toggle statically so disabled groups cost
+    zero buffer memory AND zero per-tick work: `paths` gates the per-path
+    snapshots, `links` the per-link snapshots (only meaningful on fabrics
+    with a link concept), `discrepancy` the online §9 gauge.
+    """
+
+    stride: int = 1
+    window: int = 512
+    paths: bool = True
+    links: bool = True
+    discrepancy: bool = True
+
+    def __post_init__(self):
+        if self.stride < 1:
+            raise ValueError(f"stride must be >= 1, got {self.stride}")
+        if self.window < 1:
+            raise ValueError(f"window must be >= 1, got {self.window}")
+
+    def samples(self, horizon: int) -> int:
+        """Samples a full `horizon`-tick run can produce (before wrap)."""
+        return -(-horizon // self.stride)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TelemetryFrame:
+    """The in-scan telemetry pytree: ring buffers + gauge window openers.
+
+    Channel buffers have a leading sample axis W = `TelemetrySpec.window`;
+    per-flow channels carry the engine's `lead` axes after it, per-path
+    channels a trailing path axis, per-link channels a trailing link axis.
+    Statically disabled channel groups are zero-width (trailing dim 0), so
+    the pytree structure never depends on runtime values.  Sweep wrappers
+    (`jax.vmap` / `lax.map`) prepend their axes to EVERY leaf — peel them
+    with `frame_select` before calling `series`.
+
+    `prev_sent` / `prev_j` are carry state, not channels: they hold the
+    per-path emission counters and spray counter at the previous capture,
+    which is what makes the discrepancy gauge *windowed* (each sample
+    covers exactly the selections since the sample before it).
+    """
+
+    count: jax.Array       # int32 — samples written (wraps past window)
+    tick: jax.Array        # int32[W] — tick of each sample
+    alloc: jax.Array       # int32[W, *lead, n?] profile b(t)
+    sent_pp: jax.Array     # float32[W, *lead, n?] cumulative per-path sent
+    dropped_pp: jax.Array  # float32[W, *lead, n?] cumulative per-path drops
+    debt: jax.Array        # float32[W, *lead] ARQ retransmission debt
+    emitted: jax.Array     # float32[W, *lead] cumulative scheduled emissions
+    received: jax.Array    # float32[W, *lead] cumulative deliveries
+    disc: jax.Array        # float32[W, *lead] windowed §9 gauge (exact /m)
+    link_queue: jax.Array  # float32[W, L?] instantaneous link backlog
+    link_served: jax.Array    # float32[W, L?] cumulative served
+    link_dropped: jax.Array   # float32[W, L?] cumulative tail drops
+    link_ecn: jax.Array       # float32[W, L?] 1.0 where over ECN threshold
+    prev_sent: jax.Array   # float32[*lead, n] gauge window opener
+    prev_j: jax.Array      # uint32[*lead] spray counter at last capture
+
+    @property
+    def window(self) -> int:
+        return int(self.tick.shape[0])
+
+
+# channel names in export order (buffers with their sample axis first)
+_CHANNELS = (
+    "tick", "alloc", "sent_pp", "dropped_pp", "debt", "emitted", "received",
+    "disc", "link_queue", "link_served", "link_dropped", "link_ecn",
+)
+
+
+def init_frame(
+    tspec: TelemetrySpec,
+    lead: Tuple[int, ...],
+    n: int,
+    links: int,
+) -> TelemetryFrame:
+    """Zeroed frame for an engine run with flow axes `lead`, n paths and
+    `links` shared links (0 on fabrics without a link concept)."""
+    W = tspec.window
+    np_ = n if tspec.paths else 0
+    L = links if tspec.links else 0
+    f32 = jnp.float32
+    return TelemetryFrame(
+        count=jnp.int32(0),
+        tick=jnp.zeros((W,), jnp.int32),
+        alloc=jnp.zeros((W,) + lead + (np_,), jnp.int32),
+        sent_pp=jnp.zeros((W,) + lead + (np_,), f32),
+        dropped_pp=jnp.zeros((W,) + lead + (np_,), f32),
+        debt=jnp.zeros((W,) + lead, f32),
+        emitted=jnp.zeros((W,) + lead, f32),
+        received=jnp.zeros((W,) + lead, f32),
+        disc=jnp.zeros((W,) + lead, f32),
+        link_queue=jnp.zeros((W, L), f32),
+        link_served=jnp.zeros((W, L), f32),
+        link_dropped=jnp.zeros((W, L), f32),
+        link_ecn=jnp.zeros((W, L), f32),
+        prev_sent=jnp.zeros(lead + (n,), f32),
+        prev_j=jnp.zeros(lead, jnp.uint32),
+    )
+
+
+def record(
+    tspec: TelemetrySpec,
+    frame: TelemetryFrame,
+    capture: jax.Array,  # bool scalar — write this tick's sample?
+    *,
+    tick: jax.Array,     # int32 scalar — tick index being recorded
+    m: int,              # profile precision (2**ell), static
+    alloc: jax.Array,        # int32[*lead, n]
+    sent_pp: jax.Array,      # float32[*lead, n]
+    dropped_pp: jax.Array,   # float32[*lead, n]
+    debt: jax.Array,         # float32[*lead]
+    emitted: jax.Array,      # float32[*lead]
+    received: jax.Array,     # float32[*lead]
+    j: jax.Array,            # uint32[*lead] spray counter (post-tick)
+    link: Optional[Tuple[jax.Array, jax.Array, jax.Array, jax.Array]],
+) -> TelemetryFrame:
+    """One capture step: predicated ring write of every enabled channel.
+
+    When ``capture`` is False every buffer slot is rewritten with its own
+    current value (a bit-identical no-op), so the whole update stays a
+    branch-free select that vmaps cleanly.  `link` is the fabric's
+    (queue, served, dropped, ecn) reader output, or None on link-less
+    fabrics.
+    """
+    w = frame.count % frame.window
+
+    def put(buf: jax.Array, val: jax.Array) -> jax.Array:
+        return buf.at[w].set(jnp.where(capture, val, buf[w]))
+
+    if tspec.discrepancy:
+        # §9 windowed discrepancy, m-scaled integer arithmetic carried in
+        # float32: hits and X are small integers (<= rate * stride), so
+        # m * hits and b * X are exact below 2**24, and /m is a power-of-
+        # two division — exact.  Max over paths = the flow's worst-path
+        # deviation over this capture window.
+        x = (j - frame.prev_j).astype(jnp.int32).astype(jnp.float32)
+        hits = sent_pp - frame.prev_sent
+        scaled = m * hits - alloc.astype(jnp.float32) * x[..., None]
+        disc = jnp.max(jnp.abs(scaled), axis=-1) / m
+    else:
+        disc = jnp.zeros_like(debt)
+
+    if tspec.links and link is not None:
+        lq, ls, ld, le = link
+    else:
+        zero_l = frame.link_queue[0]  # [0] when disabled
+        lq = ls = ld = le = zero_l
+
+    trail = alloc.shape[-1] if tspec.paths else 0
+    return TelemetryFrame(
+        count=frame.count + capture.astype(jnp.int32),
+        tick=put(frame.tick, tick.astype(jnp.int32)),
+        alloc=put(frame.alloc, alloc[..., :trail]),
+        sent_pp=put(frame.sent_pp, sent_pp[..., :trail]),
+        dropped_pp=put(frame.dropped_pp, dropped_pp[..., :trail]),
+        debt=put(frame.debt, debt),
+        emitted=put(frame.emitted, emitted),
+        received=put(frame.received, received),
+        disc=put(frame.disc, disc),
+        link_queue=put(frame.link_queue, lq),
+        link_served=put(frame.link_served, ls),
+        link_dropped=put(frame.link_dropped, ld),
+        link_ecn=put(frame.link_ecn, le),
+        prev_sent=jnp.where(capture, sent_pp, frame.prev_sent),
+        prev_j=jnp.where(capture, j, frame.prev_j),
+    )
+
+
+# --- host-side series extraction ------------------------------------------
+
+
+def frame_select(frame: TelemetryFrame, idx) -> TelemetryFrame:
+    """Peel leading SWEEP axes off every leaf (vmap/lax.map prepend them
+    uniformly): ``frame_select(f, (si, pi, di))`` is run (si, pi, di)."""
+    if not isinstance(idx, tuple):
+        idx = (idx,)
+    return jax.tree.map(lambda x: x[idx], frame)
+
+
+def series(frame: TelemetryFrame) -> Dict[str, np.ndarray]:
+    """Extract the valid, tick-ordered samples of ONE run as numpy arrays.
+
+    `frame` must be a single run's frame (peel sweep axes with
+    `frame_select` first: `frame.count` must be a scalar).  Returns
+    {channel: array} with the sample axis first, zero-width (disabled)
+    channels omitted.  When more samples were captured than the window
+    holds, the ring wrapped and the OLDEST surviving sample leads.
+    """
+    count = np.asarray(frame.count)
+    if count.ndim != 0:
+        raise ValueError(
+            f"frame carries sweep axes {count.shape} — index them off with "
+            f"frame_select(frame, idx) first"
+        )
+    count = int(count)
+    W = frame.window
+    if count <= W:
+        sl = np.arange(count)
+    else:
+        sl = np.arange(count - W, count) % W
+    out: Dict[str, np.ndarray] = {}
+    for name in _CHANNELS:
+        buf = np.asarray(getattr(frame, name))
+        if buf.ndim > 1 and buf.shape[-1] == 0:
+            continue  # statically disabled channel group
+        out[name] = buf[sl]
+    return out
+
+
+# --- derived metrics -------------------------------------------------------
+
+
+def event_onsets(sched: EventSchedule) -> np.ndarray:
+    """Ticks where the deterministic event schedule changes its row.
+
+    Row t of the schedule drives tick t (last row persists), so a change
+    between rows t-1 and t is an event ONSET at tick t — a flap edge, a
+    storm wave, a background burst boundary.  Returns the sorted int64
+    onset ticks (empty for a static environment).
+    """
+    cap = np.asarray(sched.cap_scale)
+    bg = np.asarray(sched.bg_arrivals)
+    rows = np.concatenate([cap, bg], axis=-1)
+    if rows.shape[0] < 2:
+        return np.zeros((0,), np.int64)
+    change = np.any(rows[1:] != rows[:-1], axis=-1)
+    return np.flatnonzero(change).astype(np.int64) + 1
+
+
+def recovery_ticks(
+    tick: np.ndarray,
+    alloc: np.ndarray,
+    onsets: Sequence[int],
+    *,
+    tol: float = 0.0,
+    min_hold: int = 2,
+) -> np.ndarray:
+    """Ticks from each event onset until the allocation profile re-converges.
+
+    For each onset, the segment of samples up to the next onset (or the end
+    of the series) defines that event's response; its LAST sample is the
+    post-event steady profile.  Recovery is the first sample from which the
+    profile stays within `tol` balls (L-infinity over paths) of that steady
+    state for the rest of the segment — the paper's whack/restore
+    convergence, measured.  A stable suffix shorter than `min_hold` samples
+    is right-censored and reported as -1 (the profile was still moving when
+    the window closed); onsets with no sample before the next onset are
+    also -1.
+
+    Onsets past the last captured sample are dropped, not censored: capture
+    freezes when every flow settles, so a schedule row changing after that
+    point acts on an idle fabric — there is no response to measure.
+
+    `alloc` is ``[K, *lead, n]`` (any flow axes between the sample and path
+    axes); returns ``[n_observed_onsets, *lead]`` float64 tick counts.
+    """
+    tick = np.asarray(tick)
+    alloc = np.asarray(alloc, np.float64)
+    onsets = np.asarray(list(onsets), np.int64)
+    onsets = onsets[onsets <= int(tick[-1])] if tick.size else onsets[:0]
+    lead = alloc.shape[1:-1]
+    out = np.full((len(onsets),) + lead, -1.0)
+    bounds = np.concatenate([onsets[1:], [np.iinfo(np.int64).max]])
+    for i, (t0, t1) in enumerate(zip(onsets, bounds)):
+        k0 = int(np.searchsorted(tick, t0))
+        k1 = int(np.searchsorted(tick, t1))
+        if k1 - k0 < 1:
+            continue
+        seg = alloc[k0:k1]                                 # [k, *lead, n]
+        dev = np.max(np.abs(seg - seg[-1]), axis=-1)       # [k, *lead]
+        ok = dev <= tol
+        # longest all-True suffix per element: first index where the
+        # reversed cumulative-AND still holds
+        suffix = np.minimum.accumulate(ok[::-1], axis=0)[::-1]
+        first = suffix.argmax(axis=0)                      # [*lead]
+        hold = (k1 - k0) - first
+        rec = tick[k0 + first].astype(np.float64) - float(t0)
+        out[i] = np.where(hold >= min_hold, rec, -1.0)
+    return out
+
+
+def summarize_recovery(rec: np.ndarray) -> Dict[str, float]:
+    """Fold a `recovery_ticks` array into a compact row: median / p99 / max
+    over the RECOVERED entries plus the recovered fraction (censored -1
+    entries excluded from the percentiles, counted in the fraction)."""
+    rec = np.asarray(rec, np.float64).reshape(-1)
+    if rec.size == 0:
+        return {"events": 0, "recovered_frac": 1.0,
+                "p50": 0.0, "p99": 0.0, "max": 0.0}
+    good = rec[rec >= 0]
+    frac = float(good.size) / rec.size
+    if good.size == 0:
+        return {"events": int(rec.size), "recovered_frac": 0.0,
+                "p50": -1.0, "p99": -1.0, "max": -1.0}
+    return {
+        "events": int(rec.size),
+        "recovered_frac": round(frac, 4),
+        "p50": float(np.percentile(good, 50)),
+        "p99": float(np.percentile(good, 99)),
+        "max": float(good.max()),
+    }
+
+
+def queue_percentiles(
+    ser: Dict[str, np.ndarray], qs: Sequence[float] = (50.0, 99.0)
+) -> Dict[str, float]:
+    """Windowed queue-occupancy percentiles over the captured samples.
+
+    ``all_pXX`` pools every (sample, link) observation; ``hot_pXX`` takes
+    the per-sample HOTTEST link first (the head-of-line queue a worst-case
+    packet sees) and then the percentile over samples.
+    """
+    q = np.asarray(ser["link_queue"], np.float64)
+    out: Dict[str, float] = {}
+    hot = q.max(axis=-1) if q.size else np.zeros((1,))
+    for x in qs:
+        out[f"all_p{int(x)}"] = float(np.percentile(q, x)) if q.size else 0.0
+        out[f"hot_p{int(x)}"] = float(np.percentile(hot, x))
+    return out
+
+
+# --- export: JSONL series store + Chrome/Perfetto trace -------------------
+
+
+def write_series_jsonl(
+    path: str,
+    ser: Dict[str, np.ndarray],
+    *,
+    meta: Optional[Dict] = None,
+) -> None:
+    """Write a series as line-oriented JSON: one meta line, one line per
+    sample.  Lossless for the integer channels; floats round-trip through
+    repr (float32 values survive exactly)."""
+    names = [k for k in _CHANNELS if k in ser]
+    k_samples = len(ser["tick"]) if "tick" in ser else 0
+    head = {
+        "_meta": dict(meta or {}),
+        "channels": {k: list(np.asarray(ser[k]).shape[1:]) for k in names},
+        "samples": k_samples,
+    }
+    with open(path, "w") as f:
+        f.write(json.dumps(head) + "\n")
+        for k_i in range(k_samples):
+            row = {k: np.asarray(ser[k][k_i]).tolist() for k in names}
+            f.write(json.dumps(row) + "\n")
+
+
+def read_series_jsonl(path: str) -> Tuple[Dict[str, np.ndarray], Dict]:
+    """Inverse of `write_series_jsonl`: returns (series, meta)."""
+    with open(path) as f:
+        lines = [ln for ln in f.read().splitlines() if ln.strip()]
+    if not lines:
+        raise ValueError(f"{path}: empty trace file")
+    head = json.loads(lines[0])
+    if "_meta" not in head or "channels" not in head:
+        raise ValueError(f"{path}: missing series header line")
+    rows = [json.loads(ln) for ln in lines[1:]]
+    if len(rows) != int(head.get("samples", len(rows))):
+        raise ValueError(
+            f"{path}: header declares {head.get('samples')} samples, "
+            f"found {len(rows)}"
+        )
+    ser: Dict[str, np.ndarray] = {}
+    for name, trail in head["channels"].items():
+        vals = np.asarray([r[name] for r in rows])
+        dtype = np.int64 if name in ("tick",) else (
+            np.int32 if name == "alloc" else np.float32
+        )
+        ser[name] = vals.reshape((len(rows),) + tuple(trail)).astype(dtype)
+    return ser, head["_meta"]
+
+
+def _counter_event(name: str, ts: int, args: Dict) -> Dict:
+    return {"ph": "C", "name": name, "pid": 0, "tid": 0,
+            "ts": int(ts), "args": args}
+
+
+def chrome_trace(
+    ser: Dict[str, np.ndarray],
+    *,
+    onsets: Sequence[int] = (),
+    flow: Optional[int] = None,
+    max_links: int = 0,
+) -> Dict:
+    """Render a series as a Chrome/Perfetto ``traceEvents`` dict.
+
+    Counter tracks: per-path allocation and windowed discrepancy of one
+    flow (`flow`; None picks flow 0 of multi-flow series, or the only
+    flow), per-flow debt/received, and fabric aggregates (total + hottest
+    link queue, links over ECN, cumulative drops).  `max_links` > 0 adds
+    that many individual per-link queue tracks (link ids sorted by peak
+    backlog).  Scenario `onsets` land as instant events, so the whack /
+    restore response lines up under the event that caused it in the
+    Perfetto UI.  Load via chrome://tracing or https://ui.perfetto.dev.
+    """
+    ticks = np.asarray(ser["tick"])
+    ev: List[Dict] = []
+
+    def flow_view(arr):
+        # [K, n] (single flow) / [K, F, n] (coupled flows) -> [K, n]
+        a = np.asarray(arr)
+        if a.ndim == 3:
+            return a[:, 0 if flow is None else flow]
+        return a
+
+    if "alloc" in ser:
+        alloc = flow_view(ser["alloc"])
+        for k_i, t in enumerate(ticks):
+            ev.append(_counter_event(
+                "flow/alloc", t,
+                {f"path{i}": int(v) for i, v in enumerate(alloc[k_i])},
+            ))
+    scalars = [(nm, f"flow/{nm}") for nm in ("disc", "debt", "received")
+               if nm in ser]
+    for nm, track in scalars:
+        a = np.asarray(ser[nm])
+        v = a if a.ndim == 1 else a[:, 0 if flow is None else flow]
+        for k_i, t in enumerate(ticks):
+            ev.append(_counter_event(track, t, {nm: float(v[k_i])}))
+    if "link_queue" in ser:
+        q = np.asarray(ser["link_queue"], np.float64)
+        ecn = np.asarray(ser.get("link_ecn", np.zeros_like(q)))
+        drops = np.asarray(ser.get("link_dropped", np.zeros_like(q)))
+        for k_i, t in enumerate(ticks):
+            ev.append(_counter_event("fabric/queue", t, {
+                "total": float(q[k_i].sum()),
+                "hottest": float(q[k_i].max()) if q.shape[-1] else 0.0,
+            }))
+            ev.append(_counter_event("fabric/health", t, {
+                "ecn_links": float(ecn[k_i].sum()),
+                "dropped_total": float(drops[k_i].sum()),
+            }))
+        if max_links and q.shape[-1]:
+            hot_ids = np.argsort(-q.max(axis=0))[:max_links]
+            for link in hot_ids:
+                for k_i, t in enumerate(ticks):
+                    ev.append(_counter_event(
+                        f"link{int(link)}/queue", t,
+                        {"backlog": float(q[k_i, link])},
+                    ))
+    for t0 in onsets:
+        ev.append({"ph": "i", "name": "scenario event", "pid": 0, "tid": 0,
+                   "ts": int(t0), "s": "g"})
+    ev.sort(key=lambda e: e["ts"])
+    return {"traceEvents": ev, "displayTimeUnit": "ms"}

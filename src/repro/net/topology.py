@@ -53,6 +53,8 @@ __all__ = [
     "scatter_delivery",
     "shared_fabric_tick",
     "single_flow_stepper",
+    "link_backlog",
+    "link_telemetry",
 ]
 
 
@@ -366,6 +368,25 @@ def shared_fabric_tick(
         t=t + 1,
     )
     return new_state, fb
+
+
+def link_backlog(topo: TopologyParams, state: SharedFabricState) -> jax.Array:
+    """Instantaneous per-link backlog [L]: flow traffic (all hops, all
+    flow-paths crossing the link) plus the background queue.  Equal to the
+    post-service `residual` of the tick that produced `state`."""
+    return _link_sum(state.queue, topo.route, topo.links) + state.bg_queue
+
+
+def link_telemetry(topo: TopologyParams, state: SharedFabricState):
+    """Telemetry reader: per-link (queue, served, dropped, ecn), each [L].
+
+    `queue` is the instantaneous backlog, `served`/`dropped` the cumulative
+    link counters, `ecn` a 0/1 indicator of backlog over the mark threshold
+    — the same predicate `shared_fabric_tick` uses to mark exiting packets.
+    """
+    q = link_backlog(topo, state)
+    over = (q > topo.ecn_threshold).astype(jnp.float32)
+    return q, state.link_served, state.link_dropped, over
 
 
 def single_flow_stepper(topo: TopologyParams, sched: EventSchedule):

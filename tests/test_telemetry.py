@@ -1,0 +1,296 @@
+"""In-scan telemetry suite: capture is observation, never perturbation.
+
+Pins the telemetry layer's contract from `docs/BENCHMARKS.md`:
+
+  * a disabled spec (`SenderSpec.telemetry = None`, the default) is the
+    exact pre-telemetry engine — and an ENABLED spec must not change the
+    simulation either: SimResult leaves bit-identical either way;
+  * decimation subsamples, it does not re-simulate: a stride-k capture
+    equals the dense capture's rows at tick % k == 0 for every cumulative
+    and instantaneous channel (the windowed discrepancy gauge is excluded
+    by design — its window is stride-relative);
+  * the early-exit fast path records the same series as the full-horizon
+    scan (capture freezes with settle, which is absorbing);
+  * the online discrepancy gauge equals the EXACT §9 integer oracle
+    (`repro.core.deviation.spray_keys_np`) while the profile is static;
+  * `recovery_ticks` on a hand-built two-path whack has the closed-form
+    answer, censors short holds, and drops unobserved onsets;
+  * the JSONL series store and Chrome/Perfetto export round-trip.
+"""
+import dataclasses
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.deviation import spray_keys_np
+from repro.net.scenarios import link_flap
+from repro.net.sender import Policy, SenderSpec, run_flows, sender_params
+from repro.net.telemetry import (
+    TelemetrySpec,
+    chrome_trace,
+    event_onsets,
+    frame_select,
+    queue_percentiles,
+    read_series_jsonl,
+    recovery_ticks,
+    series,
+    summarize_recovery,
+    write_series_jsonl,
+)
+from repro.net.topology import EventSchedule, leaf_spine, null_schedule
+
+HORIZON = 256
+N_PACKETS = 96
+
+
+def _flap(period=32):
+    return link_flap(flows=4, n_spines=4, period=period, horizon=HORIZON)
+
+
+def _run(tspec, *, early_exit=True, rate=8):
+    topo, sched = _flap()
+    spec = SenderSpec(rate_cap=rate, early_exit=early_exit, telemetry=tspec)
+    sp = sender_params(Policy.WAM, rate=rate)
+    return run_flows(
+        topo, sched, spec, sp, N_PACKETS, jax.random.PRNGKey(0), HORIZON
+    )
+
+
+@pytest.fixture(scope="module")
+def dense_run():
+    """One WAM link_flap run with dense (stride-1) capture."""
+    return _run(TelemetrySpec(stride=1, window=HORIZON))
+
+
+def _leaves(tree):
+    return jax.tree_util.tree_leaves(tree)
+
+
+# --- zero observer effect -------------------------------------------------
+
+
+def test_enabled_capture_is_bit_identical_to_disabled(dense_run):
+    result, _frame = dense_run
+    bare = _run(None)
+    for a, b in zip(_leaves(result), _leaves(bare)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_disabled_spec_returns_plain_simresult():
+    bare = _run(None)
+    assert not isinstance(bare, tuple)
+    assert hasattr(bare, "cct")
+
+
+def test_static_channel_gating_changes_no_simulation_bits(dense_run):
+    result, _ = dense_run
+    slim, frame = _run(
+        TelemetrySpec(
+            stride=1, window=HORIZON,
+            paths=False, links=False, discrepancy=False,
+        )
+    )
+    for a, b in zip(_leaves(result), _leaves(slim)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    ser = series(frame_select(frame, ()))
+    # trailing-axis channel groups (paths/links) go zero-width: absent from
+    # the series; the per-flow gauge channel stays but its compute is
+    # skipped, so it reads identically zero
+    assert set(ser) == {"tick", "debt", "emitted", "received", "disc"}
+    assert "alloc" not in ser and "link_queue" not in ser
+    assert not np.any(ser["disc"])
+
+
+# --- decimation + early-exit equivalences ---------------------------------
+
+
+def test_decimated_equals_dense_subsampled(dense_run):
+    _, dense_frame = dense_run
+    dense = series(frame_select(dense_frame, ()))
+    _, dec_frame = _run(TelemetrySpec(stride=4, window=HORIZON // 4))
+    dec = series(frame_select(dec_frame, ()))
+    keep = dense["tick"] % 4 == 0
+    np.testing.assert_array_equal(dec["tick"], dense["tick"][keep])
+    for name in dec:
+        if name in ("tick", "disc"):  # disc windows are stride-relative
+            continue
+        np.testing.assert_array_equal(
+            dec[name], dense[name][keep], err_msg=name
+        )
+
+
+def test_early_exit_capture_equals_full_horizon(dense_run):
+    _, fast_frame = dense_run
+    fast = series(frame_select(fast_frame, ()))
+    _, full_frame = _run(
+        TelemetrySpec(stride=1, window=HORIZON), early_exit=False
+    )
+    full = series(frame_select(full_frame, ()))
+    assert set(fast) == set(full)
+    for name in fast:
+        np.testing.assert_array_equal(fast[name], full[name], err_msg=name)
+
+
+# --- the online gauge vs the exact §9 integer oracle ----------------------
+
+
+def test_discrepancy_gauge_matches_integer_oracle():
+    # static environment + non-integral uniform share (1024/3) so the
+    # gauge is NONZERO; profile then stays constant over every window,
+    # which is the regime where the oracle applies exactly
+    topo = leaf_spine(2, 3, [(0, 1), (1, 0)])
+    sched = null_schedule(topo.links, 8)
+    spec = SenderSpec(
+        rate_cap=5, early_exit=True,
+        telemetry=TelemetrySpec(stride=3, window=128),
+    )
+    sp = sender_params(Policy.WAM, rate=5)
+    _, frame = run_flows(
+        topo, sched, spec, sp, 64, jax.random.PRNGKey(1), 512
+    )
+    ser = series(frame_select(frame, ()))
+    m = 1 << spec.ell
+    mask = m - 1
+    assert float(np.max(ser["disc"])) > 0.0
+    checked = 0
+    for f in range(topo.flows):
+        sa = (333 + f * 0x9E3779B9) & mask
+        sb = ((735 + 2 * f) & mask) | 1
+        prev_sent = np.zeros(topo.n)
+        prev_j = 0
+        for k in range(len(ser["tick"])):
+            b = ser["alloc"][k, f].astype(np.int64)
+            c = np.concatenate([[0], np.cumsum(b)])
+            x = int(ser["emitted"][k, f]) - prev_j
+            hits = ser["sent_pp"][k, f] - prev_sent
+            keys = spray_keys_np(
+                spec.ell, int(spec.method), sa, sb, prev_j, x
+            )
+            oracle_hits = np.array(
+                [((keys >= c[i]) & (keys < c[i + 1])).sum()
+                 for i in range(topo.n)]
+            )
+            np.testing.assert_array_equal(hits, oracle_hits)
+            oracle = np.max(np.abs(m * oracle_hits - b * x)) / m
+            assert float(ser["disc"][k, f]) == pytest.approx(oracle)
+            prev_sent = ser["sent_pp"][k, f]
+            prev_j = int(ser["emitted"][k, f])
+            checked += 1
+    assert checked > 10
+
+
+# --- recovery metric: closed form on a hand-built whack -------------------
+
+
+def _two_path_series():
+    tick = np.arange(0, 16, 2)  # 0..14
+    alloc = np.array(
+        [[512, 512], [512, 512], [512, 512],      # t = 0, 2, 4: steady
+         [256, 768], [128, 896], [64, 960],       # t = 6, 8, 10: whacking
+         [64, 960], [64, 960]]                    # t = 12, 14: settled
+    )
+    return tick, alloc
+
+
+def test_recovery_ticks_closed_form():
+    tick, alloc = _two_path_series()
+    # onset at t=5; steady state is the segment's last sample [64, 960];
+    # exact convergence (tol=0) first holds at t=10 -> recovery = 5
+    rec = recovery_ticks(tick, alloc, [5])
+    np.testing.assert_array_equal(rec, [5.0])
+    # a tol=64 ball admits t=8's [128, 896] -> recovery = 3
+    rec = recovery_ticks(tick, alloc, [5], tol=64)
+    np.testing.assert_array_equal(rec, [3.0])
+
+
+def test_recovery_ticks_censoring_and_segmentation():
+    tick, alloc = _two_path_series()
+    # onset 5's segment ends at onset 11: samples t = 6, 8, 10 are all
+    # still moving, so the stable suffix is 1 sample < min_hold -> censored;
+    # onset 11's segment (t = 12, 14) is flat -> recovery = 1
+    rec = recovery_ticks(tick, alloc, [5, 11])
+    np.testing.assert_array_equal(rec, [-1.0, 1.0])
+    # min_hold longer than the stable suffix censors the settled event too
+    rec = recovery_ticks(tick, alloc, [5, 11], min_hold=3)
+    np.testing.assert_array_equal(rec, [-1.0, -1.0])
+    # onsets past the last captured sample are unobserved: dropped, not -1
+    rec = recovery_ticks(tick, alloc, [5, 99])
+    np.testing.assert_array_equal(rec, [5.0])
+
+
+def test_summarize_recovery_folds_censoring():
+    s = summarize_recovery(np.array([4.0, -1.0, 8.0, 6.0]))
+    assert s["events"] == 4
+    assert s["recovered_frac"] == pytest.approx(0.75)
+    assert s["p50"] == pytest.approx(6.0)
+    assert s["max"] == pytest.approx(8.0)
+    empty = summarize_recovery(np.zeros((0,)))
+    assert empty["events"] == 0 and empty["recovered_frac"] == 1.0
+
+
+def test_event_onsets_row_changes():
+    cap = np.ones((8, 2), np.float32)
+    cap[3:5, 0] = 0.5  # change entering row 3 and leaving at row 5
+    bg = np.zeros((8, 2), np.float32)
+    bg[6, 1] = 2.0
+    sched = EventSchedule(cap_scale=cap, bg_arrivals=bg)
+    np.testing.assert_array_equal(event_onsets(sched), [3, 5, 6, 7])
+    static = EventSchedule(cap_scale=cap[:1], bg_arrivals=bg[:1])
+    assert event_onsets(static).size == 0
+
+
+# --- export round-trips ---------------------------------------------------
+
+
+def test_jsonl_round_trip(tmp_path, dense_run):
+    _, frame = dense_run
+    ser = series(frame_select(frame, ()))
+    path = str(tmp_path / "t.jsonl")
+    onsets = [int(t) for t in event_onsets(_flap()[1])]
+    write_series_jsonl(path, ser, meta={"onsets": onsets, "tag": "x"})
+    back, meta = read_series_jsonl(path)
+    assert meta["onsets"] == onsets and meta["tag"] == "x"
+    assert set(back) == set(ser)
+    for name in ser:
+        np.testing.assert_array_equal(back[name], ser[name], err_msg=name)
+    # the reader's documented dtype contract: int64 ticks, int32 alloc,
+    # float32 everything else (float32 values survive repr exactly)
+    assert back["tick"].dtype == np.int64
+    assert back["alloc"].dtype == np.int32
+    assert back["link_queue"].dtype == np.float32
+
+
+def test_chrome_trace_structure(dense_run):
+    _, frame = dense_run
+    ser = series(frame_select(frame, ()))
+    onsets = event_onsets(_flap()[1])
+    doc = chrome_trace(ser, onsets=onsets, flow=0, max_links=2)
+    events = doc["traceEvents"]
+    assert events and json.dumps(doc)  # serializable
+    phases = {ev["ph"] for ev in events}
+    assert phases <= {"C", "i", "M"}
+    counters = [ev for ev in events if ev["ph"] == "C"]
+    assert {ev["ts"] for ev in counters} == {int(t) for t in ser["tick"]}
+    instants = [ev for ev in events if ev["ph"] == "i"]
+    assert {ev["ts"] for ev in instants} == {int(t) for t in onsets}
+
+
+def test_queue_percentiles_hot_vs_all():
+    q = np.array([[0.0, 10.0], [0.0, 20.0]])
+    out = queue_percentiles({"link_queue": q})
+    assert out["hot_p50"] == pytest.approx(15.0)
+    assert out["all_p50"] == pytest.approx(5.0)
+
+
+# --- spec validation ------------------------------------------------------
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        TelemetrySpec(stride=0)
+    with pytest.raises(ValueError):
+        TelemetrySpec(window=0)
+    assert TelemetrySpec(stride=4, window=8).samples(64) == 16  # pre-wrap
+    assert dataclasses.fields(TelemetrySpec)  # frozen static dataclass
