@@ -21,15 +21,17 @@ bench-smoke:
 	python -m benchmarks.run --smoke --json BENCH_smoke.json
 
 # the CI perf gate: every family sweep must stay ONE compiled program
-# (--max-compiles bounds the whole run: 7 family programs + 3 telemetry
-# programs, with headroom) and every gated flow must finish
-# (check_finished fails loudly inside the benches); the telemetry pass
-# adds meta.telemetry recovery rows + traces/ artifacts, and the exported
-# traces must survive their own reader (trace_report exits non-zero on a
-# round-trip or Perfetto-structure failure)
+# (--max-compiles bounds the whole run: 8 family programs + 3 telemetry
+# programs + 2 scale-out scaling workers, with headroom) and every gated
+# flow must finish (check_finished fails loudly inside the benches); the
+# telemetry pass adds meta.telemetry recovery rows + traces/ artifacts,
+# and the exported traces must survive their own reader (trace_report
+# exits non-zero on a round-trip or Perfetto-structure failure).
+# --devices 2 forces a 2-device host mesh so the scale-out section's
+# sharded-vs-unsharded digest gate runs on a real multi-device mesh.
 perf-smoke:
-	python -m benchmarks.run --smoke --json BENCH_smoke.json \
-	  --telemetry --trace-dir traces --max-compiles 13
+	python -m benchmarks.run --smoke --devices 2 --json BENCH_smoke.json \
+	  --telemetry --trace-dir traces --max-compiles 16
 	python tools/trace_report.py --summary traces/*.jsonl
 	python tools/trace_report.py --check-perfetto traces/*.trace.json
 

@@ -29,6 +29,8 @@ __all__ = [
     "timeit",
     "emit",
     "perf",
+    "env_info",
+    "ensure_host_devices",
     "aot_compile",
     "compile_gate",
     "timed_call",
@@ -243,6 +245,50 @@ def telemetry_row(
     return row
 
 
+def env_info(requested_devices: int | None = None) -> Dict[str, object]:
+    """The meta.env block: where this bench ran.
+
+    Captures the jax backend, visible device count (host CPU devices come
+    from ``--xla_force_host_platform_device_count``, see `run.py
+    --devices`), the flow-axis mesh shape the shard_* engines would use,
+    and the XLA flags in effect — enough to interpret a scaling row
+    without the shell that launched it.
+    """
+    import os
+
+    devs = jax.devices()
+    return {
+        "backend": jax.default_backend(),
+        "device_count": len(devs),
+        "device_kinds": sorted({d.device_kind for d in devs}),
+        "requested_devices": requested_devices,
+        "mesh_shape": {"flows": len(devs)},
+        "xla_flags": os.environ.get("XLA_FLAGS", ""),
+        "host_cpu_count": os.cpu_count(),
+    }
+
+
+def ensure_host_devices(n: int) -> int:
+    """Assert that at least `n` jax devices are visible, else fail LOUDLY.
+
+    The force-host-device flag only works if it is in ``XLA_FLAGS`` BEFORE
+    jax initializes, so by the time this module (which imports jax) runs it
+    can only be *checked*, not set — `run.py --devices` sets it first and
+    the scaling subprocesses inherit it via the environment.  The error
+    names the exact fix instead of letting a sharded bench fall over later
+    inside `flow_mesh` with a shape error.
+    """
+    have = jax.device_count()
+    if have < n:
+        raise RuntimeError(
+            f"{n} host devices required but jax initialized with {have} — "
+            f"set XLA_FLAGS=--xla_force_host_platform_device_count={n} "
+            "before the first jax import (benchmarks/run.py --devices does "
+            "this when it is the entry point)"
+        )
+    return n
+
+
 def perf(
     name: str,
     *,
@@ -251,6 +297,8 @@ def perf(
     compile_s: float,
     run_s: float,
     nominal_decisions: bool = False,
+    devices: int | None = None,
+    breakdown: Dict[str, float] | None = None,
 ) -> None:
     """Record one meta.perf row: simulator throughput + wall split.
 
@@ -265,23 +313,38 @@ def perf(
     which one it is and rows are never cross-compared as the same metric.
     run.py surfaces these rows as `meta.perf` in the bench JSON so the perf
     trajectory is diffable run over run.
+
+    Every row is tagged with the device count it ran on (`devices`,
+    defaulting to the visible jax device count) so single- and multi-device
+    rows of the same family are never conflated; scaling drivers that run
+    workers in subprocesses pass the worker's count explicitly.  An
+    optional `breakdown` maps tick-component names (e.g. ``scatter_ring``,
+    ``path_assign``, ``rng``) to measured seconds; shares are normalized
+    over the components so the row reads as "fraction of accounted
+    component time", not of total wall (see `bench_scaleout`).
     """
     total = compile_s + run_s
-    PERF_STATS.append(
-        {
-            "name": name,
-            "fabric_ticks": int(fabric_ticks),
-            "path_decisions": int(path_decisions),
-            "path_decisions_nominal": bool(nominal_decisions),
-            "fabric_ticks_per_s": round(fabric_ticks / max(run_s, 1e-9), 1),
-            "path_decisions_per_s": round(
-                path_decisions / max(run_s, 1e-9), 1
-            ),
-            "compile_s": round(compile_s, 3),
-            "run_s": round(run_s, 3),
-            "run_frac": round(run_s / max(total, 1e-9), 3),
+    row: Dict[str, object] = {
+        "name": name,
+        "devices": int(devices if devices is not None else jax.device_count()),
+        "fabric_ticks": int(fabric_ticks),
+        "path_decisions": int(path_decisions),
+        "path_decisions_nominal": bool(nominal_decisions),
+        "fabric_ticks_per_s": round(fabric_ticks / max(run_s, 1e-9), 1),
+        "path_decisions_per_s": round(
+            path_decisions / max(run_s, 1e-9), 1
+        ),
+        "compile_s": round(compile_s, 3),
+        "run_s": round(run_s, 3),
+        "run_frac": round(run_s / max(total, 1e-9), 3),
+    }
+    if breakdown:
+        comp_total = max(sum(breakdown.values()), 1e-12)
+        row["breakdown"] = {
+            k: {"seconds": round(v, 6), "share": round(v / comp_total, 3)}
+            for k, v in breakdown.items()
         }
-    )
+    PERF_STATS.append(row)
 
 
 def aot_compile(jit_fn, *args, **kwargs) -> Tuple[Callable, float]:

@@ -5,18 +5,23 @@ Flags:
   --smoke       fast small-shape pass (CI sanity, not paper-sized tables)
   --json PATH   also write results as a BENCH_*.json-compatible dict
   --only NAME   run a single section (substring match)
+  --devices N   run on N forced host CPU devices (shard_map scale-out)
+
+`--devices` works by exporting ``--xla_force_host_platform_device_count``
+into XLA_FLAGS, which jax reads exactly once at initialization — so this
+module must stay import-light: nothing that (transitively) imports jax may
+run before `main` has handled the flag.  `benchmarks.common` is therefore
+imported inside `main`, after the environment is set.
 """
 from __future__ import annotations
 
 import argparse
+import importlib
 import json
+import os
 import platform
 import sys
 import time
-
-import importlib
-
-from benchmarks import common
 
 # (section, module) — modules import lazily and defensively: a section whose
 # dependencies are absent (e.g. repro.dist in the seed image) is reported
@@ -27,6 +32,7 @@ SECTION_MODULES = [
     ("sec8_time_varying", "bench_timevarying"),
     ("sec12_cct_ettr", "bench_cct"),
     ("topology_scenarios", "bench_topology"),
+    ("scaleout_3tier", "bench_scaleout"),
     ("job_ettr", "bench_job_ettr"),
     ("cluster_contention", "bench_cluster"),
     ("spray_throughput", "bench_spray_throughput"),
@@ -51,11 +57,47 @@ def _load_sections(only=None):
     return sections
 
 
+def _force_host_devices(n: int) -> None:
+    """Export the forced-host-device flag BEFORE jax initializes.
+
+    jax reads XLA_FLAGS exactly once, at first import — if some earlier
+    import already pulled jax in, quietly editing the environment here
+    would leave the run on the wrong device count, so that case fails
+    loudly instead (unless jax already sees enough devices, e.g. the
+    caller exported the flag before launching python).
+    """
+    flag = f"--xla_force_host_platform_device_count={n}"
+    if "jax" in sys.modules:
+        import jax
+
+        if jax.device_count() < n:
+            raise SystemExit(
+                f"--devices {n}: jax already initialized with "
+                f"{jax.device_count()} device(s); XLA_FLAGS must be set "
+                f"before the first jax import — launch via benchmarks/run.py "
+                f"directly or export XLA_FLAGS='{flag}' in the shell"
+            )
+        return
+    prev = os.environ.get("XLA_FLAGS", "")
+    kept = [
+        p for p in prev.split()
+        if not p.startswith("--xla_force_host_platform_device_count")
+    ]
+    os.environ["XLA_FLAGS"] = " ".join(kept + [flag])
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true", help="fast small-shape pass")
     ap.add_argument("--json", metavar="PATH", help="write results dict to PATH")
     ap.add_argument("--only", metavar="NAME", help="run sections matching NAME")
+    ap.add_argument(
+        "--devices", type=int, metavar="N", default=None,
+        help="force N host CPU devices (XLA_FLAGS="
+        "--xla_force_host_platform_device_count=N, set before jax "
+        "initializes) — the shard_map scale-out benches and the sharded "
+        "sweep engines see an N-device flow mesh",
+    )
     ap.add_argument(
         "--telemetry", action="store_true",
         help="run the in-scan telemetry sections: one extra compiled "
@@ -73,6 +115,16 @@ def main(argv=None) -> None:
         "(the scenario-family batching gate: see docs/BENCHMARKS.md)",
     )
     args = ap.parse_args(argv)
+    if args.devices is not None:
+        if args.devices < 1:
+            raise SystemExit(f"--devices {args.devices}: need >= 1")
+        _force_host_devices(args.devices)
+
+    # deferred so --devices lands in XLA_FLAGS before jax initializes
+    from benchmarks import common
+
+    if args.devices is not None:
+        common.ensure_host_devices(args.devices)
     common.set_smoke(args.smoke)
     common.set_telemetry(args.telemetry, args.trace_dir)
 
@@ -97,6 +149,10 @@ def main(argv=None) -> None:
                 "sections": timings,
                 "python": platform.python_version(),
                 "platform": platform.platform(),
+                # execution environment: backend, device count (forced host
+                # devices under --devices), flow-mesh shape and XLA flags —
+                # scaling rows in meta.perf are uninterpretable without it
+                "env": common.env_info(requested_devices=args.devices),
                 # sweep-speed visibility: every row that reported compile
                 # accounting, plus totals — a compile-count regression (e.g.
                 # a sweep silently falling back to per-policy programs)

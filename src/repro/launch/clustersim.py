@@ -15,28 +15,26 @@ adding policies or jobs does not add XLA programs.
     PYTHONPATH=src python -m repro.launch.clustersim \
         --archs qwen3-8b,qwen3-8b --scenario staggered_start \
         --policies WAM,ECMP --draws 4 --json out.json
+
+``--devices N`` forces N host CPU devices and runs the sweep through the
+flow-sharded engine (`cluster.shard_sweep_cluster_rounds`) — bit-identical
+metrics, a scale-out execution knob, not a model change.  The jax imports
+live inside `main` because the flag must land in XLA_FLAGS before jax
+initializes (see `repro.launch.devices`).
 """
 from __future__ import annotations
 
 import argparse
 import json
 
-import jax
-import numpy as np
-
-from repro.net.cluster import sweep_cluster
-from repro.net.jobs import compile_job
-from repro.net.scenarios import CLUSTER_SCENARIO_NAMES, cluster_scenarios
-from repro.net.sender import SenderSpec, sender_params, stack_params
-from repro.net.transport import Policy
+from repro.launch.devices import add_devices_arg, force_host_devices
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--archs", default="xlstm-350m,qwen3-8b",
                     help="comma-separated model configs, one job each")
-    ap.add_argument("--scenario", default="rings_overlapped",
-                    choices=CLUSTER_SCENARIO_NAMES)
+    ap.add_argument("--scenario", default="rings_overlapped")
     ap.add_argument("--policies", default="ECMP,RR,RAND_STATIC,RAND_ADAPTIVE,WAM",
                     help="comma-separated Policy names")
     ap.add_argument("--workers", type=int, default=4, help="DP degree per job")
@@ -51,7 +49,33 @@ def main(argv=None) -> None:
                          "(default: half of job 0's schedule)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", metavar="PATH", help="also dump results as JSON")
+    add_devices_arg(ap)
     args = ap.parse_args(argv)
+    if args.devices is not None:
+        force_host_devices(args.devices)
+
+    # post---devices imports: nothing above may initialize jax
+    import jax
+    import numpy as np
+
+    from repro.net.cluster import sweep_cluster
+    from repro.net.jobs import compile_job
+    from repro.net.scenarios import CLUSTER_SCENARIO_NAMES, cluster_scenarios
+    from repro.net.sender import SenderSpec, sender_params, stack_params
+    from repro.net.transport import Policy
+
+    if args.scenario not in CLUSTER_SCENARIO_NAMES:
+        ap.error(
+            f"--scenario {args.scenario!r}: choose from "
+            f"{CLUSTER_SCENARIO_NAMES}"
+        )
+    mesh = None
+    if args.devices is not None:
+        from repro.net.sender import flow_mesh
+
+        mesh = flow_mesh(args.devices)
+        print(f"devices: {args.devices} host CPU devices "
+              f"(flow-sharded sweep, bit-identical to unsharded)")
 
     policies = [Policy[p.strip()] for p in args.policies.split(",")]
     archs = [a.strip() for a in args.archs.split(",")]
@@ -79,7 +103,9 @@ def main(argv=None) -> None:
     spec = SenderSpec(rate_cap=args.rate)
     sp = stack_params([sender_params(p, rate=args.rate) for p in policies])
     keys = jax.random.split(jax.random.PRNGKey(args.seed), args.draws)
-    r = sweep_cluster(topo, sched, spec, sp, cluster, keys, args.horizon)
+    r = sweep_cluster(
+        topo, sched, spec, sp, cluster, keys, args.horizon, mesh=mesh
+    )
 
     print(f"\nscenario {args.scenario} ({args.draws} draws, "
           f"horizon {args.horizon}):")

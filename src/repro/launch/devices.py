@@ -1,0 +1,51 @@
+"""``--devices`` plumbing for the launch CLIs: force N host CPU devices.
+
+jax reads ``XLA_FLAGS`` exactly once, at initialization, so the forced
+host-device count must land in the environment BEFORE the first jax
+import.  This module is therefore import-light on purpose (no jax) and
+CLIs that expose ``--devices`` defer their jax-touching imports into
+``main`` until after `force_host_devices` has run — the same contract as
+``benchmarks/run.py --devices``.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+__all__ = ["add_devices_arg", "force_host_devices"]
+
+
+def add_devices_arg(ap: argparse.ArgumentParser) -> None:
+    ap.add_argument(
+        "--devices", type=int, default=None, metavar="N",
+        help="force N host CPU devices and run the sweep through the "
+        "flow-sharded engine (bit-identical results; XLA_FLAGS="
+        "--xla_force_host_platform_device_count=N must take effect before "
+        "jax initializes, which this flag arranges)",
+    )
+
+
+def force_host_devices(n: int) -> None:
+    """Export the forced-host-device flag, failing LOUDLY if it is too
+    late (jax already initialized with fewer devices)."""
+    if n < 1:
+        raise SystemExit(f"--devices {n}: need >= 1")
+    flag = f"--xla_force_host_platform_device_count={n}"
+    if "jax" in sys.modules:
+        import jax
+
+        if jax.device_count() < n:
+            raise SystemExit(
+                f"--devices {n}: jax already initialized with "
+                f"{jax.device_count()} device(s); XLA_FLAGS must be set "
+                f"before the first jax import — export XLA_FLAGS='{flag}' "
+                "in the shell or make this CLI the process entry point"
+            )
+        return
+    prev = os.environ.get("XLA_FLAGS", "")
+    kept = [
+        p for p in prev.split()
+        if not p.startswith("--xla_force_host_platform_device_count")
+    ]
+    os.environ["XLA_FLAGS"] = " ".join(kept + [flag])

@@ -12,26 +12,25 @@ numbers.  The policy grid rides the one-compile sweep
 
     PYTHONPATH=src python -m repro.launch.jobsim --arch xlstm-350m \
         --scenario pfc_storm --policies WAM,ECMP --draws 4 --json out.json
+
+``--devices N`` forces N host CPU devices and runs the sweep through the
+flow-sharded engine (`jobs.shard_sweep_job_steps`) — bit-identical ETTR,
+so it is a scale-out execution knob, not a model change.  The jax imports
+below live inside `main` because the flag must land in XLA_FLAGS before
+jax initializes (see `repro.launch.devices`).
 """
 from __future__ import annotations
 
 import argparse
 import json
 
-import jax
-import numpy as np
-
-from repro.net.jobs import compile_job, step_table, sweep_job, total_packets
-from repro.net.scenarios import JOB_SCENARIO_NAMES, job_scenarios
-from repro.net.sender import SenderSpec, sender_params, stack_params
-from repro.net.transport import Policy
+from repro.launch.devices import add_devices_arg, force_host_devices
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="qwen3-8b")
-    ap.add_argument("--scenario", default="link_flap",
-                    choices=JOB_SCENARIO_NAMES)
+    ap.add_argument("--scenario", default="link_flap")
     ap.add_argument("--policies", default="ECMP,RR,RAND_STATIC,RAND_ADAPTIVE,WAM",
                     help="comma-separated Policy names")
     ap.add_argument("--workers", type=int, default=4, help="DP degree")
@@ -43,7 +42,33 @@ def main(argv=None) -> None:
     ap.add_argument("--horizon", type=int, default=1024)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", metavar="PATH", help="also dump results as JSON")
+    add_devices_arg(ap)
     args = ap.parse_args(argv)
+    if args.devices is not None:
+        force_host_devices(args.devices)
+
+    # post---devices imports: nothing above may initialize jax
+    import jax
+    import numpy as np
+
+    from repro.net.jobs import (
+        compile_job, step_table, sweep_job, total_packets,
+    )
+    from repro.net.scenarios import JOB_SCENARIO_NAMES, job_scenarios
+    from repro.net.sender import SenderSpec, sender_params, stack_params
+    from repro.net.transport import Policy
+
+    if args.scenario not in JOB_SCENARIO_NAMES:
+        ap.error(
+            f"--scenario {args.scenario!r}: choose from {JOB_SCENARIO_NAMES}"
+        )
+    mesh = None
+    if args.devices is not None:
+        from repro.net.sender import flow_mesh
+
+        mesh = flow_mesh(args.devices)
+        print(f"devices: {args.devices} host CPU devices "
+              f"(flow-sharded sweep, bit-identical to unsharded)")
 
     policies = [Policy[p.strip()] for p in args.policies.split(",")]
     job = compile_job(
@@ -71,7 +96,9 @@ def main(argv=None) -> None:
     spec = SenderSpec(rate_cap=args.rate)
     sp = stack_params([sender_params(p, rate=args.rate) for p in policies])
     keys = jax.random.split(jax.random.PRNGKey(args.seed), args.draws)
-    out = sweep_job(topo, sched, spec, sp, [job], keys, horizon=args.horizon)
+    out = sweep_job(
+        topo, sched, spec, sp, [job], keys, horizon=args.horizon, mesh=mesh
+    )
 
     print(f"\nscenario {args.scenario} ({args.draws} draws, "
           f"horizon {args.horizon}):")

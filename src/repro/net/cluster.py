@@ -59,21 +59,35 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.net.jobs import JobSchedule, job_ettr, scheduled_events, step_table
-from repro.net.sender import SenderParams, SenderSpec, run_flows_sized
-from repro.net.topology import EventSchedule, TopologyParams, leaf_spine
+from repro.net.sender import (
+    FLOW_AXIS,
+    SenderParams,
+    SenderSpec,
+    run_flows_sized,
+)
+from repro.net.topology import (
+    EventSchedule,
+    TopologyParams,
+    fat_tree,
+    leaf_spine,
+)
 
 __all__ = [
     "ClusterJob",
     "Cluster",
     "ClusterResult",
     "place_jobs",
+    "place_jobs_pods",
     "cluster_topology",
+    "cluster_fat_tree_topology",
     "cluster_round_table",
     "solo_size_variants",
     "cluster_inputs",
     "run_cluster_rounds",
     "sweep_cluster_rounds",
     "sweep_cluster_rounds_scenarios",
+    "shard_run_cluster_rounds",
+    "shard_sweep_cluster_rounds",
     "jain_index",
     "link_utilization",
     "cluster_metrics",
@@ -203,6 +217,84 @@ def cluster_topology(
         n_spines,
         cluster.flow_pairs(),
         **leaf_spine_kwargs,
+    )
+
+
+def place_jobs_pods(
+    jobs: Sequence[JobSchedule],
+    leaves_per_pod: int,
+    *,
+    start_steps: Optional[Sequence[int]] = None,
+    pack: bool = False,
+) -> Cluster:
+    """Pod-aligned placement for 3-tier fat-tree fabrics.
+
+    Each job's leaf block starts at a POD boundary: a job whose worker
+    count fits `leaves_per_pod` forms an intra-pod ring (its traffic turns
+    around at the pod spines and never crosses the core), a larger job
+    spans consecutive pods and its ring wraps through the core layer —
+    which is where the paper's inter-pod path diversity (spines x cores
+    paths) actually gets exercised.
+
+    `pack=True` co-locates instead: every job's worker w rides leaf w (the
+    multi-tenant regime of `place_jobs(colocated=True)`, here confined to
+    the first ceil(max workers / leaves_per_pod) pods), so intra-pod
+    contention between jobs plus inter-pod self-traffic coexist.
+    """
+    if leaves_per_pod < 1:
+        raise ValueError("leaves_per_pod must be >= 1")
+    if not jobs:
+        raise ValueError("need at least one job")
+    if any(j.workers < 2 for j in jobs):
+        raise ValueError("every job needs >= 2 workers to form a ring")
+    starts = tuple(start_steps) if start_steps is not None else (0,) * len(jobs)
+    if len(starts) != len(jobs):
+        raise ValueError(f"{len(starts)} start_steps for {len(jobs)} jobs")
+    if starts[0] != 0:
+        raise ValueError(
+            "job 0 anchors the planned timeline: start_steps[0] must be 0"
+        )
+    placed, base = [], 0
+    for job, start in zip(jobs, starts):
+        if pack:
+            leaves = tuple(range(job.workers))
+        else:
+            leaves = tuple(range(base, base + job.workers))
+            # the next job starts at the next pod boundary
+            base = -(-(base + job.workers) // leaves_per_pod) * leaves_per_pod
+        placed.append(ClusterJob(job=job, start_step=int(start), leaves=leaves))
+    # round the grid itself up to whole pods
+    n_leaves = 1 + max(max(cj.leaves) for cj in placed)
+    n_leaves = -(-n_leaves // leaves_per_pod) * leaves_per_pod
+    return Cluster(jobs=tuple(placed), n_leaves=n_leaves)
+
+
+def cluster_fat_tree_topology(
+    cluster: Cluster,
+    leaves_per_pod: int,
+    spines_per_pod: int = 2,
+    cores_per_spine: int = 2,
+    *,
+    n_pods: Optional[int] = None,
+    **fat_tree_kwargs,
+) -> TopologyParams:
+    """The 3-tier fat-tree fabric under a placed cluster (the fat-tree
+    counterpart of `cluster_topology`): F = sum(W_j) coupled flows with
+    n = spines_per_pod * cores_per_spine paths each; intra-pod ring hops
+    stay off the core, inter-pod hops spray across it.
+
+    `n_pods` may over-provision beyond the placement's own pod count so
+    different placements share one link-array shape on a stacked scenario
+    axis (idle pods change nothing).
+    """
+    need_pods = -(-cluster.n_leaves // leaves_per_pod)
+    return fat_tree(
+        max(need_pods, n_pods or 0),
+        leaves_per_pod,
+        spines_per_pod,
+        cores_per_spine,
+        cluster.flow_pairs(),
+        **fat_tree_kwargs,
     )
 
 
@@ -415,6 +507,133 @@ def sweep_cluster_rounds_scenarios(
     )
 
 
+def _shard_round_scan(local_run, topo_g, scheds, sp, sizes_g, key):
+    """The round-axis `lax.map` of `run_cluster_rounds`, per shard: the
+    per-flow metric arrays stay local (the caller's out_specs stitch the
+    flow axis back together), the link counters are already global."""
+    R = sizes_g.shape[-2]
+
+    def one_round(sched_r, sizes_rf, idx):
+        k = jax.random.fold_in(key, idx)
+        r = local_run(topo_g, sched_r, sp, sizes_rf, k)
+        return dict(
+            cct=r.cct, finished=r.finished,
+            link_served=r.link_served, link_busy=r.link_busy,
+        )
+
+    def per_round(sched_r, sizes_r, idx):
+        f = lambda s: one_round(sched_r, s, idx)  # noqa: E731
+        for _ in range(sizes_g.ndim - 2):  # map any leading variant axes
+            f = jax.vmap(f)
+        return f(sizes_r)
+
+    out = jax.lax.map(
+        lambda args: per_round(*args),
+        (scheds, jnp.moveaxis(sizes_g, -2, 0), jnp.arange(R)),
+    )
+    return {k: jnp.moveaxis(v, 0, -2) for k, v in out.items()}
+
+
+def _shard_cluster_setup(topo, spec, sizes, horizon, mesh):
+    from repro.net.sender import _local_flow_run, _pad_flow_axis, _pad_topology
+
+    n_shards = int(mesh.shape[FLOW_AXIS])
+    F = int(topo.route.shape[-2])
+    F_pad = -(-F // n_shards) * n_shards
+    topo_g = _pad_topology(topo, F_pad)
+    sizes_g = _pad_flow_axis(jnp.asarray(sizes), F_pad, -1, fill=0)
+    local_run = _local_flow_run(spec, horizon, F, n_shards)
+    return topo_g, sizes_g, local_run, F
+
+
+def _cluster_out_specs(n_lead: int):
+    """{cct, finished} sharded on the trailing flow axis (after `n_lead`
+    sweep/variant/round axes), link counters replicated."""
+    P = jax.sharding.PartitionSpec
+    f = P(*([None] * n_lead + [FLOW_AXIS]))
+    return dict(cct=f, finished=f, link_served=P(), link_busy=P())
+
+
+def _strip_cluster_pad(out, F):
+    cut = lambda x: jax.lax.slice_in_dim(x, 0, F, axis=x.ndim - 1)  # noqa: E731
+    return {
+        k: cut(v) if k in ("cct", "finished") else v for k, v in out.items()
+    }
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "horizon", "mesh"))
+def shard_run_cluster_rounds(
+    topo: TopologyParams,
+    scheds: EventSchedule,
+    spec: SenderSpec,
+    sp: SenderParams,
+    sizes: jax.Array,
+    key: jax.Array,
+    horizon: int = 2048,
+    *,
+    mesh,
+) -> Dict[str, jax.Array]:
+    """`run_cluster_rounds` with the cluster's flow axis sharded over `mesh`
+    (see `sender.flow_mesh`): bit-identical ``{"cct": [..., R, F], ...}``,
+    each round's coupled simulation split across host devices (flow counts
+    that don't divide the device count are padded with silent flows and
+    sliced back off).  Telemetry is not supported on this path."""
+    from jax.experimental.shard_map import shard_map
+
+    topo_g, sizes_g, local_run, F = _shard_cluster_setup(
+        topo, spec, sizes, horizon, mesh
+    )
+    P = jax.sharding.PartitionSpec
+    out = shard_map(
+        functools.partial(_shard_round_scan, local_run),
+        mesh=mesh,
+        in_specs=(P(), P(), P(), P(), P()),
+        out_specs=_cluster_out_specs(sizes_g.ndim - 1),
+        check_rep=False,
+    )(topo_g, scheds, sp, sizes_g, key)
+    return _strip_cluster_pad(out, F)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "horizon", "mesh"))
+def shard_sweep_cluster_rounds(
+    topo: TopologyParams,
+    scheds: EventSchedule,
+    spec: SenderSpec,
+    sp: SenderParams,
+    sizes: jax.Array,
+    keys: jax.Array,
+    horizon: int = 2048,
+    *,
+    mesh,
+) -> Dict[str, jax.Array]:
+    """`sweep_cluster_rounds` sharded over the flow axis: bit-identical
+    ``{"cct": [P, D, V, R, F], ...}``, policies x draws riding vmaps inside
+    the shard body."""
+    from jax.experimental.shard_map import shard_map
+
+    topo_g, sizes_g, local_run, F = _shard_cluster_setup(
+        topo, spec, sizes, horizon, mesh
+    )
+    P = jax.sharding.PartitionSpec
+
+    def body(topo_b, scheds_b, sp_b, sizes_b, keys_b):
+        return jax.vmap(
+            lambda s: jax.vmap(
+                lambda k: _shard_round_scan(
+                    local_run, topo_b, scheds_b, s, sizes_b, k
+                )
+            )(keys_b)
+        )(sp_b)
+
+    out = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), P(), P(), P(), P()),
+        out_specs=_cluster_out_specs(sizes_g.ndim + 1),
+        check_rep=False,
+    )(topo_g, scheds, sp, sizes_g, keys)
+    return _strip_cluster_pad(out, F)
+
+
 def jain_index(x: np.ndarray, axis: int = -1) -> np.ndarray:
     """Jain's fairness index (sum x)^2 / (J * sum x^2) along `axis`: 1.0
     when every job gets an equal share, -> 1/J under total capture."""
@@ -539,15 +758,26 @@ def sweep_cluster(
     cluster: Cluster,
     keys: jax.Array,
     horizon: int = 2048,
+    *,
+    mesh=None,
 ) -> ClusterResult:
     """Host convenience over `sweep_cluster_rounds`: P policies x D draws,
     one compile.  Metric fields carry leading [P, D] axes
-    (``ettr[P, D, J]``, ``jain[P, D]``, ``link_util[P, D, L]``, ...)."""
+    (``ettr[P, D, J]``, ``jain[P, D]``, ``link_util[P, D, L]``, ...).
+
+    With `mesh` (a `sender.flow_mesh`) the raw sweep runs flow-sharded via
+    `shard_sweep_cluster_rounds` — bit-identical raw outputs, so every
+    derived metric is too."""
     if topo.flows != cluster.flows:
         raise ValueError(
             f"topology has {topo.flows} flows but the cluster places "
             f"{cluster.flows}"
         )
     scheds, sizes = cluster_inputs(cluster, sched, horizon)
-    raw = sweep_cluster_rounds(topo, scheds, spec, sp, sizes, keys, horizon)
+    if mesh is not None:
+        raw = shard_sweep_cluster_rounds(
+            topo, scheds, spec, sp, sizes, keys, horizon, mesh=mesh
+        )
+    else:
+        raw = sweep_cluster_rounds(topo, scheds, spec, sp, sizes, keys, horizon)
     return cluster_metrics(cluster, topo, raw)

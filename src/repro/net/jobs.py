@@ -58,7 +58,12 @@ import numpy as np
 from repro.analysis.costs import job_comm_terms
 from repro.configs.base import ArchConfig, ShapeSpec
 from repro.configs.registry import get_config
-from repro.net.sender import SenderParams, SenderSpec, run_flows_sized
+from repro.net.sender import (
+    FLOW_AXIS,
+    SenderParams,
+    SenderSpec,
+    run_flows_sized,
+)
 from repro.net.topology import EventSchedule, TopologyParams
 
 __all__ = [
@@ -73,6 +78,8 @@ __all__ = [
     "run_job_steps",
     "sweep_job_steps",
     "sweep_job_steps_scenarios",
+    "shard_run_job_steps",
+    "shard_sweep_job_steps",
     "run_job",
     "sweep_job",
     "job_ettr",
@@ -419,6 +426,124 @@ def sweep_job_steps_scenarios(
     )
 
 
+def _shard_job_setup(topo, spec, shard, horizon, mesh):
+    """Shared plumbing of the flow-sharded job runners: pad the ring-flow
+    axis to a device multiple, broadcast the per-step scalar shard sizes to
+    per-flow vectors (padding flows get size 0 and stay silent), and build
+    the per-shard sender body."""
+    from repro.net.sender import _local_flow_run, _pad_flow_axis, _pad_topology
+
+    n_shards = int(mesh.shape[FLOW_AXIS])
+    F = int(topo.route.shape[-2])
+    F_pad = -(-F // n_shards) * n_shards
+    topo_g = _pad_topology(topo, F_pad)
+    sizes = _pad_flow_axis(
+        jnp.broadcast_to(
+            jnp.asarray(shard)[..., None], shard.shape + (F,)
+        ),
+        F_pad, -1, fill=0,
+    )
+    local_run = _local_flow_run(spec, horizon, F, n_shards)
+    return topo_g, sizes, local_run, n_shards
+
+
+def _shard_step_scan(local_run, topo_g, scheds, sp, sizes, key, n_shards):
+    """The step-axis `lax.map` of `run_job_steps`, per shard: each step's
+    flow reductions become cross-shard collectives — `pmax` for the barrier
+    (max is exact, so the sharded barrier is bitwise the unsharded one) and
+    a psum-AND for the finished mask."""
+    S = sizes.shape[0]
+
+    def one(args):
+        sched_s, sizes_s, idx = args
+        k = jax.random.fold_in(key, idx)
+        r = local_run(topo_g, sched_s, sp, sizes_s, k)
+        cct = jax.lax.pmax(jnp.max(r.cct), FLOW_AXIS)
+        fin = jax.lax.psum(
+            jnp.all(r.finished).astype(jnp.int32), FLOW_AXIS
+        ) == n_shards
+        return cct, fin
+
+    return jax.lax.map(one, (scheds, sizes, jnp.arange(S)))
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "horizon", "mesh"))
+def shard_run_job_steps(
+    topo: TopologyParams,
+    scheds: EventSchedule,
+    spec: SenderSpec,
+    sp: SenderParams,
+    shard: jax.Array,
+    key: jax.Array,
+    horizon: int = 2048,
+    *,
+    mesh,
+) -> Tuple[jax.Array, jax.Array]:
+    """`run_job_steps` with the W ring flows sharded over `mesh` (see
+    `sender.flow_mesh`): bit-identical ``(cct[S], finished[S])``, the
+    per-step coupled simulation split across host devices."""
+    from jax.experimental.shard_map import shard_map
+
+    topo_g, sizes, local_run, n_shards = _shard_job_setup(
+        topo, spec, shard, horizon, mesh
+    )
+    P = jax.sharding.PartitionSpec
+
+    def body(topo_b, scheds_b, sp_b, sizes_b, key_b):
+        return _shard_step_scan(
+            local_run, topo_b, scheds_b, sp_b, sizes_b, key_b, n_shards
+        )
+
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), P(), P(), P(), P()),
+        out_specs=(P(), P()),
+        check_rep=False,
+    )(topo_g, scheds, sp, sizes, key)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "horizon", "mesh"))
+def shard_sweep_job_steps(
+    topo: TopologyParams,
+    scheds: EventSchedule,
+    spec: SenderSpec,
+    sp: SenderParams,
+    shard: jax.Array,
+    keys: jax.Array,
+    horizon: int = 2048,
+    *,
+    mesh,
+) -> Tuple[jax.Array, jax.Array]:
+    """`sweep_job_steps` sharded over the ring-flow axis: bit-identical
+    ``(cct[P, D, M, S], finished[P, D, M, S])``, the policy/draw/model
+    sweep axes riding vmaps inside the shard body."""
+    from jax.experimental.shard_map import shard_map
+
+    topo_g, sizes, local_run, n_shards = _shard_job_setup(
+        topo, spec, shard, horizon, mesh
+    )
+    P = jax.sharding.PartitionSpec
+
+    def body(topo_b, scheds_b, sp_b, sizes_b, keys_b):
+        def per_model(s, k):
+            return jax.vmap(
+                lambda sched_m, sizes_m: _shard_step_scan(
+                    local_run, topo_b, sched_m, s, sizes_m, k, n_shards
+                )
+            )(scheds_b, sizes_b)
+
+        return jax.vmap(
+            lambda s: jax.vmap(lambda k: per_model(s, k))(keys_b)
+        )(sp_b)
+
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), P(), P(), P(), P()),
+        out_specs=(P(), P()),
+        check_rep=False,
+    )(topo_g, scheds, sp, sizes, keys)
+
+
 def job_ettr(
     job: JobSchedule, step_cct: np.ndarray
 ) -> Tuple[np.ndarray, np.ndarray]:
@@ -488,6 +613,8 @@ def sweep_job(
     jobs: Sequence[JobSchedule],
     keys: jax.Array,
     horizon: int = 2048,
+    *,
+    mesh=None,
 ) -> Dict[str, np.ndarray]:
     """Host convenience over `sweep_job_steps`: M jobs x P policies x D
     draws under one scenario, one compile.  Returns
@@ -495,13 +622,22 @@ def sweep_job(
     "exposed": [P, D, M]}``; with `spec.telemetry` set, a "telemetry" key
     holds the `TelemetryFrame` whose leaves carry leading [P, D, M, S]
     sweep axes (peel with `telemetry.frame_select`).
+
+    With `mesh` (a `sender.flow_mesh`) the raw sweep runs flow-sharded via
+    `shard_sweep_job_steps` — bit-identical outputs, so every derived
+    metric is too; telemetry capture is unsupported sharded.
     """
     if any(topo.flows != j.workers for j in jobs):
         raise ValueError("every job's workers must equal the topology's flows")
     scheds, shard = job_step_inputs(jobs, sched, horizon)
-    out = sweep_job_steps(
-        topo, scheds, spec, sp, shard, keys, horizon
-    )
+    if mesh is not None:
+        out = shard_sweep_job_steps(
+            topo, scheds, spec, sp, shard, keys, horizon, mesh=mesh
+        )
+    else:
+        out = sweep_job_steps(
+            topo, scheds, spec, sp, shard, keys, horizon
+        )
     frame = None
     if spec.telemetry is not None:
         cct, finished, frame = out

@@ -49,8 +49,10 @@ from repro.net.cluster import Cluster, cluster_topology, place_jobs
 from repro.net.jobs import JobSchedule
 from repro.net.topology import (
     EventSchedule,
+    FatTreeGrid,
     TopologyParams,
     downlink_id,
+    fat_tree,
     leaf_spine,
     null_schedule,
     uplink_id,
@@ -68,6 +70,8 @@ __all__ = [
     "PAIR_SCENARIO_NAMES",
     "stack_pytrees",
     "stack_scenarios",
+    "fat_tree_scenarios",
+    "FAT_TREE_SCENARIO_NAMES",
     "job_scenarios",
     "JOB_SCENARIO_NAMES",
     "cluster_scenarios",
@@ -451,6 +455,121 @@ def stack_scenarios(scens: Sequence[Scenario]) -> Scenario:
         stack_pytrees(topos),
         stack_pytrees([extend(s) for s in scheds]),
     )
+
+
+# --- fat-tree scenarios: inter-pod contention on the 3-tier fabric --------
+
+FAT_TREE_SCENARIO_NAMES = (
+    "inter_pod_uniform",
+    "inter_pod_incast",
+    "pod_oversubscription",
+    "core_link_flap",
+)
+
+
+def _core_flap_caps(
+    grid: FatTreeGrid, horizon: int, period: int, duty: float, plane: int,
+) -> np.ndarray:
+    """Capacity scales for one CORE PLANE flapping on a duty cycle: all
+    spine->core and core->spine links of plane `plane` (spine `plane` of
+    every pod and its cores) go dark for `duty` of every `period` ticks —
+    the 3-tier mole: an entire slice of inter-pod path diversity dies and
+    returns, while intra-pod (bypass) paths never notice."""
+    cap = np.ones((horizon, grid.links), np.float32)
+    down = (np.arange(horizon) % period) < duty * period
+    for pod in range(grid.n_pods):
+        for j in range(grid.cores_per_spine):
+            cap[down, grid.up_spine_core(pod, plane, j)] = 0.0
+            cap[down, grid.down_core_spine(plane, j, pod)] = 0.0
+    return cap
+
+
+def fat_tree_scenarios(
+    flows: int = 16,
+    n_pods: int = 4,
+    leaves_per_pod: int = 2,
+    spines_per_pod: int = 2,
+    cores_per_spine: int = 2,
+    *,
+    horizon: int = 2048,
+    link_capacity: float = 8.0,
+    host_rate: float = 32.0,
+    oversub_ratio: float = 2.0,
+    flap_period: int = 64,
+    flap_duty: float = 0.5,
+    flap_plane: int = 0,
+    **kw,
+) -> Dict[str, Scenario]:
+    """The inter-pod contention library on ONE 3-tier fat-tree grid.
+
+    Every entry shares the grid (`n_pods` x `leaves_per_pod` leaves,
+    `spines_per_pod` spine planes, `cores_per_spine` cores per plane) and
+    flow count, so the family stacks (`stack_scenarios`) and sweeps as one
+    compiled program, exactly like `pair_scenarios` — but the contention
+    now lives where the paper's path diversity is largest: n =
+    spines_per_pod * cores_per_spine distinct 4-hop paths per inter-pod
+    flow.
+
+      * inter_pod_uniform   — flow f: leaf f -> same leaf position one pod
+                              over; balanced all-pods-talk baseline.
+      * inter_pod_incast    — every flow targets leaf 0 from a DIFFERENT
+                              pod: the destination pod's core->spine
+                              downlinks and its spine->leaf 0 downlinks are
+                              the shared choke (the 3-tier many-to-one).
+      * pod_oversubscription— uniform placement, but the core layer carries
+                              only 1/`oversub_ratio` of the aggregate host
+                              demand (`core_capacity` scaled down): the
+                              classic pod uplink taper.
+      * core_link_flap      — core plane `flap_plane` (spine `flap_plane`
+                              of every pod + its cores) flaps on a duty
+                              cycle: a whole slice of inter-pod diversity
+                              dies and returns while intra-pod paths ride
+                              the bypass untouched.
+    """
+    grid = FatTreeGrid(n_pods, leaves_per_pod, spines_per_pod, cores_per_spine)
+    n_leaves = grid.n_leaves
+    if n_pods < 2:
+        raise ValueError("inter-pod scenarios need >= 2 pods")
+
+    def tree(pairs, **caps):
+        return fat_tree(
+            n_pods, leaves_per_pod, spines_per_pod, cores_per_spine, pairs,
+            uplink_capacity=link_capacity, **caps, **kw,
+        )
+
+    # uniform: src leaf f (mod grid), dst the same leaf position one pod over
+    uniform = [
+        (f % n_leaves, (f + leaves_per_pod) % n_leaves) for f in range(flows)
+    ]
+    # incast: sources cycle over the NON-destination pods' leaves
+    others = [lf for lf in range(n_leaves) if lf >= leaves_per_pod]
+    fan_in = [(others[f % len(others)], 0) for f in range(flows)]
+
+    topo_u = tree(uniform)
+    L = topo_u.links
+    out: Dict[str, Scenario] = {
+        "inter_pod_uniform": (topo_u, null_schedule(L)),
+        "inter_pod_incast": (tree(fan_in), null_schedule(L)),
+        "pod_oversubscription": (
+            tree(
+                uniform,
+                core_capacity=host_rate
+                / (oversub_ratio * spines_per_pod * cores_per_spine),
+            ),
+            null_schedule(L),
+        ),
+        "core_link_flap": (
+            topo_u,
+            _schedule(
+                _core_flap_caps(
+                    grid, horizon, flap_period, flap_duty, flap_plane
+                ),
+                np.zeros((horizon, L), np.float32),
+            ),
+        ),
+    }
+    assert tuple(out) == FAT_TREE_SCENARIO_NAMES
+    return out
 
 
 # --- job scenarios: the same contention patterns on a RING placement ------

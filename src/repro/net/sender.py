@@ -72,6 +72,7 @@ from typing import Callable, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.feedback import (
     ControllerState,
@@ -111,6 +112,11 @@ __all__ = [
     "sweep_message",
     "sweep_flows",
     "sweep_flows_scenarios",
+    "FLOW_AXIS",
+    "flow_mesh",
+    "shard_run_flows",
+    "shard_sweep_flows",
+    "shard_sweep_flows_scenarios",
 ]
 
 
@@ -415,6 +421,7 @@ def run_sender(
     k_loop: jax.Array,
     link_fn: Callable | None = None,
     tel_link_fn: Callable | None = None,
+    settle_reduce: Callable | None = None,
 ) -> SimResult:
     """THE sender tick core, generic over a leading flow axis `lead`.
 
@@ -439,6 +446,13 @@ def run_sender(
       * tel_link_fn — telemetry reader of per-link (queue, served, dropped,
         ecn) out of the fabric state (None: no link concept, the telemetry
         frame's link channels stay zero-width).
+      * settle_reduce — applied to `_settled`'s local predicate before the
+        early-exit while_loop tests it.  The flow-sharded engine passes a
+        `lax.psum`-based all-shards reduction here so every device agrees on
+        the trip count (a per-device predicate would desynchronize the
+        all_gather collectives inside the loop body) — and because the
+        global stop condition is simply the AND of the local ones, the
+        sharded run executes exactly the chunk count of the unsharded run.
 
     With `spec.telemetry` set, a `TelemetryFrame` rides the scan carry and
     the return value is ``(SimResult, frame)``; capture happens after each
@@ -533,12 +547,15 @@ def run_sender(
         jnp.zeros(lead + (n,), jnp.float32),
         (zeros, zeros),
     )
+    if settle_reduce is None:
+        settled_fn = lambda c: _settled(spec, c)  # noqa: E731
+    else:
+        settled_fn = lambda c: settle_reduce(_settled(spec, c))  # noqa: E731
     tspec = spec.telemetry
     if tspec is None:
         if spec.early_exit:
             carry = _scan_early_exit(
-                spec, sender_tick, carry0, tkeys, horizon,
-                lambda c: _settled(spec, c),
+                spec, sender_tick, carry0, tkeys, horizon, settled_fn
             )
         else:
             carry, _ = jax.lax.scan(sender_tick, carry0, tkeys)
@@ -582,7 +599,7 @@ def run_sender(
         if spec.early_exit:
             carry, frame = _scan_early_exit(
                 spec, tel_tick, (carry0, tel0), tkeys, horizon,
-                lambda wc: _settled(spec, wc[0]),
+                lambda wc: settled_fn(wc[0]),
             )
         else:
             (carry, frame), _ = jax.lax.scan(tel_tick, (carry0, tel0), tkeys)
@@ -873,3 +890,311 @@ def _sweep_flows_traced(
             lambda k: _run_flows(topo, sched, spec, s, n_packets, k, horizon)
         )(keys)
     )(sp)
+
+
+# --------------------------------------------------------------------------
+# Flow-sharded execution: shard_map over multiple host devices.
+#
+# The flow axis is split into contiguous blocks, one per device; every
+# INPUT is replicated (the topology, schedule, params and keys are small —
+# the win is splitting the per-flow scan work F/N ways, not the memory).
+# Bit-identity with the unsharded engine is BY CONSTRUCTION:
+#
+#   * every per-flow PRNG stream (the per-tick `split(ka, F)` fan-out, the
+#     ECMP hash draw, the fidx-derived spray seeds) is derived at the REAL
+#     flow count F and then padded/sliced — threefry key streams are NOT
+#     split-count-prefix-stable (`split(k, F_pad)[:F] != split(k, F)`), so
+#     deriving at the padded count would silently change every flow's
+#     randomness;
+#   * the two per-link segment-sums inside `shared_fabric_tick` all_gather
+#     the flow axis first (`axis_name=`/`route_global=`), reproducing the
+#     unsharded scatter-add in the exact same float order — so the global
+#     drop/serve fractions, and through them every local per-flow value,
+#     match the unsharded run bit for bit;
+#   * padding flows (F not divisible by the device count) carry n_packets
+#     0: `completion_need` goes non-positive, they complete at tick 0, emit
+#     nothing, and contribute exact +0.0 to every link sum;
+#   * the early-exit stop predicate is psum-reduced across shards
+#     (`settle_reduce`), so every device runs the unsharded chunk count.
+#
+# `telemetry` is not supported on this path (frames would need their own
+# gather plumbing); the unsharded engine remains the observability path.
+# --------------------------------------------------------------------------
+
+FLOW_AXIS = "flows"
+
+
+def flow_mesh(n_devices: int | None = None):
+    """A 1-D device mesh over the `FLOW_AXIS` used by the shard_* engines.
+
+    Defaults to every visible device.  Multiple host CPU devices come from
+    `XLA_FLAGS=--xla_force_host_platform_device_count=N`, which must be in
+    the environment BEFORE jax initializes — see `benchmarks/run.py
+    --devices` and `benchmarks.common.ensure_host_devices`.
+    """
+    devs = jax.devices()
+    if n_devices is not None:
+        if n_devices > len(devs):
+            raise ValueError(
+                f"flow_mesh: {n_devices} devices requested but only "
+                f"{len(devs)} visible — set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={n_devices} "
+                "before jax initializes (benchmarks/run.py --devices)"
+            )
+        devs = devs[:n_devices]
+    return jax.sharding.Mesh(np.asarray(devs), (FLOW_AXIS,))
+
+
+def _pad_flow_axis(x: jax.Array, F_pad: int, axis: int, fill=None):
+    """Pad `axis` (the flow axis) of `x` up to F_pad — edge-repeat by
+    default (valid link ids / keys / paths), constant `fill` on request."""
+    pad = F_pad - x.shape[axis]
+    if pad == 0:
+        return x
+    width = [(0, 0)] * x.ndim
+    width[axis] = (0, pad)
+    if fill is None:
+        return jnp.pad(x, width, mode="edge")
+    return jnp.pad(x, width, constant_values=fill)
+
+
+def _pad_topology(topo: TopologyParams, F_pad: int) -> TopologyParams:
+    """Pad the per-flow leaves (route [..., F, n], latency [..., F, n]) up
+    to F_pad flows.  Edge-repeat keeps the padded routes valid link ids;
+    padded flows never emit, so their +0.0 link contributions are exact."""
+    return dataclasses.replace(
+        topo,
+        route=_pad_flow_axis(topo.route, F_pad, topo.route.ndim - 2),
+        latency=_pad_flow_axis(topo.latency, F_pad, topo.latency.ndim - 2),
+    )
+
+
+def _local_flow_run(spec: SenderSpec, horizon: int, F: int, n_shards: int):
+    """Build the per-shard sender body (the `_run_flows` of one flow block).
+
+    The returned ``run(topo_g, sched, sp, npk_g, key)`` expects fully
+    REPLICATED, flow-padded global inputs and computes the SimResult of its
+    own contiguous flow block (`lax.axis_index(FLOW_AXIS)`), coupling with
+    the other shards only through the all_gathered link sums and the
+    psum-reduced settle predicate.  It runs identically under
+    `shard_map(..., mesh=flow_mesh(N))` and under the device-free test
+    emulation ``jax.vmap(run, in_axes=None, axis_name=FLOW_AXIS,
+    axis_size=N)`` — vmap implements the same collectives, which is what
+    lets tier-1 pin sharded-vs-unsharded bit-identity on a 1-device host.
+    """
+    if spec.telemetry is not None:
+        raise NotImplementedError(
+            "telemetry capture is not supported on the flow-sharded path; "
+            "use the unsharded engine for observability runs"
+        )
+
+    def run(topo_g, sched, sp, npk_g, key):
+        F_pad = topo_g.route.shape[1]
+        F_loc = F_pad // n_shards
+        n = topo_g.n
+        lo = jax.lax.axis_index(FLOW_AXIS) * F_loc
+
+        def local(x, axis=0):
+            return jax.lax.dynamic_slice_in_dim(x, lo, F_loc, axis=axis)
+
+        topo_l = dataclasses.replace(
+            topo_g,
+            route=local(topo_g.route, 1),
+            latency=local(topo_g.latency, 0),
+        )
+        npk_l = local(npk_g)
+        mask = jnp.uint32((1 << spec.ell) - 1)
+        fidx = local(jnp.arange(F_pad, dtype=jnp.uint32))
+        ctrl0 = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (F_loc,) + x.shape),
+            make_controller(uniform_profile(n, spec.ell)),
+        )
+        spray0 = SprayState(
+            j=jnp.zeros((F_loc,), jnp.uint32),
+            sa=(sp.sa + fidx * jnp.uint32(0x9E3779B9)) & mask,
+            sb=((sp.sb + 2 * fidx) & mask) | jnp.uint32(1),
+            path_seq=jnp.zeros((F_loc, n), jnp.int32),
+            ell=spec.ell,
+            method=int(spec.method),
+        )
+        k_hash, k_loop = jax.random.split(key)
+        ecmp_path = local(_pad_flow_axis(
+            jax.random.randint(k_hash, (F,), 0, n, jnp.int32), F_pad, 0
+        ))
+
+        vassign = jax.vmap(
+            functools.partial(assign_paths, spec.rate_cap, n, sp.policy)
+        )
+
+        def assign_fn(spray, profile, k_emit, ka, ecmp):
+            # split at the REAL flow count (see the module-section comment),
+            # pad, then take this shard's block
+            kf = _pad_flow_axis(jax.random.split(ka, F), F_pad, 0)
+            return vassign(spray, profile, k_emit, local(kf), ecmp)
+
+        def ctrl_update(c, stats):
+            def one(ci, si):
+                c2, _ = controller_step(ci, si)
+                return c2
+
+            return jax.vmap(one)(c, stats)
+
+        def stepper(state, arrivals, kb):
+            return shared_fabric_tick(
+                topo_l, sched, state, arrivals, kb,
+                axis_name=FLOW_AXIS, route_global=topo_g.route,
+            )
+
+        def settle_reduce(p):
+            return jax.lax.psum(p.astype(jnp.int32), FLOW_AXIS) == n_shards
+
+        return run_sender(
+            spec, sp, npk_l, horizon,
+            lead=(F_loc,), n=n,
+            fabric0=init_shared_fabric(topo_l),
+            stepper=stepper,
+            latency_f=topo_l.latency.astype(jnp.float32),
+            spray0=spray0, ctrl0=ctrl0, ecmp_path=ecmp_path,
+            assign_fn=assign_fn, ctrl_update=ctrl_update,
+            received_fn=lambda s: s.received, dropped_fn=lambda s: s.dropped,
+            k_loop=k_loop, link_fn=lambda s: (s.link_served, s.link_busy),
+            settle_reduce=settle_reduce,
+        )
+
+    return run
+
+
+def _flow_out_specs(n_lead: int) -> SimResult:
+    """SimResult of PartitionSpecs: flow-axis fields sharded at position
+    `n_lead` (after the sweep axes), link counters replicated (every shard
+    computes the identical global values from the gathered sums)."""
+    P = jax.sharding.PartitionSpec
+    f = P(*([None] * n_lead + [FLOW_AXIS]))
+    r = P()
+    return SimResult(
+        cct=f, sent_total=f, dropped_total=f, final_b=f,
+        received=f, finished=f, link_served=r, link_busy=r,
+    )
+
+
+def _strip_flow_pad(r: SimResult, F: int, axis: int) -> SimResult:
+    def cut(x):
+        return jax.lax.slice_in_dim(x, 0, F, axis=axis)
+
+    return SimResult(
+        cct=cut(r.cct), sent_total=cut(r.sent_total),
+        dropped_total=cut(r.dropped_total), final_b=cut(r.final_b),
+        received=cut(r.received), finished=cut(r.finished),
+        link_served=r.link_served, link_busy=r.link_busy,
+    )
+
+
+def _shard_call(topo, sched, spec, sp, n_packets, key_or_keys, horizon,
+                mesh, inner, n_lead: int) -> SimResult:
+    """Common shard_map plumbing: pad the flow axis to a device multiple,
+    run `inner(local_run, topo_g, sched, sp, npk_g, keys)` — which wraps the
+    per-shard body in the wrapper's sweep vmaps — under a fully-replicated
+    shard_map, then slice the padding back off."""
+    from jax.experimental.shard_map import shard_map
+
+    n_shards = int(mesh.shape[FLOW_AXIS])
+    F = int(topo.route.shape[-2])
+    F_pad = -(-F // n_shards) * n_shards
+    topo_g = _pad_topology(topo, F_pad)
+    npk_g = _pad_flow_axis(
+        jnp.broadcast_to(jnp.asarray(n_packets), (F,)), F_pad, 0, fill=0
+    )
+    local_run = _local_flow_run(spec, horizon, F, n_shards)
+    P = jax.sharding.PartitionSpec
+    body = shard_map(
+        functools.partial(inner, local_run),
+        mesh=mesh,
+        in_specs=(P(), P(), P(), P(), P()),
+        out_specs=_flow_out_specs(n_lead),
+        check_rep=False,
+    )
+    return _strip_flow_pad(
+        body(topo_g, sched, sp, npk_g, key_or_keys), F, n_lead
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "horizon", "mesh"))
+def shard_run_flows(
+    topo: TopologyParams,
+    sched: EventSchedule,
+    spec: SenderSpec,
+    sp: SenderParams,
+    n_packets,
+    key: jax.Array,
+    horizon: int = 4096,
+    *,
+    mesh,
+) -> SimResult:
+    """`run_flows` sharded over the flow axis on `mesh` (see `flow_mesh`).
+
+    Bit-identical to the unsharded `run_flows` / `run_flows_sized` for any
+    flow count (non-divisible counts are padded with silent flows and
+    sliced back off).  `n_packets` may be a scalar or a per-flow [F] vector.
+    """
+    def inner(local_run, topo_g, sched_g, sp_g, npk_g, k):
+        return local_run(topo_g, sched_g, sp_g, npk_g, k)
+
+    return _shard_call(
+        topo, sched, spec, sp, n_packets, key, horizon, mesh, inner, 0
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "horizon", "mesh"))
+def shard_sweep_flows(
+    topo: TopologyParams,
+    sched: EventSchedule,
+    spec: SenderSpec,
+    sp: SenderParams,
+    n_packets,
+    keys: jax.Array,
+    horizon: int = 4096,
+    *,
+    mesh,
+) -> SimResult:
+    """`sweep_flows` sharded over the flow axis: `cct[P, D, F]`, the sweep
+    axes riding vmaps INSIDE the shard body (shards stay in lockstep; the
+    collectives commute with vmap)."""
+    def inner(local_run, topo_g, sched_g, sp_g, npk_g, ks):
+        return jax.vmap(
+            lambda s: jax.vmap(
+                lambda k: local_run(topo_g, sched_g, s, npk_g, k)
+            )(ks)
+        )(sp_g)
+
+    return _shard_call(
+        topo, sched, spec, sp, n_packets, keys, horizon, mesh, inner, 2
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "horizon", "mesh"))
+def shard_sweep_flows_scenarios(
+    topos: TopologyParams,
+    scheds: EventSchedule,
+    spec: SenderSpec,
+    sp: SenderParams,
+    n_packets,
+    keys: jax.Array,
+    horizon: int = 4096,
+    *,
+    mesh,
+) -> SimResult:
+    """`sweep_flows_scenarios` sharded over the flow axis: ONE compiled
+    program for scenarios x policies x draws x flows/devices —
+    `cct[C, P, D, F]`, bit-identical to the unsharded family sweep."""
+    def inner(local_run, topos_g, scheds_g, sp_g, npk_g, ks):
+        return jax.vmap(
+            lambda tp, sc: jax.vmap(
+                lambda s: jax.vmap(
+                    lambda k: local_run(tp, sc, s, npk_g, k)
+                )(ks)
+            )(sp_g)
+        )(topos_g, scheds_g)
+
+    return _shard_call(
+        topos, scheds, spec, sp, n_packets, keys, horizon, mesh, inner, 3
+    )

@@ -48,6 +48,8 @@ __all__ = [
     "EventSchedule",
     "SharedFabricState",
     "leaf_spine",
+    "FatTreeGrid",
+    "fat_tree",
     "null_schedule",
     "init_shared_fabric",
     "scatter_delivery",
@@ -182,6 +184,212 @@ def leaf_spine(
     )
 
 
+@dataclasses.dataclass(frozen=True)
+class FatTreeGrid:
+    """Host-side descriptor of a 3-tier fat-tree / multi-pod Clos fabric.
+
+    Pods of `leaves_per_pod` leaves x `spines_per_pod` spines, joined by a
+    core layer organized as `spines_per_pod` PLANES of `cores_per_spine`
+    switches: spine s of EVERY pod connects to all cores of plane s (the
+    k-ary fat-tree wiring, where picking a core fixes the destination
+    pod's spine).  An inter-pod flow therefore has n = spines_per_pod *
+    cores_per_spine distinct 4-hop paths — path (s, j) climbs
+    leaf -> spine s -> core (s, j), then descends core -> spine s of the
+    destination pod -> leaf.  Intra-pod flows turn around at the pod spine:
+    their middle two hops ride the BYPASS link (an infinite-capacity
+    virtual wire, id `links - 1`) so every path in the fabric has the same
+    hop count and one [hop, flow, path] routing matrix covers both.
+
+    Link id layout (four physical tiers then the bypass):
+      [0, P*Lp*S)                              leaf->spine uplinks
+      [P*Lp*S, P*Lp*S + P*S*C)                 spine->core uplinks
+      [P*Lp*S + P*S*C, P*Lp*S + 2*P*S*C)      core->spine downlinks
+      [.., .. + P*S*Lp)                        spine->leaf downlinks
+      links - 1                                bypass (virtual)
+    """
+
+    n_pods: int
+    leaves_per_pod: int
+    spines_per_pod: int
+    cores_per_spine: int
+
+    def __post_init__(self):
+        if min(self.n_pods, self.leaves_per_pod, self.spines_per_pod,
+               self.cores_per_spine) < 1:
+            raise ValueError("every fat-tree dimension must be >= 1")
+
+    @property
+    def n_leaves(self) -> int:
+        return self.n_pods * self.leaves_per_pod
+
+    @property
+    def n_paths(self) -> int:
+        return self.spines_per_pod * self.cores_per_spine
+
+    @property
+    def links(self) -> int:
+        P, Lp = self.n_pods, self.leaves_per_pod
+        S, C = self.spines_per_pod, self.cores_per_spine
+        return 2 * P * Lp * S + 2 * P * S * C + 1
+
+    @property
+    def bypass(self) -> int:
+        return self.links - 1
+
+    # --- link id helpers (vectorized over numpy int arrays) ---
+
+    def up_leaf_spine(self, pod, leaf, spine):
+        return (pod * self.leaves_per_pod + leaf) * self.spines_per_pod + spine
+
+    def up_spine_core(self, pod, spine, core):
+        base = self.n_pods * self.leaves_per_pod * self.spines_per_pod
+        return base + (
+            (pod * self.spines_per_pod + spine) * self.cores_per_spine + core
+        )
+
+    def down_core_spine(self, spine, core, pod):
+        P, Lp = self.n_pods, self.leaves_per_pod
+        S, C = self.spines_per_pod, self.cores_per_spine
+        base = P * Lp * S + P * S * C
+        return base + (spine * C + core) * P + pod
+
+    def down_spine_leaf(self, pod, spine, leaf):
+        P, Lp = self.n_pods, self.leaves_per_pod
+        S, C = self.spines_per_pod, self.cores_per_spine
+        base = P * Lp * S + 2 * P * S * C
+        return base + (pod * S + spine) * Lp + leaf
+
+    def pod_of(self, leaf_global):
+        return leaf_global // self.leaves_per_pod
+
+    def tier_slices(self):
+        """(name -> slice) over the link axis, one entry per physical tier
+        plus the bypass — the conservation tests sum these."""
+        P, Lp = self.n_pods, self.leaves_per_pod
+        S, C = self.spines_per_pod, self.cores_per_spine
+        a, b, c, d = P * Lp * S, P * S * C, P * S * C, P * S * Lp
+        edges = np.cumsum([0, a, b, c, d])
+        return {
+            "leaf_spine_up": slice(int(edges[0]), int(edges[1])),
+            "spine_core_up": slice(int(edges[1]), int(edges[2])),
+            "core_spine_down": slice(int(edges[2]), int(edges[3])),
+            "spine_leaf_down": slice(int(edges[3]), int(edges[4])),
+            "bypass": slice(int(edges[4]), int(edges[4]) + 1),
+        }
+
+
+# capacity/limit assigned to the virtual bypass link: effectively infinite
+# (the fluid queue then serves everything the same tick, adds no queueing
+# delay, never drops and never ECN-marks), while staying far below the
+# float32 range where capacity * horizon sums would lose integer precision.
+_BYPASS_CAPACITY = 1e9
+
+
+def fat_tree(
+    n_pods: int,
+    leaves_per_pod: int,
+    spines_per_pod: int,
+    cores_per_spine: int,
+    flow_pairs,                      # [(src_leaf_global, dst_leaf_global)]
+    *,
+    uplink_capacity: float = 8.0,
+    downlink_capacity: float | None = None,
+    core_capacity: float | None = None,
+    queue_limit: float = 48.0,
+    ecn_threshold: float = 12.0,
+    latency_ticks: int = 6,
+    intra_latency_ticks: int = 4,
+    degrade_p: float = 0.0,
+    recover_p: float = 0.05,
+    degrade_factor: float = 0.05,
+    fb_delay: int = 8,
+    ring_len: int = 128,
+) -> TopologyParams:
+    """Build a 3-tier fat-tree topology (see `FatTreeGrid` for the wiring).
+
+    Flow f between global leaves (src, dst) gets n = spines_per_pod *
+    cores_per_spine logical paths.  Inter-pod flows traverse four physical
+    links (leaf->spine, spine->core, core->spine, spine->leaf); intra-pod
+    flows (same pod, different leaf) turn around at the pod spine — their
+    middle hops ride the infinite-capacity bypass link, and path (s, j)
+    collapses to spine s for every core j (spraying over the duplicates is
+    equivalent to spraying over the pod's spines).  The result honours the
+    exact `TopologyParams` [hop, flow, path] contract, so `sender_tick`,
+    telemetry, goldens and every sweep run unchanged on top.
+
+    `core_capacity` covers both spine->core and core->spine links and
+    defaults to `uplink_capacity` (scale it down for pod-level
+    oversubscription).  Inter-pod paths get `latency_ticks` base
+    propagation, intra-pod paths `intra_latency_ticks` (two fewer physical
+    hops; the store-and-forward pipeline itself still charges every flow
+    the same `hops` ticks of forwarding).
+    """
+    grid = FatTreeGrid(n_pods, leaves_per_pod, spines_per_pod, cores_per_spine)
+    if downlink_capacity is None:
+        downlink_capacity = uplink_capacity
+    if core_capacity is None:
+        core_capacity = uplink_capacity
+    if n_pods < 2:
+        raise ValueError(
+            "fat_tree needs >= 2 pods (a 1-pod grid has a dead core tier: "
+            "use leaf_spine)"
+        )
+    pairs = np.asarray(flow_pairs, dtype=np.int32)
+    if pairs.ndim != 2 or pairs.shape[1] != 2:
+        raise ValueError("flow_pairs must be a sequence of (src, dst) leaves")
+    if np.any(pairs < 0) or np.any(pairs >= grid.n_leaves):
+        raise ValueError("flow endpoints out of leaf range")
+    if np.any(pairs[:, 0] == pairs[:, 1]):
+        raise ValueError("intra-leaf flows never reach the spine layer")
+    F, n = pairs.shape[0], grid.n_paths
+    Lp, S, C = leaves_per_pod, spines_per_pod, cores_per_spine
+
+    src_pod, src_leaf = pairs[:, 0] // Lp, pairs[:, 0] % Lp
+    dst_pod, dst_leaf = pairs[:, 1] // Lp, pairs[:, 1] % Lp
+    # path q = s * cores_per_spine + j: spine plane s, core j within it
+    s = np.repeat(np.arange(S, dtype=np.int32), C)[None, :]      # [1, n]
+    j = np.tile(np.arange(C, dtype=np.int32), S)[None, :]        # [1, n]
+    inter = (src_pod != dst_pod)[:, None]                        # [F, 1]
+    hop0 = grid.up_leaf_spine(src_pod[:, None], src_leaf[:, None], s)
+    hop1 = np.where(inter, grid.up_spine_core(src_pod[:, None], s, j),
+                    grid.bypass)
+    hop2 = np.where(inter, grid.down_core_spine(s, j, dst_pod[:, None]),
+                    grid.bypass)
+    hop3 = grid.down_spine_leaf(dst_pod[:, None], s, dst_leaf[:, None])
+    route = np.stack([hop0, hop1, hop2, hop3]).astype(np.int32)  # [4, F, n]
+
+    tiers = grid.tier_slices()
+    L = grid.links
+    cap = np.empty((L,), np.float32)
+    cap[tiers["leaf_spine_up"]] = uplink_capacity
+    cap[tiers["spine_core_up"]] = core_capacity
+    cap[tiers["core_spine_down"]] = core_capacity
+    cap[tiers["spine_leaf_down"]] = downlink_capacity
+    cap[grid.bypass] = _BYPASS_CAPACITY
+    qlim = np.full((L,), queue_limit, np.float32)
+    ecn = np.full((L,), ecn_threshold, np.float32)
+    qlim[grid.bypass] = ecn[grid.bypass] = _BYPASS_CAPACITY
+    # the virtual bypass never degrades, whatever the physical-link rates
+    deg_p = np.full((L,), degrade_p, np.float32)
+    deg_p[grid.bypass] = 0.0
+    latency = np.where(
+        inter, np.int32(latency_ticks), np.int32(intra_latency_ticks)
+    ) * np.ones((F, n), np.int32)
+
+    return TopologyParams(
+        route=jnp.asarray(route),
+        capacity=jnp.asarray(cap),
+        queue_limit=jnp.asarray(qlim),
+        ecn_threshold=jnp.asarray(ecn),
+        latency=jnp.asarray(latency),
+        degrade_p=jnp.asarray(deg_p),
+        recover_p=jnp.full((L,), recover_p, jnp.float32),
+        degrade_factor=jnp.full((L,), degrade_factor, jnp.float32),
+        fb_delay=fb_delay,
+        ring_len=ring_len,
+    )
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class SharedFabricState:
@@ -268,13 +476,36 @@ def shared_fabric_tick(
     state: SharedFabricState,
     arrivals: jax.Array,  # float32[F, n] packets injected by each source
     key: jax.Array,
+    *,
+    axis_name: str | None = None,
+    route_global: jax.Array | None = None,
 ) -> Tuple[SharedFabricState, dict]:
     """Advance one tick.  Feedback entries are per flow ([F, n] / landed [F]),
     echoing what each source saw `fb_delay` ticks ago — the `fabric_tick`
-    contract, now with cross-flow coupling through the shared link queues."""
+    contract, now with cross-flow coupling through the shared link queues.
+
+    With `axis_name` set, the tick runs inside a `shard_map`/`vmap` body that
+    holds a contiguous slice of the flow axis: `topo.route` is the local
+    [H, F_local, n] slice, `route_global` the full [H, F_global, n] matrix,
+    and the two per-link segment-sums all_gather the flow axis first so
+    every device computes the SAME global backlog/incoming — and hence the
+    same drop/serve fractions and link counters — in the exact float order
+    of the unsharded path (tiled gather concatenates shards in axis order,
+    matching the unsharded flow layout).  Everything else is local-flow
+    indexing, so per-shard results are bit-identical to the unsharded tick.
+    """
     L = topo.links
     route = topo.route
     t = state.t
+    if axis_name is None:
+        flow_sum = lambda v: _link_sum(v, route, L)  # noqa: E731
+    else:
+        if route_global is None:
+            raise ValueError("axis_name requires route_global")
+        flow_sum = lambda v: _link_sum(  # noqa: E731
+            jax.lax.all_gather(v, axis_name, axis=1, tiled=True),
+            route_global, L,
+        )
 
     # --- link environment: Markov moles x scheduled capacity scaling ---
     u = jax.random.uniform(key, (L,))
@@ -295,8 +526,8 @@ def shared_fabric_tick(
     bg_q = state.bg_queue + bg_in          # [L]
 
     # --- shared tail-drop: charge incoming traffic proportionally ---
-    backlog = _link_sum(q_in, route, L) + bg_q          # [L]
-    incoming = _link_sum(inflow, route, L) + bg_in      # [L]
+    backlog = flow_sum(q_in) + bg_q                     # [L]
+    incoming = flow_sum(inflow) + bg_in                 # [L]
     dropable = jnp.minimum(
         jnp.maximum(backlog - topo.queue_limit, 0.0), incoming
     )

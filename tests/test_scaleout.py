@@ -1,0 +1,346 @@
+"""Scale-out layer: 3-tier fat-tree structure + flow-sharded bit-identity.
+
+Covers the fat-tree routing-matrix contract (tier slices partition the
+link axis, hops land in their tiers, intra-pod flows ride the bypass),
+packet conservation ACROSS tiers through the unchanged engine (ample
+capacity: every delivered inter-pod packet crosses all four physical
+tiers exactly once), pod-aligned placement, and the flow-sharded engine's
+headline promise: bit-identical results to the unsharded sweeps.
+
+Bit-identity is pinned two ways so it holds on any host:
+  * vmap-emulated collectives (``jax.vmap(..., axis_name=FLOW_AXIS)``
+    implements axis_index/psum/pmax/all_gather) — runs on ONE device,
+    including the non-divisible flow-count padding path;
+  * real ``shard_map`` over a 1-device mesh always, and over 2 devices
+    when visible (CI's 2-device job sets
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=2``).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.net.cluster import (
+    cluster_fat_tree_topology,
+    place_jobs_pods,
+    sweep_cluster,
+)
+from repro.net.jobs import compile_job, sweep_job
+from repro.net.scenarios import (
+    FAT_TREE_SCENARIO_NAMES,
+    fat_tree_scenarios,
+    job_scenarios,
+    pair_scenarios,
+    stack_scenarios,
+)
+from repro.net.sender import (
+    FLOW_AXIS,
+    SenderSpec,
+    flow_mesh,
+    policy_sweep_params,
+    run_flows,
+    run_flows_sized,
+    sender_params,
+    shard_run_flows,
+    shard_sweep_flows_scenarios,
+    sweep_flows_scenarios,
+)
+from repro.net.topology import FatTreeGrid, fat_tree, leaf_spine, null_schedule
+from repro.net.transport import Policy
+
+RATE = 16
+SPEC = SenderSpec(rate_cap=RATE, early_exit=True)
+
+needs_2dev = pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs >=2 host devices "
+    "(XLA_FLAGS=--xla_force_host_platform_device_count=2)",
+)
+
+
+def grid():
+    return FatTreeGrid(
+        n_pods=3, leaves_per_pod=2, spines_per_pod=2, cores_per_spine=2
+    )
+
+
+PHYS_TIERS = (
+    "leaf_spine_up", "spine_core_up", "core_spine_down", "spine_leaf_down"
+)
+
+
+# --------------------------------------------------------------------------
+# fat-tree structure
+# --------------------------------------------------------------------------
+
+def test_tier_slices_partition_link_axis():
+    g = grid()
+    sl = g.tier_slices()
+    ids = np.concatenate([np.arange(s.start, s.stop) for s in sl.values()])
+    assert sorted(ids.tolist()) == list(range(g.links))
+    assert sl["bypass"] == slice(g.links - 1, g.links)
+    assert g.bypass == g.links - 1
+    assert g.n_paths == g.spines_per_pod * g.cores_per_spine
+
+
+def test_route_hops_land_in_their_tiers():
+    g = grid()
+    pairs = [(0, 2), (1, 5), (2, 0), (0, 1)]  # 3 inter-pod + 1 intra-pod
+    topo = fat_tree(3, 2, 2, 2, pairs)
+    route = np.asarray(topo.route)
+    assert route.shape == (4, len(pairs), g.n_paths)
+    sl = g.tier_slices()
+
+    def in_tier(x, name):
+        return ((x >= sl[name].start) & (x < sl[name].stop)).all()
+
+    assert in_tier(route[0], "leaf_spine_up")
+    assert in_tier(route[3], "spine_leaf_down")
+    inter = np.array([g.pod_of(s) != g.pod_of(d) for s, d in pairs])
+    assert in_tier(route[1][inter], "spine_core_up")
+    assert in_tier(route[2][inter], "core_spine_down")
+    # intra-pod hops 1-2 ride the infinite-capacity bypass link
+    assert (route[1][~inter] == g.bypass).all()
+    assert (route[2][~inter] == g.bypass).all()
+    assert float(np.asarray(topo.capacity)[g.bypass]) >= 1e8
+    assert float(np.asarray(topo.degrade_p)[g.bypass]) == 0.0
+    # plane discipline: path q = s*C + j enters the fabric through spine s
+    # (core plane s connects spine s of EVERY pod)
+    q = np.arange(g.n_paths)
+    for f in np.flatnonzero(inter):
+        sp_up = (route[0, f] - sl["leaf_spine_up"].start) % g.spines_per_pod
+        assert (sp_up == q // g.cores_per_spine).all()
+
+
+def test_fat_tree_validation():
+    with pytest.raises(ValueError):
+        fat_tree(3, 2, 2, 2, [(0, 0)])           # src == dst
+    with pytest.raises(ValueError):
+        fat_tree(3, 2, 2, 2, [(0, 6)])           # leaf out of range
+    with pytest.raises(ValueError):
+        fat_tree(1, 2, 2, 2, [(0, 1)])           # single pod: no core tier
+
+
+def test_conservation_across_tiers_inter_pod():
+    """Ample capacity, no faults: every delivered packet is served once on
+    each of the four physical tiers, and the bypass stays silent."""
+    g = grid()
+    pairs = [(0, 2), (2, 4), (4, 0), (1, 3)]     # all inter-pod
+    topo = fat_tree(
+        3, 2, 2, 2, pairs, uplink_capacity=64.0, queue_limit=4096.0,
+        ecn_threshold=2048.0,
+    )
+    sp = sender_params(Policy.WAM, rate=RATE)
+    r = run_flows(
+        topo, null_schedule(topo.links), SPEC, sp, 40,
+        jax.random.PRNGKey(0), horizon=512,
+    )
+    assert bool(np.asarray(r.finished).all())
+    served = np.asarray(r.link_served)
+    sl = g.tier_slices()
+    tier_sums = [float(served[sl[t]].sum()) for t in PHYS_TIERS]
+    np.testing.assert_allclose(tier_sums, tier_sums[0], rtol=1e-5)
+    assert float(served[sl["bypass"]].sum()) == 0.0
+    assert tier_sums[0] > 0
+
+
+def test_intra_pod_traffic_never_touches_core():
+    g = grid()
+    pairs = [(0, 1), (2, 3), (4, 5)]             # all intra-pod
+    topo = fat_tree(3, 2, 2, 2, pairs, uplink_capacity=64.0)
+    sp = sender_params(Policy.WAM, rate=RATE)
+    r = run_flows(
+        topo, null_schedule(topo.links), SPEC, sp, 40,
+        jax.random.PRNGKey(1), horizon=512,
+    )
+    assert bool(np.asarray(r.finished).all())
+    served = np.asarray(r.link_served)
+    sl = g.tier_slices()
+    assert float(served[sl["spine_core_up"]].sum()) == 0.0
+    assert float(served[sl["core_spine_down"]].sum()) == 0.0
+    assert float(served[sl["bypass"]].sum()) > 0
+
+
+def test_fat_tree_scenarios_registry_and_stacking():
+    scens = fat_tree_scenarios(flows=8, n_pods=2, horizon=256)
+    assert tuple(scens) == FAT_TREE_SCENARIO_NAMES
+    topos, scheds = stack_scenarios(list(scens.values()))
+    assert topos.route.shape[0] == len(FAT_TREE_SCENARIO_NAMES)
+    with pytest.raises(ValueError):
+        fat_tree_scenarios(flows=8, n_pods=1)
+
+
+# --------------------------------------------------------------------------
+# pod-aligned placement
+# --------------------------------------------------------------------------
+
+def _tiny_job(arch="xlstm-350m", workers=4):
+    return compile_job(
+        arch, workers=workers, tp=8, iterations=1, rate=RATE,
+        min_shard=16, max_shard=48,
+        overlap={"allreduce": 0.0, "allgather": 0.0},
+    )
+
+
+def test_place_jobs_pods_alignment():
+    jobs = [_tiny_job(workers=3), _tiny_job(workers=4)]
+    cl = place_jobs_pods(jobs, leaves_per_pod=2)
+    # each job's leaf block starts at a pod boundary
+    for cj in cl.jobs:
+        assert cj.leaves[0] % 2 == 0
+    # leaf blocks are disjoint and the grid rounds up to whole pods
+    all_leaves = [lf for cj in cl.jobs for lf in cj.leaves]
+    assert len(set(all_leaves)) == len(all_leaves)
+    assert cl.n_leaves % 2 == 0
+    packed = place_jobs_pods(jobs, leaves_per_pod=2, pack=True)
+    assert packed.n_leaves == 4  # max(workers) rounded up to whole pods
+
+
+def test_cluster_fat_tree_topology_shapes():
+    jobs = [_tiny_job(), _tiny_job()]
+    cl = place_jobs_pods(jobs, leaves_per_pod=2)
+    topo = cluster_fat_tree_topology(cl, leaves_per_pod=2)
+    assert topo.flows == cl.flows
+    assert topo.hops == 4
+    # inter-pod rings exist, so the core tier must be reachable
+    g = FatTreeGrid(
+        n_pods=cl.n_leaves // 2, leaves_per_pod=2,
+        spines_per_pod=2, cores_per_spine=2,
+    )
+    assert topo.links == g.links
+
+
+# --------------------------------------------------------------------------
+# flow-sharded engine: bit-identity
+# --------------------------------------------------------------------------
+
+def _pair_family(flows=4, horizon=256):
+    scens = pair_scenarios(flows, 2, horizon=horizon)
+    names = list(scens)[:2]
+    return stack_scenarios([scens[nm] for nm in names])
+
+
+def _assert_simresult_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_shard_run_flows_one_device_mesh_bitident():
+    topo = leaf_spine(4, 2, [(0, 2), (1, 3), (2, 1), (0, 3)])
+    sched = null_schedule(topo.links)
+    sp = sender_params(Policy.WAM, rate=RATE)
+    key = jax.random.PRNGKey(3)
+    ref = run_flows(topo, sched, SPEC, sp, 48, key, horizon=512)
+    got = shard_run_flows(
+        topo, sched, SPEC, sp, 48, key, 512, mesh=flow_mesh(1)
+    )
+    _assert_simresult_equal(ref, got)
+
+
+@pytest.mark.parametrize("n_shards", [2, 3])
+def test_vmap_emulated_shards_bitident_padded(n_shards):
+    """Non-divisible flow count + per-flow sizes: the padded sharded body
+    (collectives emulated by vmap) reproduces `run_flows_sized` exactly."""
+    from repro.net.sender import _local_flow_run, _pad_flow_axis, _pad_topology
+
+    topo = leaf_spine(4, 2, [(0, 2), (1, 3), (2, 1), (0, 3), (3, 0)])
+    sched = null_schedule(topo.links)
+    sp = sender_params(Policy.WAM, rate=RATE)
+    key = jax.random.PRNGKey(4)
+    F = 5
+    sizes = jnp.asarray([48, 0, 24, 64, 16], jnp.int32)
+    horizon = 512
+    ref = run_flows_sized(topo, sched, SPEC, sp, sizes, key, horizon)
+
+    F_pad = -(-F // n_shards) * n_shards
+    topo_g = _pad_topology(topo, F_pad)
+    npk_g = _pad_flow_axis(sizes, F_pad, 0, fill=0)
+    local = _local_flow_run(SPEC, horizon, F, n_shards)
+    run = jax.vmap(
+        local, in_axes=(None,) * 5, out_axes=0,
+        axis_name=FLOW_AXIS, axis_size=n_shards,
+    )
+    r = run(topo_g, sched, sp, npk_g, key)
+
+    def stitch(name, x):
+        x = np.asarray(x)
+        if name in ("link_served", "link_busy"):
+            # replicated across shards
+            for s in range(1, n_shards):
+                np.testing.assert_array_equal(x[0], x[s])
+            return x[0]
+        return x.reshape((F_pad,) + x.shape[2:])[:F]
+
+    for field in dataclasses.fields(ref):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(ref, field.name)),
+            stitch(field.name, getattr(r, field.name)),
+            err_msg=field.name,
+        )
+
+
+@needs_2dev
+def test_shard_sweep_flows_scenarios_2dev_bitident():
+    topos, scheds = _pair_family()
+    sp = policy_sweep_params((Policy.ECMP, Policy.WAM), rate=RATE)
+    keys = jax.random.split(jax.random.PRNGKey(5), 2)
+    ref = sweep_flows_scenarios(topos, scheds, SPEC, sp, 32, keys, 256)
+    got = shard_sweep_flows_scenarios(
+        topos, scheds, SPEC, sp, 32, keys, 256, mesh=flow_mesh(2)
+    )
+    _assert_simresult_equal(ref, got)
+
+
+@needs_2dev
+def test_shard_fat_tree_family_2dev_bitident():
+    """The headline path at test scale: the 3-tier family through the
+    sharded engine on 2 devices, flow count NOT divisible by the mesh."""
+    scens = fat_tree_scenarios(flows=7, n_pods=2, horizon=512)
+    topos, scheds = stack_scenarios(list(scens.values()))
+    sp = policy_sweep_params((Policy.ECMP, Policy.WAM), rate=RATE)
+    keys = jax.random.split(jax.random.PRNGKey(6), 1)
+    ref = sweep_flows_scenarios(topos, scheds, SPEC, sp, 16, keys, 512)
+    got = shard_sweep_flows_scenarios(
+        topos, scheds, SPEC, sp, 16, keys, 512, mesh=flow_mesh(2)
+    )
+    _assert_simresult_equal(ref, got)
+
+
+@needs_2dev
+def test_sweep_job_mesh_bitident():
+    job = _tiny_job()
+    scens = job_scenarios(workers=4, horizon=512)
+    topo, sched = scens["link_flap"]
+    sp = policy_sweep_params((Policy.ECMP, Policy.WAM), rate=RATE)
+    keys = jax.random.split(jax.random.PRNGKey(7), 1)
+    ref = sweep_job(topo, sched, SPEC, sp, [job], keys, horizon=512)
+    got = sweep_job(
+        topo, sched, SPEC, sp, [job], keys, horizon=512, mesh=flow_mesh(2)
+    )
+    for k in ("cct", "finished", "ettr", "exposed"):
+        np.testing.assert_array_equal(ref[k], got[k], err_msg=k)
+
+
+@needs_2dev
+def test_sweep_cluster_mesh_bitident_on_fat_tree():
+    jobs = [_tiny_job(), _tiny_job()]
+    cl = place_jobs_pods(jobs, leaves_per_pod=2)
+    topo = cluster_fat_tree_topology(cl, leaves_per_pod=2)
+    # static environment: the scenario library's schedules are sized to the
+    # leaf-spine link axis, not the fat-tree's
+    sched = null_schedule(topo.links)
+    sp = policy_sweep_params((Policy.ECMP, Policy.WAM), rate=RATE)
+    keys = jax.random.split(jax.random.PRNGKey(8), 1)
+    ref = sweep_cluster(topo, sched, SPEC, sp, cl, keys, 1024)
+    got = sweep_cluster(
+        topo, sched, SPEC, sp, cl, keys, 1024, mesh=flow_mesh(2)
+    )
+    for k in ("ettr", "solo_ettr", "slowdown", "jain", "link_util"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(ref, k)), np.asarray(getattr(got, k)),
+            err_msg=k,
+        )
