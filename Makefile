@@ -22,8 +22,10 @@ bench-smoke:
 
 # the CI perf gate: every family sweep must stay ONE compiled program
 # (--max-compiles bounds the whole run: 8 family programs + 3 telemetry
-# programs + 2 scale-out scaling workers, with headroom) and every gated
-# flow must finish (check_finished fails loudly inside the benches); the
+# programs + 2 scale-out scaling workers + 5 bake-off programs — the four
+# 8-policy family sweeps and the recovery pulse — with headroom) and every
+# gated flow must finish (check_finished fails loudly inside the benches);
+# the bake-off section also writes the BAKEOFF_ranking.json artifact; the
 # telemetry pass adds meta.telemetry recovery rows + traces/ artifacts,
 # and the exported traces must survive their own reader (trace_report
 # exits non-zero on a round-trip or Perfetto-structure failure).
@@ -31,7 +33,7 @@ bench-smoke:
 # sharded-vs-unsharded digest gate runs on a real multi-device mesh.
 perf-smoke:
 	python -m benchmarks.run --smoke --devices 2 --json BENCH_smoke.json \
-	  --telemetry --trace-dir traces --max-compiles 16
+	  --telemetry --trace-dir traces --max-compiles 21
 	python tools/trace_report.py --summary traces/*.jsonl
 	python tools/trace_report.py --check-perfetto traces/*.trace.json
 

@@ -107,7 +107,12 @@ def main() -> None:
         )
         raw, run_s = timed_call(swept, topos, scheds, sp, sizes, keys)
     # gate precondition: sentinels would flatten every number below
-    check_finished("cluster family", raw["finished"])
+    check_finished(
+        "cluster family", raw["finished"],
+        axes=("scenario", "policy", "draw", "variant", "round", "flow"),
+        labels={"scenario": list(scens),
+                "policy": [p.name for p in POLICIES]},
+    )
     n_sims = np.asarray(raw["cct"]).size
     common.perf(
         "cluster_family",
@@ -199,6 +204,7 @@ def _telemetry(scens, horizon, keys, smoke) -> None:
     check_finished(
         "cluster telemetry", raw["finished"],
         axes=("policy", "draw", "round", "flow"),
+        labels={"policy": [p.name for p in tel_policies]},
     )
     frame = raw["telemetry"]  # leaves [P, D, R, ...]
     rounds = int(sizes0.shape[0])

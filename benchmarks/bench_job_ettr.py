@@ -100,7 +100,11 @@ def main() -> None:
         )
     cct = np.asarray(cct)  # [C, P, D, M, S]
     # gate precondition: a sentinel row would fake a flat tail
-    check_finished("job_ettr family", finished)
+    check_finished(
+        "job_ettr family", finished,
+        axes=("scenario", "policy", "draw", "model", "step"),
+        labels={"policy": [p.name for p in POLICIES]},
+    )
     n_sweeps = cct.size // (cct.shape[-1] * cct.shape[-2])  # C x P x D
     common.perf(
         "job_ettr_family",
@@ -187,6 +191,7 @@ def _telemetry(job, scens, horizon, keys, smoke) -> None:
     check_finished(
         "job_ettr telemetry", finished,
         axes=("scenario", "policy", "draw", "model", "step"),
+        labels={"policy": [p.name for p in tel_policies]},
     )
     steps = int(shard.shape[-1])
     # re-converged = within m/32 per path of the post-event steady profile

@@ -253,6 +253,7 @@ def main() -> None:
     check_finished(
         "scaleout family", r.finished,
         axes=("scenario", "policy", "draw", "flow"),
+        labels={"policy": [p.name for p in POLICIES]},
     )
     base_digest = _digest(r.cct)
     sims = ccts.size // F

@@ -103,7 +103,12 @@ def main() -> None:
         r, run_s = timed_call(swept, topos, scheds, sp, keys)
     ccts = np.asarray(r.cct)  # [scenarios, policies, draws, F]
     # gate precondition: p99s over sentinel rows are not measurements
-    check_finished("topo family", r.finished)
+    check_finished(
+        "topo family", r.finished,
+        axes=("scenario", "policy", "draw", "flow"),
+        labels={"scenario": list(scens),
+                "policy": [p.name for p in POLICIES]},
+    )
     common.perf(
         "topo_family",
         fabric_ticks=ccts.size // FLOWS * horizon,
@@ -204,6 +209,7 @@ def _telemetry(scens, n_packets, horizon, keys, smoke) -> None:
     check_finished(
         "topo telemetry", r.finished,
         axes=("scenario", "policy", "draw", "flow"),
+        labels={"policy": [p.name for p in tel_policies]},
     )
     # re-converged = within m/32 per path (L-inf) of the post-event steady
     # profile: the whack/restore ball, scaled to the allocation grain

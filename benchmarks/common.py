@@ -40,6 +40,7 @@ __all__ = [
     "COMPILE_STATS",
     "PERF_STATS",
     "TELEMETRY_STATS",
+    "BAKEOFF_STATS",
     "SMOKE",
     "TELEMETRY",
     "TRACE_DIR",
@@ -74,6 +75,11 @@ TRACE_DIR: str | None = None
 # recovery/queue observability rows (meta.telemetry in the bench JSON):
 # appended by `telemetry_row`
 TELEMETRY_STATS: List[Dict[str, object]] = []
+
+# policy bake-off ranking rows (meta.bakeoff in the bench JSON): one row
+# per (family, scenario, metric) appended by bench_bakeoff — schema in
+# docs/BENCHMARKS.md (`meta.bakeoff`)
+BAKEOFF_STATS: List[Dict[str, object]] = []
 
 
 def set_smoke(value: bool) -> None:
@@ -125,7 +131,12 @@ def emit(name: str, us_per_call: float, derived: str = "", **fields) -> None:
     print(f"{name},{us_per_call:.2f},{derived}")
 
 
-def check_finished(name: str, finished, axes: Tuple[str, ...] | None = None) -> None:
+def check_finished(
+    name: str,
+    finished,
+    axes: Tuple[str, ...] | None = None,
+    labels: Dict[str, List[str]] | None = None,
+) -> None:
     """Fail LOUDLY when any gated flow hit the horizon sentinel.
 
     An unfinished flow reports `cct == horizon`, which silently flattens
@@ -137,7 +148,12 @@ def check_finished(name: str, finished, axes: Tuple[str, ...] | None = None) -> 
     The error names the offending indices so a CI log alone identifies
     which scenario/policy/draw/flow stalled; pass `axes` (one name per
     array dimension, e.g. ``("scenario", "policy", "draw", "flow")``) to
-    label them, else they print positionally.
+    label them, else they print positionally.  `labels` maps an axis name
+    to the value names along it (e.g. ``{"policy": [p.name for p in
+    sweep_policies]}``) — indices on that axis then print by NAME from the
+    sweep's OWN axis order, never by assuming the historical five-policy
+    enum order (an 8-policy bake-off sweep and a baseline sweep put
+    different policies at the same index).
     """
     arr = np.asarray(finished)
     if arr.size and not arr.all():
@@ -147,12 +163,18 @@ def check_finished(name: str, finished, axes: Tuple[str, ...] | None = None) -> 
             raise ValueError(
                 f"{name}: {len(axes)} axis names for a {arr.ndim}-d mask"
             )
+        if labels is not None and axes is None:
+            raise ValueError(f"{name}: labels without axes cannot attach")
+
+        def tag(axis: str, i: int) -> str:
+            names = (labels or {}).get(axis)
+            return str(names[i]) if names is not None else str(i)
 
         def fmt(idx) -> str:
             if axes is None:
                 return "[" + ",".join(str(int(i)) for i in idx) + "]"
             return "[" + " ".join(
-                f"{a}={int(i)}" for a, i in zip(axes, idx)
+                f"{a}={tag(a, int(i))}" for a, i in zip(axes, idx)
             ) + "]"
 
         shown = ", ".join(fmt(i) for i in bad[:8])

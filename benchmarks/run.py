@@ -35,6 +35,7 @@ SECTION_MODULES = [
     ("scaleout_3tier", "bench_scaleout"),
     ("job_ettr", "bench_job_ettr"),
     ("cluster_contention", "bench_cluster"),
+    ("policy_bakeoff", "bench_bakeoff"),
     ("spray_throughput", "bench_spray_throughput"),
     ("sprayed_collective_tpu", "bench_sprayed_collective"),
     ("fountain_transport", "bench_fountain"),
@@ -179,6 +180,11 @@ def main(argv=None) -> None:
             },
             "results": common.RESULTS,
         }
+        if common.BAKEOFF_STATS:
+            # policy bake-off ranking rows: one per (family, scenario,
+            # metric), with the full 8-policy ordering and the explicit
+            # wam_wins/margin verdict (see docs/BENCHMARKS.md meta.bakeoff)
+            payload["meta"]["bakeoff"] = {"rows": common.BAKEOFF_STATS}
         if args.telemetry:
             # observability rows: recovery ticks per fault-injection event
             # (onset -> allocation re-converged), discrepancy-gauge max,

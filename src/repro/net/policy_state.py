@@ -1,0 +1,217 @@
+"""Extensible per-policy sender state: a registry of traced state blocks.
+
+The unified sender engine dispatches its path-selection policy through a
+traced `jax.lax.switch` (`repro.net.policies`), so ONE compiled program
+serves every policy and the policy id is a vmap axis.  The literature
+baselines the bake-off runs against (PRIME, STrack, CC-coupled spraying)
+need per-path *sender* state that Whack-a-Mole itself never keeps — RTT
+estimates, penalty timers, entropy slots, congestion windows.  This module
+makes that state a first-class, extensible pytree (`PolicyState`) threaded
+through `sender_tick`'s scan carry:
+
+  * every block is per-path, shape ``[*lead, n]`` when ENABLED and
+    ``[*lead, 0]`` (zero-width) when not — the pytree STRUCTURE is static
+    and independent of runtime values, so the carry vmaps over policy /
+    draw / scenario axes and the jit cache key never depends on which
+    policy a traced scalar happens to select;
+  * which blocks are enabled is a STATIC property of the run
+    (`SenderSpec.state_blocks`, derived from the policy set via
+    `repro.net.policies.blocks_for`), defaulting to NONE — a run that
+    enables no blocks carries only zero-width leaves, its update is a
+    no-op, and the engine's computation is bit-identical to the
+    pre-policy-state engine (pinned by the golden traces);
+  * the state EVOLUTION is policy-independent: `update_policy_state` folds
+    each tick's delayed per-path feedback (ECN marks, losses, queueing
+    delay) into every enabled block unconditionally.  Only the *read* is
+    policy-specific (the selection branches in `repro.net.policies`), which
+    is what makes "enable extra blocks" observation-only for policies that
+    do not read them — the bake-off's union-of-blocks sweep is bit-identical
+    per policy to each policy's own-blocks static compile
+    (tests/test_policy_contract.py).
+  * no block update consumes PRNG: the PRIME entropy reroll walks a
+    deterministic integer-hash orbit (`entropy_mix`), so enabling state
+    never perturbs the engine's pre-split key streams.
+
+Registry: `BLOCKS` names the known blocks in canonical order; adding a new
+policy's state means adding a name here, a width rule in
+`init_policy_state`, and an update clause in `update_policy_state` — the
+carry plumbing in `repro.net.sender` is already generic over the pytree.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "BLOCKS",
+    "PolicyState",
+    "canon_blocks",
+    "init_policy_state",
+    "update_policy_state",
+    "state_active",
+    "entropy_mix",
+    "RTT_EWMA",
+    "PEN_DECAY",
+    "PEN_ECN_W",
+    "PEN_LOSS_W",
+    "ENT_ECN_THRESH",
+    "ENT_LOSS_THRESH",
+    "CCW_INIT",
+    "CCW_MIN",
+    "CCW_MAX",
+    "CC_BETA",
+    "CC_ALPHA",
+]
+
+# canonical block order (SenderSpec.state_blocks is always a subsequence)
+BLOCKS: Tuple[str, ...] = ("rtt", "penalty", "entropy", "ccw")
+
+# --- state dynamics constants (documented knobs, not traced params) -------
+RTT_EWMA = 0.25        # EWMA gain for per-path RTT samples (STrack §RTT)
+PEN_DECAY = 0.9375     # per-tick multiplicative penalty decay (= 1 - 1/16)
+PEN_ECN_W = 1.0        # penalty added per unit ECN-mark rate
+PEN_LOSS_W = 4.0       # penalty added per unit loss rate (losses >> marks)
+ENT_ECN_THRESH = 0.25  # PRIME: reroll a slot whose path marks above this
+ENT_LOSS_THRESH = 0.05  # PRIME: ... or loses above this
+CCW_INIT = 4.0         # CC-coupled: initial per-path window
+CCW_MIN = 0.125        # window floor — keeps every path probeable
+CCW_MAX = 32.0         # window ceiling
+CC_BETA = 0.5          # multiplicative decrease x min(ecn+loss, 1)
+CC_ALPHA = 0.25        # additive increase per clean feedback tick
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PolicyState:
+    """Per-policy traced sender state blocks (each ``[*lead, n]`` or
+    zero-width ``[*lead, 0]`` when statically disabled).
+
+    rtt     — per-path EWMA RTT estimate (ticks), seeded from the base
+              path latency; read by STrack's excess-delay score.
+    penalty — STrack per-path penalty timers: accumulate on ECN/loss,
+              decay multiplicatively (`PEN_DECAY`) so a whacked path's
+              share returns on a closed-form tick bound.
+    entropy — PRIME per-slot entropy values (uint32): slot s maps to path
+              ``entropy[s] % n``; congested slots reroll via `entropy_mix`.
+    ccw     — CC-coupled per-path congestion windows (AIMD on the fabric's
+              ECN signal); spray weights are proportional to them.
+    """
+
+    rtt: jax.Array      # float32[*lead, n?]
+    penalty: jax.Array  # float32[*lead, n?]
+    entropy: jax.Array  # uint32[*lead, n?]
+    ccw: jax.Array      # float32[*lead, n?]
+
+
+def canon_blocks(blocks: Sequence[str]) -> Tuple[str, ...]:
+    """Validate + order a block set canonically (a stable jit cache key)."""
+    unknown = set(blocks) - set(BLOCKS)
+    if unknown:
+        raise ValueError(
+            f"unknown policy-state block(s) {sorted(unknown)}; "
+            f"known: {BLOCKS}"
+        )
+    return tuple(b for b in BLOCKS if b in set(blocks))
+
+
+def entropy_mix(x: jax.Array) -> jax.Array:
+    """Deterministic 32-bit avalanche hash (lowbias32): the PRIME entropy
+    reroll.  Repeated application walks a pseudo-random orbit, so a slot
+    that re-lands on a congested path keeps moving on later ticks — and no
+    PRNG key is consumed, which keeps the engine's key streams untouched."""
+    x = jnp.asarray(x, jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
+
+
+def init_policy_state(
+    blocks: Sequence[str],
+    lead: Tuple[int, ...],
+    n: int,
+    *,
+    latency: jax.Array,
+    sa: jax.Array,
+) -> PolicyState:
+    """Initial `PolicyState` for an engine run with flow axes `lead` and n
+    paths.  Disabled blocks are zero-width.  `latency` (broadcastable to
+    ``lead + (n,)``) seeds the RTT estimates; `sa` (the traced spray seed,
+    shape `lead`) decorrelates the PRIME entropy slots across flows and
+    sweep points without consuming PRNG."""
+    blocks = set(canon_blocks(blocks))
+
+    def width(name: str) -> int:
+        return n if name in blocks else 0
+
+    full = lead + (n,)
+    lat = jnp.broadcast_to(jnp.asarray(latency, jnp.float32), full)
+    slots = jnp.arange(n, dtype=jnp.uint32)
+    ent = entropy_mix(
+        jnp.asarray(sa, jnp.uint32)[..., None] * jnp.uint32(0x9E3779B9)
+        + slots * jnp.uint32(0x85EBCA6B)
+        + jnp.uint32(1)
+    )
+    ent = jnp.broadcast_to(ent, full)
+    return PolicyState(
+        rtt=lat[..., : width("rtt")],
+        penalty=jnp.zeros(lead + (width("penalty"),), jnp.float32),
+        entropy=ent[..., : width("entropy")],
+        ccw=jnp.full(lead + (width("ccw"),), CCW_INIT, jnp.float32),
+    )
+
+
+def state_active(state: PolicyState) -> bool:
+    """Static: does any block have nonzero width (i.e. is there anything
+    to update)?  Python-level — shapes are static under trace."""
+    return any(
+        leaf.shape[-1] > 0 for leaf in (
+            state.rtt, state.penalty, state.entropy, state.ccw
+        )
+    )
+
+
+def update_policy_state(
+    state: PolicyState,
+    *,
+    ecn_rate: jax.Array,    # float32[*lead, n] delayed per-path mark rate
+    loss_rate: jax.Array,   # float32[*lead, n] delayed per-path loss rate
+    rtt_sample: jax.Array,  # float32[*lead, n] latency + queueing delay
+    seen: jax.Array,        # bool[*lead, n] — feedback carried traffic?
+) -> PolicyState:
+    """One feedback tick of the state dynamics, every enabled block.
+
+    Policy-independent and PRNG-free (see module docstring); each block
+    updates only when statically enabled (width > 0), so a disabled block
+    costs nothing and a zero-block state is a no-op.  Elementwise over the
+    trailing path axis — broadcasts over any leading flow/sweep axes.
+    """
+    rtt, pen, ent, ccw = state.rtt, state.penalty, state.entropy, state.ccw
+    if rtt.shape[-1]:
+        # sample only where the feedback window carried traffic — an idle
+        # path's estimate holds rather than collapsing toward base latency
+        rtt = jnp.where(seen, rtt + RTT_EWMA * (rtt_sample - rtt), rtt)
+    if pen.shape[-1]:
+        pen = pen * PEN_DECAY + PEN_ECN_W * ecn_rate + PEN_LOSS_W * loss_rate
+    if ent.shape[-1]:
+        n = ent.shape[-1]
+        bad = (ecn_rate > ENT_ECN_THRESH) | (loss_rate > ENT_LOSS_THRESH)
+        slot_path = (ent % jnp.uint32(n)).astype(jnp.int32)
+        slot_bad = jnp.take_along_axis(bad, slot_path, axis=-1)
+        ent = jnp.where(slot_bad, entropy_mix(ent), ent)
+    if ccw.shape[-1]:
+        congested = ecn_rate + loss_rate
+        dec = ccw * (1.0 - CC_BETA * jnp.minimum(congested, 1.0))
+        # additive increase also where no feedback arrived: optimistic
+        # probing — a whacked-to-floor path must be able to win traffic
+        # back once it heals, and it only gets feedback if it gets traffic
+        ccw = jnp.clip(
+            jnp.where(congested > 0.0, dec, ccw + CC_ALPHA),
+            CCW_MIN, CCW_MAX,
+        )
+    return PolicyState(rtt=rtt, penalty=pen, entropy=ent, ccw=ccw)

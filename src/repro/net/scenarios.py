@@ -65,6 +65,7 @@ __all__ = [
     "straggler_worker",
     "pfc_storm",
     "crossjob_background",
+    "two_path_whack",
     "SCENARIOS",
     "pair_scenarios",
     "PAIR_SCENARIO_NAMES",
@@ -204,6 +205,32 @@ def link_flap(
     n_leaves = 2 * flows
     topo = leaf_spine(n_leaves, n_spines, pairs, uplink_capacity=link_capacity, **kw)
     cap = _flap_caps(n_leaves, n_spines, topo.links, horizon, period, duty, spine)
+    return topo, _schedule(cap, np.zeros_like(cap))
+
+
+def two_path_whack(
+    *,
+    down_spine: int = 0,
+    t_down: int = 64,
+    t_up: int = 192,
+    horizon: int = 1024,
+    link_capacity: float = 8.0,
+    **kw,
+) -> Scenario:
+    """The minimal controlled whack/restore pulse: ONE flow over exactly two
+    spines, with spine `down_spine`'s links at zero capacity over
+    [t_down, t_up) and fully restored after.  Small enough that recovery
+    dynamics have closed forms — the STrack penalty-decay oracle
+    (tests/test_telemetry.py) and the bake-off's recovery_ticks column both
+    run on this scenario, so the benchmark column has a unit-level ground
+    truth on the same topology."""
+    topo = leaf_spine(2, 2, [(0, 1)], uplink_capacity=link_capacity, **kw)
+    cap = np.ones((horizon, topo.links), np.float32)
+    t = np.arange(horizon)
+    down = (t >= t_down) & (t < t_up)
+    for leaf in range(2):
+        cap[down, uplink_id(leaf, down_spine, 2, 2)] = 0.0
+        cap[down, downlink_id(down_spine, leaf, 2, 2)] = 0.0
     return topo, _schedule(cap, np.zeros_like(cap))
 
 

@@ -46,7 +46,8 @@ pinned by the golden traces and tests/test_fastpath.py):
     policy/draw sweep: a whole scenario library in ONE compiled program
     (see `scenarios.stack_scenarios`).
 
-Policies (§2, §4 + the baselines the paper positions against):
+Policies (§2, §4 + the baselines the paper positions against; the enum and
+branch bodies live in `repro.net.policies`, re-exported here):
 
   * ECMP          — flow-hash: every packet of the flow on one fixed path.
   * RR            — round-robin across all paths, health-blind.
@@ -55,6 +56,12 @@ Policies (§2, §4 + the baselines the paper positions against):
                     controller as WaM; isolates determinism from adaptivity).
   * WAM           — Whack-a-Mole: bit-reversal deterministic spray over the
                     adaptive profile (the paper's algorithm).
+  * PRIME / STRACK / CC_COUPLED — the literature's adaptive-spraying
+                    competitors (arXiv:2507.23012 / 2407.15266 /
+                    2509.07907), reading per-path sender state
+                    (`repro.net.policy_state`) threaded through the scan
+                    carry as zero-width-when-disabled blocks
+                    (`SenderSpec.state_blocks`) — the bake-off set.
 
 Reliability modes:
   * coded   — fountain/LT transport: the flow completes when ANY
@@ -66,7 +73,6 @@ Reliability modes:
 from __future__ import annotations
 
 import dataclasses
-import enum
 import functools
 from typing import Callable, Sequence, Tuple
 
@@ -81,8 +87,21 @@ from repro.core.feedback import (
     make_controller,
 )
 from repro.core.profile import PathProfile, uniform_profile
-from repro.core.spray import SprayMethod, SprayState, select_path, spray_key
+from repro.core.spray import SprayMethod, SprayState
 from repro.net.fabric import FabricParams, fabric_tick, init_fabric
+from repro.net.policies import (
+    ALL_POLICIES,
+    BASELINE_POLICIES,
+    Policy,
+    blocks_for,
+    policy_branches,
+    profile_adaptive,
+)
+from repro.net.policy_state import (
+    PolicyState,
+    init_policy_state,
+    update_policy_state,
+)
 from repro.net.telemetry import TelemetrySpec, init_frame, record
 from repro.net.topology import (
     EventSchedule,
@@ -94,9 +113,12 @@ from repro.net.topology import (
 
 __all__ = [
     "Policy",
+    "BASELINE_POLICIES",
+    "ALL_POLICIES",
     "SenderSpec",
     "SenderParams",
     "SimResult",
+    "spec_for_policies",
     "sender_params",
     "stack_params",
     "policy_sweep_params",
@@ -118,14 +140,6 @@ __all__ = [
     "shard_sweep_flows",
     "shard_sweep_flows_scenarios",
 ]
-
-
-class Policy(enum.IntEnum):
-    ECMP = 0
-    RR = 1
-    RAND_STATIC = 2
-    RAND_ADAPTIVE = 3
-    WAM = 4
 
 
 @dataclasses.dataclass(frozen=True)
@@ -160,6 +174,17 @@ class SenderSpec:
     # record identical series.  None (the default) leaves the engine's
     # code path, carry and outputs untouched.
     telemetry: TelemetrySpec | None = None
+    # Per-policy sender state blocks (repro.net.policy_state) enabled for
+    # this run: a STATIC canonical tuple (subset of policy_state.BLOCKS),
+    # usually `policies.blocks_for(<the policies swept>)` — see
+    # `spec_for_policies`.  Disabled blocks are zero-width leaves in the
+    # carried PolicyState, and the default () makes the whole state a
+    # structural no-op: carry shapes, PRNG streams and outputs are
+    # bit-identical to the pre-policy-state engine (golden traces hold).
+    # A state-bearing policy (PRIME / STRACK / CC_COUPLED) swept WITHOUT
+    # its blocks statically degrades to RAND_STATIC (see
+    # policies.policy_branches) — enable the blocks for real comparisons.
+    state_blocks: Tuple[str, ...] = ()
 
 
 @jax.tree_util.register_dataclass
@@ -204,10 +229,22 @@ def stack_params(params: Sequence[SenderParams]) -> SenderParams:
 
 
 def policy_sweep_params(
-    policies: Sequence[Policy] = tuple(Policy), **kw
+    policies: Sequence[Policy] = BASELINE_POLICIES, **kw
 ) -> SenderParams:
-    """`SenderParams` with a leading policy axis — the all-policies sweep."""
+    """`SenderParams` with a leading policy axis.  Defaults to the five
+    baseline policies (the historical all-policies sweep — BENCH history
+    and the golden traces pin that axis); pass `ALL_POLICIES` for the
+    eight-way bake-off set, pairing it with `spec_for_policies` so the
+    state-bearing policies get their blocks."""
     return stack_params([sender_params(p, **kw) for p in policies])
+
+
+def spec_for_policies(
+    spec: SenderSpec, policies: Sequence[Policy | int]
+) -> SenderSpec:
+    """`spec` with `state_blocks` set to exactly the blocks the given
+    policy set reads — the one-liner for wiring a bake-off sweep."""
+    return dataclasses.replace(spec, state_blocks=blocks_for(policies))
 
 
 @jax.tree_util.register_dataclass
@@ -269,37 +306,28 @@ def assign_paths(
     k_emit: jax.Array,
     key: jax.Array,
     ecmp_path: jax.Array,
+    pstate: PolicyState | None = None,
 ):
     """Choose a path for each of up to rate_cap packets (first k_emit valid).
 
-    `policy` is TRACED: dispatch is a `jax.lax.switch`, so one compiled
-    program serves all five policies and vmaps over a policy axis.  Returns
+    `policy` is TRACED: dispatch is a `jax.lax.switch` over the branch list
+    built by `policies.policy_branches`, so one compiled program serves all
+    eight policies and vmaps over a policy axis.  `pstate` carries the
+    per-policy state blocks the PRIME/STRACK/CC_COUPLED branches read; None
+    (the stateless callers' default) builds an all-disabled state, under
+    which those branches statically degrade to RAND_STATIC.  Returns
     (arrivals[n] float32, spray') — the spray counter advances by k_emit so
     the WaM sequence is exactly the paper's (no holes).
     """
-    lanes = jnp.arange(rate_cap, dtype=jnp.uint32)
+    if pstate is None:
+        pstate = init_policy_state(
+            (), (), n, latency=jnp.zeros((n,), jnp.float32), sa=spray.sa
+        )
     live = jnp.arange(rate_cap) < k_emit  # [rate_cap]
 
-    def ecmp():
-        return jnp.full((rate_cap,), ecmp_path, jnp.int32)
-
-    def rr():
-        return ((spray.j + lanes) % n).astype(jnp.int32)
-
-    def rand_static():
-        return jax.random.randint(key, (rate_cap,), 0, n, jnp.int32)
-
-    def rand_adaptive():
-        u = jax.random.randint(key, (rate_cap,), 0, profile.m, jnp.int32)
-        return select_path(profile.c, u)
-
-    def wam():
-        keys = spray_key(
-            spray.j + lanes, spray.sa, spray.sb, spray.ell, spray.method
-        )
-        return select_path(profile.c, keys)
-
-    paths = jax.lax.switch(policy, [ecmp, rr, rand_static, rand_adaptive, wam])
+    paths = jax.lax.switch(policy, policy_branches(
+        rate_cap, n, spray, profile, key, ecmp_path, pstate
+    ))
     # segment-sum of the live lanes onto their paths as a branchless
     # compare-count (the spray_select kernel's sum-of-comparisons idiom):
     # bit-identical to the historical one_hot(paths, n) float reduction
@@ -352,8 +380,11 @@ def _settled(spec, carry) -> jax.Array:
     completed, ARQ debt drained (uncoded only), fabric quiescent.  Once it
     holds it holds forever (completed flows stop emitting, nothing is left
     to drop or deliver), which is what makes both early exit and the
-    telemetry capture freeze sound."""
-    fabric, _ctrl, _spray, _sched, debt, done_at, _sent, _known = carry
+    telemetry capture freeze sound.  (The policy-state blocks keep evolving
+    from the feedback stream after settle, like the controller profile —
+    neither participates in the stop condition nor in any completion-
+    relevant output.)"""
+    fabric, _ctrl, _spray, _sched, debt, done_at, _sent, _known, _ps = carry
     done = jnp.all(done_at >= 0) & fabric_quiescent(fabric)
     if not spec.coded:
         done = done & jnp.all(debt == 0)
@@ -434,9 +465,11 @@ def run_sender(
 
       * stepper(fabric, arrivals, key) -> (fabric', fb) — the fabric, any
         model honouring the `fabric_tick` feedback contract.
-      * assign_fn(spray, profile, k_emit, key, ecmp_path) — path assignment
-        (the F-flow engine vmaps `assign_paths` and splits the tick key per
-        flow; the single-flow engine binds it directly).
+      * assign_fn(spray, pstate, profile, k_emit, key, ecmp_path) — path
+        assignment (the F-flow engine vmaps `assign_paths` and splits the
+        tick key per flow; the single-flow engine binds it directly).
+        `pstate` is the carried per-policy state (`spec.state_blocks`
+        sizes its blocks; zero-width when disabled).
       * ctrl_update(ctrl, stats) -> ctrl — profile controller step (vmapped
         over flows where applicable).
       * received_fn / dropped_fn — read completion/drop totals out of the
@@ -467,11 +500,17 @@ def run_sender(
     """
     need = completion_need(n_packets, spec.coded, sp.code_overhead)
     rate = jnp.minimum(sp.rate, spec.rate_cap)  # lanes are rate_cap wide
-    adaptive = (sp.policy == Policy.RAND_ADAPTIVE) | (sp.policy == Policy.WAM)
+    adaptive = profile_adaptive(sp.policy)
     tkeys = tick_keys(k_loop, horizon)
+    pstate0 = init_policy_state(
+        spec.state_blocks, lead, n, latency=latency_f, sa=spray0.sa
+    )
 
     def sender_tick(carry, kt):
-        (fabric, ctrl, spray, sent_sched, debt, done_at, sent_pp, known) = carry
+        (
+            fabric, ctrl, spray, sent_sched, debt, done_at, sent_pp, known,
+            pstate,
+        ) = carry
         t = fabric.t
         ka, kb = kt[0], kt[1]
 
@@ -496,9 +535,28 @@ def run_sender(
             ).astype(jnp.int32)
 
         # --- spray / path assignment (traced-policy lax.switch) ---
-        arrivals, spray = assign_fn(spray, ctrl.profile, k_emit, ka, ecmp_path)
+        arrivals, spray = assign_fn(
+            spray, pstate, ctrl.profile, k_emit, ka, ecmp_path
+        )
         sent_pp = sent_pp + arrivals
         fabric, fb = stepper(fabric, arrivals, kb)
+
+        # --- per-policy state blocks <- delayed per-path feedback ---
+        # Statically skipped when no block is enabled (the default), which
+        # is what keeps the stateless engine — and the goldens — untouched.
+        # The update runs every tick (unlike the profile controller's
+        # cadence) and consumes NO PRNG; tick t's assignment above read the
+        # state as of tick t-1's feedback.
+        if spec.state_blocks:
+            sent_m = jnp.maximum(fb["sent"], 1e-6)
+            seen1 = jnp.minimum(fb["sent"], 1.0)
+            pstate = update_policy_state(
+                pstate,
+                ecn_rate=fb["marked"] / sent_m * seen1,
+                loss_rate=fb["dropped"] / sent_m * seen1,
+                rtt_sample=latency_f + fb["qdelay"],
+                seen=fb["sent"] > 0,
+            )
 
         # --- retransmission debt (uncoded): NACKed drops re-enter the stream
         new_debt = debt + jnp.sum(fb["dropped"], axis=-1) - (
@@ -529,7 +587,8 @@ def run_sender(
         done_now = (received_fn(fabric) >= need) & (done_at < 0)
         done_at = jnp.where(done_now, t.astype(jnp.int32) + 1, done_at)
         return (
-            fabric, ctrl, spray, sent_sched, new_debt, done_at, sent_pp, known
+            fabric, ctrl, spray, sent_sched, new_debt, done_at, sent_pp,
+            known, pstate,
         ), None
 
     zeros = jnp.zeros(lead, jnp.float32)
@@ -546,6 +605,7 @@ def run_sender(
         done_at0,
         jnp.zeros(lead + (n,), jnp.float32),
         (zeros, zeros),
+        pstate0,
     )
     if settle_reduce is None:
         settled_fn = lambda c: _settled(spec, c)  # noqa: E731
@@ -564,7 +624,11 @@ def run_sender(
         links = 0
         if tspec.links and tel_link_fn is not None:
             links = int(tel_link_fn(fabric0)[0].shape[-1])
-        tel0 = init_frame(tspec, lead, n, links)
+        tel0 = init_frame(
+            tspec, lead, n, links,
+            pen_width=pstate0.penalty.shape[-1],
+            ccw_width=pstate0.ccw.shape[-1],
+        )
         m = 1 << spec.ell
 
         def tel_tick(wcarry, kt):
@@ -577,7 +641,10 @@ def run_sender(
             settled_pre = _settled(spec, base)
             t_pre = base[0].t
             base, _ = sender_tick(base, kt)
-            fabric, ctrl, spray, sent_sched, debt, done_at, sent_pp, _ = base
+            (
+                fabric, ctrl, spray, sent_sched, debt, done_at, sent_pp, _,
+                pstate,
+            ) = base
             capture = (~settled_pre) & ((t_pre % tspec.stride) == 0)
             link = None
             if tspec.links and tel_link_fn is not None:
@@ -593,6 +660,8 @@ def run_sender(
                 received=received_fn(fabric),
                 j=spray.j,
                 link=link,
+                pen=pstate.penalty,
+                ccw=pstate.ccw,
             )
             return (base, tel), None
 
@@ -603,7 +672,7 @@ def run_sender(
             )
         else:
             (carry, frame), _ = jax.lax.scan(tel_tick, (carry0, tel0), tkeys)
-    (fabric, ctrl, _, _, _, done_at, sent_pp, _) = carry
+    (fabric, ctrl, _, _, _, done_at, sent_pp, _, _) = carry
     cct = jnp.where(done_at >= 0, done_at.astype(jnp.float32), float(horizon))
     if link_fn is not None:
         link_served, link_busy = link_fn(fabric)
@@ -665,9 +734,10 @@ def run_message_on(
     k_hash, k_loop = jax.random.split(key)
     ecmp_path = jax.random.randint(k_hash, (), 0, n, jnp.int32)
 
-    def assign_fn(spray, profile, k_emit, ka, ecmp):
+    def assign_fn(spray, pstate, profile, k_emit, ka, ecmp):
         return assign_paths(
-            spec.rate_cap, n, sp.policy, spray, profile, k_emit, ka, ecmp
+            spec.rate_cap, n, sp.policy, spray, profile, k_emit, ka, ecmp,
+            pstate,
         )
 
     def ctrl_update(c, stats):
@@ -743,8 +813,10 @@ def _run_flows(
         functools.partial(assign_paths, spec.rate_cap, n, sp.policy)
     )
 
-    def assign_fn(spray, profile, k_emit, ka, ecmp):
-        return vassign(spray, profile, k_emit, jax.random.split(ka, F), ecmp)
+    def assign_fn(spray, pstate, profile, k_emit, ka, ecmp):
+        return vassign(
+            spray, profile, k_emit, jax.random.split(ka, F), ecmp, pstate
+        )
 
     def ctrl_update(c, stats):
         def one(ci, si):
@@ -1026,11 +1098,11 @@ def _local_flow_run(spec: SenderSpec, horizon: int, F: int, n_shards: int):
             functools.partial(assign_paths, spec.rate_cap, n, sp.policy)
         )
 
-        def assign_fn(spray, profile, k_emit, ka, ecmp):
+        def assign_fn(spray, pstate, profile, k_emit, ka, ecmp):
             # split at the REAL flow count (see the module-section comment),
             # pad, then take this shard's block
             kf = _pad_flow_axis(jax.random.split(ka, F), F_pad, 0)
-            return vassign(spray, profile, k_emit, local(kf), ecmp)
+            return vassign(spray, profile, k_emit, local(kf), ecmp, pstate)
 
         def ctrl_update(c, stats):
             def one(ci, si):

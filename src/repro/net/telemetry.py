@@ -149,6 +149,12 @@ class TelemetryFrame:
     link_served: jax.Array    # float32[W, L?] cumulative served
     link_dropped: jax.Array   # float32[W, L?] cumulative tail drops
     link_ecn: jax.Array       # float32[W, L?] 1.0 where over ECN threshold
+    # per-path POLICY-STATE channels (repro.net.policy_state): STrack
+    # penalty timers and CC-coupled congestion windows.  Width mirrors the
+    # run's enabled state blocks (zero when the block — or `paths` — is
+    # disabled), so stateless runs' frames and series are unchanged.
+    pstate_pen: jax.Array  # float32[W, *lead, pen?] penalty timers
+    pstate_ccw: jax.Array  # float32[W, *lead, ccw?] per-path cwnd
     prev_sent: jax.Array   # float32[*lead, n] gauge window opener
     prev_j: jax.Array      # uint32[*lead] spray counter at last capture
 
@@ -161,6 +167,7 @@ class TelemetryFrame:
 _CHANNELS = (
     "tick", "alloc", "sent_pp", "dropped_pp", "debt", "emitted", "received",
     "disc", "link_queue", "link_served", "link_dropped", "link_ecn",
+    "pstate_pen", "pstate_ccw",
 )
 
 
@@ -169,12 +176,22 @@ def init_frame(
     lead: Tuple[int, ...],
     n: int,
     links: int,
+    *,
+    pen_width: int = 0,
+    ccw_width: int = 0,
 ) -> TelemetryFrame:
     """Zeroed frame for an engine run with flow axes `lead`, n paths and
-    `links` shared links (0 on fabrics without a link concept)."""
+    `links` shared links (0 on fabrics without a link concept).
+
+    `pen_width` / `ccw_width` size the policy-state channels — pass the
+    run's `PolicyState.penalty` / `.ccw` trailing widths (n when the block
+    is enabled, else 0); both default to 0 so stateless callers are
+    unchanged."""
     W = tspec.window
     np_ = n if tspec.paths else 0
     L = links if tspec.links else 0
+    pw = pen_width if tspec.paths else 0
+    cw = ccw_width if tspec.paths else 0
     f32 = jnp.float32
     return TelemetryFrame(
         count=jnp.int32(0),
@@ -190,6 +207,8 @@ def init_frame(
         link_served=jnp.zeros((W, L), f32),
         link_dropped=jnp.zeros((W, L), f32),
         link_ecn=jnp.zeros((W, L), f32),
+        pstate_pen=jnp.zeros((W,) + lead + (pw,), f32),
+        pstate_ccw=jnp.zeros((W,) + lead + (cw,), f32),
         prev_sent=jnp.zeros(lead + (n,), f32),
         prev_j=jnp.zeros(lead, jnp.uint32),
     )
@@ -210,6 +229,8 @@ def record(
     received: jax.Array,     # float32[*lead]
     j: jax.Array,            # uint32[*lead] spray counter (post-tick)
     link: Optional[Tuple[jax.Array, jax.Array, jax.Array, jax.Array]],
+    pen: Optional[jax.Array] = None,   # float32[*lead, pen?] penalty block
+    ccw: Optional[jax.Array] = None,   # float32[*lead, ccw?] window block
 ) -> TelemetryFrame:
     """One capture step: predicated ring write of every enabled channel.
 
@@ -217,7 +238,8 @@ def record(
     current value (a bit-identical no-op), so the whole update stays a
     branch-free select that vmaps cleanly.  `link` is the fabric's
     (queue, served, dropped, ecn) reader output, or None on link-less
-    fabrics.
+    fabrics; `pen` / `ccw` are the run's policy-state blocks (sliced to
+    the frame's channel widths, so disabled channels stay no-ops).
     """
     w = frame.count % frame.window
 
@@ -243,6 +265,11 @@ def record(
         zero_l = frame.link_queue[0]  # [0] when disabled
         lq = ls = ld = le = zero_l
 
+    pen_v = (pen if pen is not None else frame.pstate_pen[w])
+    ccw_v = (ccw if ccw is not None else frame.pstate_ccw[w])
+    pen_v = pen_v[..., : frame.pstate_pen.shape[-1]]
+    ccw_v = ccw_v[..., : frame.pstate_ccw.shape[-1]]
+
     trail = alloc.shape[-1] if tspec.paths else 0
     return TelemetryFrame(
         count=frame.count + capture.astype(jnp.int32),
@@ -258,6 +285,8 @@ def record(
         link_served=put(frame.link_served, ls),
         link_dropped=put(frame.link_dropped, ld),
         link_ecn=put(frame.link_ecn, le),
+        pstate_pen=put(frame.pstate_pen, pen_v),
+        pstate_ccw=put(frame.pstate_ccw, ccw_v),
         prev_sent=jnp.where(capture, sent_pp, frame.prev_sent),
         prev_j=jnp.where(capture, j, frame.prev_j),
     )

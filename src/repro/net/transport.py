@@ -39,6 +39,7 @@ import jax
 
 from repro.core.spray import SprayMethod
 from repro.net.fabric import FabricParams, fabric_tick, init_fabric
+from repro.net.policies import blocks_for
 from repro.net.sender import (
     Policy,
     SenderParams,
@@ -87,10 +88,16 @@ class TransportConfig:
             raise ValueError(f"sb must be odd in [1, m={m}), got {sb}")
 
     def spec(self) -> SenderSpec:
-        """The static, shape-affecting half (jit cache key)."""
+        """The static, shape-affecting half (jit cache key).
+
+        `state_blocks` is derived from the config's (single) policy, so a
+        static PRIME/STRACK/CC_COUPLED transport automatically carries
+        exactly the per-policy state blocks it reads — and the five
+        baselines keep the empty tuple, i.e. the historical spec.
+        """
         return SenderSpec(
             coded=self.coded, ell=self.ell, method=self.method,
-            rate_cap=self.rate,
+            rate_cap=self.rate, state_blocks=blocks_for((self.policy,)),
         )
 
     def params(self) -> SenderParams:

@@ -1,23 +1,37 @@
-"""Regenerate the transport golden traces (tests/golden/transport_seed.npz).
+"""Regenerate the transport golden traces.
 
-The traces pin `simulate_message` on the independent-bundle seed fabric —
-all five policies x both reliability modes — and are the bit-identity
-acceptance contract for any refactor of the sender engine: a change that
-alters a single float in any field of any trace is a semantic change, not
-a refactor.
+Two pinned files live next to this script:
 
-Only rerun this when the *intended* semantics change:
+  * ``transport_seed.npz``     — `simulate_message` on the independent-
+    bundle seed fabric for the five BASELINE policies x both reliability
+    modes (plus one default-config trace and one coupled-flows trace).
+    These are the bit-identity acceptance contract for any refactor of the
+    sender engine: a change that alters a single float in any field of any
+    trace is a semantic change, not a refactor.  The file is NEVER
+    rewritten by default — even value-identical arrays would change the
+    file bytes (zip member timestamps), and the whole point of the file is
+    that it predates the refactors it gates.
+  * ``transport_policies.npz`` — the same trace schema for the
+    state-bearing bake-off policies (PRIME / STRACK / CC_COUPLED), coded +
+    ARQ, plus a coupled-flows case per policy.  Pinned when the policies
+    landed; regenerating it is a semantic change to THOSE policies only
+    and must leave transport_seed.npz untouched.
 
-    PYTHONPATH=src python tests/golden/gen_golden_transport.py
+Only rerun deliberately — never to make a red test green:
+
+    PYTHONPATH=src python tests/golden/gen_golden_transport.py            # policies file
+    PYTHONPATH=src python tests/golden/gen_golden_transport.py --seed    # BOTH files
 """
 from __future__ import annotations
 
 import os
+import sys
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.net.policies import BASELINE_POLICIES
 from repro.net.transport import (
     Policy,
     TransportConfig,
@@ -28,6 +42,10 @@ from repro.net.fabric import FabricParams
 from repro.net.topology import leaf_spine, null_schedule
 
 OUT = os.path.join(os.path.dirname(__file__), "transport_seed.npz")
+OUT_POLICIES = os.path.join(os.path.dirname(__file__), "transport_policies.npz")
+FIELDS = ("cct", "sent_total", "dropped_total", "final_b", "received")
+
+NEW_POLICIES = (Policy.PRIME, Policy.STRACK, Policy.CC_COUPLED)
 
 
 def golden_params(n=4):
@@ -45,12 +63,10 @@ def golden_params(n=4):
     )
 
 
-def golden_cases():
-    """(name, params, cfg, n_packets, key_seed, horizon) for every trace."""
+def _message_cases(policies):
     params4 = golden_params(4)
-    params8 = golden_params(8)
     cases = []
-    for pol in Policy:
+    for pol in policies:
         for coded in (True, False):
             rel = "coded" if coded else "arq"
             cases.append(
@@ -63,11 +79,24 @@ def golden_cases():
                     512,
                 )
             )
+    return cases
+
+
+def golden_cases():
+    """(name, params, cfg, n_packets, key_seed, horizon) for every
+    transport_seed.npz trace — the five baselines only (frozen set)."""
+    cases = _message_cases(BASELINE_POLICIES)
     # one default-config trace on the wider fabric (the README quickstart shape)
     cases.append(
-        ("WAM/default8", params8, TransportConfig(policy=Policy.WAM), 512, 0, 1024)
+        ("WAM/default8", golden_params(8),
+         TransportConfig(policy=Policy.WAM), 512, 0, 1024)
     )
     return cases
+
+
+def golden_policy_cases():
+    """transport_policies.npz message traces: the bake-off newcomers."""
+    return _message_cases(NEW_POLICIES)
 
 
 def golden_flows_case():
@@ -77,19 +106,49 @@ def golden_flows_case():
     return topo, null_schedule(topo.links), cfg, 128, 3, 512
 
 
-def main() -> None:
-    blobs = {}
-    for name, params, cfg, n_packets, seed, horizon in golden_cases():
+def golden_policy_flows_cases():
+    """Coupled-flows traces per new policy (same shape as the WAM one)."""
+    topo, sched, _, n_packets, seed, horizon = golden_flows_case()
+    return [
+        (f"FLOWS/{pol.name}", topo, sched,
+         TransportConfig(policy=pol, rate=16), n_packets, seed, horizon)
+        for pol in NEW_POLICIES
+    ]
+
+
+def _render_message(blobs, cases):
+    for name, params, cfg, n_packets, seed, horizon in cases:
         r = simulate_message(
             params, cfg, n_packets, jax.random.PRNGKey(seed), horizon
         )
-        for field in ("cct", "sent_total", "dropped_total", "final_b", "received"):
+        for field in FIELDS:
             blobs[f"{name}/{field}"] = np.asarray(getattr(r, field))
         print(f"{name:24s} cct={float(r.cct):7.1f} received={float(r.received):8.1f}")
 
+
+def main(argv=None) -> None:
+    argv = sys.argv[1:] if argv is None else argv
+    write_seed = "--seed" in argv
+
+    blobs = {}
+    _render_message(blobs, golden_policy_cases())
+    for name, topo, sched, cfg, n_packets, seed, horizon in golden_policy_flows_cases():
+        r = simulate_flows(
+            topo, sched, cfg, n_packets, jax.random.PRNGKey(seed), horizon
+        )
+        for field in FIELDS:
+            blobs[f"{name}/{field}"] = np.asarray(getattr(r, field))
+        print(f"{name:24s} cct={np.asarray(r.cct)}")
+    np.savez(OUT_POLICIES, **blobs)
+    print(f"wrote {len(blobs)} arrays to {OUT_POLICIES}")
+
+    if not write_seed:
+        return
+    blobs = {}
+    _render_message(blobs, golden_cases())
     topo, sched, cfg, n_packets, seed, horizon = golden_flows_case()
     r = simulate_flows(topo, sched, cfg, n_packets, jax.random.PRNGKey(seed), horizon)
-    for field in ("cct", "sent_total", "dropped_total", "final_b", "received"):
+    for field in FIELDS:
         blobs[f"FLOWS/WAM/{field}"] = np.asarray(getattr(r, field))
     print(f"{'FLOWS/WAM':24s} cct={np.asarray(r.cct)}")
     np.savez(OUT, **blobs)

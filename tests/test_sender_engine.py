@@ -18,6 +18,7 @@ import pytest
 
 from repro.net.fabric import FabricParams
 from repro.net.sender import (
+    BASELINE_POLICIES,
     Policy,
     SenderSpec,
     completion_need,
@@ -81,7 +82,9 @@ def test_traced_policy_matches_static_compiles_bundle_fabric(coded):
     spec = SenderSpec(coded=coded, rate_cap=16)
     sp = policy_sweep_params(rate=16)
     r = sweep_message(params, spec, sp, 128, keys, horizon=256)
-    for pi, pol in enumerate(Policy):
+    # the default sweep axis is the five baselines; the eight-policy set is
+    # covered by tests/test_policy_contract.py with state blocks enabled
+    for pi, pol in enumerate(BASELINE_POLICIES):
         cfg = TransportConfig(policy=pol, coded=coded, rate=16)
         for di, k in enumerate(keys):
             ref = simulate_message(params, cfg, 128, k, 256)
@@ -99,7 +102,7 @@ def test_traced_policy_matches_static_compiles_shared_fabric(coded):
     spec = SenderSpec(coded=coded, rate_cap=16)
     sp = policy_sweep_params(rate=16)
     r = sweep_flows(topo, sched, spec, sp, 96, keys, horizon=256)
-    for pi, pol in enumerate(Policy):
+    for pi, pol in enumerate(BASELINE_POLICIES):
         cfg = TransportConfig(policy=pol, coded=coded, rate=16)
         for di, k in enumerate(keys):
             ref = simulate_flows(topo, sched, cfg, 96, k, 256)

@@ -19,14 +19,30 @@ Pins the telemetry layer's contract from `docs/BENCHMARKS.md`:
 """
 import dataclasses
 import json
+import math
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core.deviation import spray_keys_np
-from repro.net.scenarios import link_flap
-from repro.net.sender import Policy, SenderSpec, run_flows, sender_params
+from repro.net.policies import STRACK_SLACK, strack_scores
+from repro.net.policy_state import (
+    PEN_DECAY,
+    PEN_ECN_W,
+    PEN_LOSS_W,
+    init_policy_state,
+    update_policy_state,
+)
+from repro.net.scenarios import link_flap, two_path_whack
+from repro.net.sender import (
+    Policy,
+    SenderSpec,
+    run_flows,
+    sender_params,
+    spec_for_policies,
+)
 from repro.net.telemetry import (
     TelemetrySpec,
     chrome_trace,
@@ -228,6 +244,105 @@ def test_summarize_recovery_folds_censoring():
     assert s["max"] == pytest.approx(8.0)
     empty = summarize_recovery(np.zeros((0,)))
     assert empty["events"] == 0 and empty["recovered_frac"] == 1.0
+
+
+def test_strack_penalty_decay_closed_form():
+    """The STrack recovery dynamic has a closed form: under clean feedback a
+    penalized path's timer is pure geometric decay pen_t = P0 * PEN_DECAY^t,
+    so it re-enters the eligible set at EXACTLY
+    t* = ceil(ln(STRACK_SLACK / P0) / ln(PEN_DECAY)) ticks — the unit-level
+    ground truth behind the fabric-integrated recovery test below."""
+    p0 = 8.0
+    state = init_policy_state(
+        ("rtt", "penalty"), (), 2, latency=jnp.full((2,), 4.0), sa=jnp.uint32(0)
+    )
+    state = dataclasses.replace(
+        state, penalty=jnp.asarray([p0, 0.0], jnp.float32)
+    )
+    t_star = math.ceil(math.log(STRACK_SLACK / p0) / math.log(PEN_DECAY))
+    assert t_star == 43  # pin the analytic value for these constants
+    for t in range(1, t_star + 1):
+        state = update_policy_state(
+            state,
+            ecn_rate=jnp.zeros((2,)),
+            loss_rate=jnp.zeros((2,)),
+            rtt_sample=jnp.full((2,), 4.0),
+            seen=jnp.ones((2,), bool),
+        )
+        _, good = strack_scores(state)
+        assert bool(np.asarray(good)[0]) == (t >= t_star), t
+        assert bool(np.asarray(good)[1])  # the clean path is always eligible
+    assert float(state.penalty[0]) == pytest.approx(
+        p0 * PEN_DECAY**t_star, rel=1e-5
+    )
+
+
+def test_strack_recovery_on_two_path_whack():
+    """Fabric-integrated recovery oracle: run STRACK through the controlled
+    two_path_whack pulse and measure recovery on the per-path EMISSION share
+    series (diffs of the telemetry sent_pp channel) with the same
+    `recovery_ticks` machinery the bake-off benchmark reports.  The measured
+    restore-side recovery must respect the analytic penalty-decay bound from
+    the closed-form test above, using the steady-state penalty ceiling
+    P_max = (PEN_ECN_W + PEN_LOSS_W) / (1 - PEN_DECAY)."""
+    t_down, t_up, horizon, stride, rate = 64, 192, 768, 2, 8
+    topo, sched = two_path_whack(t_down=t_down, t_up=t_up, horizon=horizon)
+    spec = spec_for_policies(
+        SenderSpec(
+            rate_cap=rate, early_exit=True,
+            telemetry=TelemetrySpec(stride=stride, window=horizon // stride),
+        ),
+        (Policy.STRACK,),
+    )
+    sp = sender_params(Policy.STRACK, rate=rate)
+    # 3072 packets: coded need ~3226 at <= 8 delivered/tick -> the flow is
+    # guaranteed still emitting at tick 384, well past the recovery bound
+    _, frame = run_flows(
+        topo, sched, spec, sp, 3072, jax.random.PRNGKey(0), horizon
+    )
+    ser = series(frame_select(frame, ()))
+    onsets = event_onsets(sched)
+    np.testing.assert_array_equal(onsets, [t_down, t_up])
+
+    sent = ser["sent_pp"][:, 0]          # [K, 2] cumulative emissions, flow 0
+    emitted = np.diff(sent, axis=0)      # per-sample-window emissions
+    tick = ser["tick"][1:]
+    keep = tick <= 384                   # strictly pre-completion windows
+    emitted, tick = emitted[keep], tick[keep]
+    total = emitted.sum(axis=1)
+    assert (total > 0).all()             # continuously emitting in range
+    share0 = emitted[:, 0] / total
+
+    # steady state on a clean symmetric fabric is the exact 1/2 round-robin
+    # split (both paths eligible, even emit budget)
+    pre = (tick >= 32) & (tick < t_down)
+    assert (share0[pre] == 0.5).all()
+    # mid-outage the whacked spine is mostly avoided — not identically zero:
+    # once starved its penalty decays and STrack PROBES it again, which is
+    # the whack-a-mole dynamic, so assert on the mean duty cycle
+    mid = (tick >= t_down + 32) & (tick < t_up)
+    assert share0[mid].mean() < 0.3
+    assert share0[mid].min() == 0.0
+
+    # recovery_ticks on the share series (scaled to exact integers: shares
+    # are multiples of 1/(rate * stride) per window)
+    scaled = np.round(share0 * rate * stride * 2).astype(np.int64)
+    rec = recovery_ticks(tick, scaled[:, None], onsets)
+    assert rec.shape == (2,)
+    # the outage segment oscillates (probe cycles) for its whole duration,
+    # so its convergence time is either censored or segment-scale — the
+    # restore side is the segment with a closed-form bound
+    assert rec[0] == -1.0 or 0 <= rec[0] <= (t_up - t_down)
+    p_max = (PEN_ECN_W + PEN_LOSS_W) / (1.0 - PEN_DECAY)
+    decay_ticks = math.ceil(
+        math.log(STRACK_SLACK / p_max) / math.log(PEN_DECAY)
+    )
+    fb_delay = 8  # leaf_spine default, see topology.leaf_spine
+    bound = decay_ticks + 2 * fb_delay + 6 * stride + 32
+    assert 0 <= rec[1] <= bound, (rec, bound)
+    # and the recovered regime really is the pre-whack steady state
+    late = tick >= t_up + bound
+    assert late.any() and (share0[late] == 0.5).all()
 
 
 def test_event_onsets_row_changes():
