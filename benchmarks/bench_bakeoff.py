@@ -67,7 +67,7 @@ from repro.net.jobs import (
     job_step_inputs,
     sweep_job_steps_scenarios,
 )
-from repro.net.policies import ALL_POLICIES, Policy
+from repro.net.policies import ALL_POLICIES
 from repro.net.scenarios import (
     fat_tree_scenarios,
     job_scenarios,

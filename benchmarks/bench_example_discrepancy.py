@@ -3,7 +3,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
 
 from benchmarks.common import emit
 from repro.core.deviation import path_deviations

@@ -38,7 +38,6 @@ import json
 import os
 import subprocess
 import sys
-import time
 
 import jax
 import jax.numpy as jnp

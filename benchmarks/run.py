@@ -115,6 +115,15 @@ def main(argv=None) -> None:
         help="fail if the run compiles more than N programs in total "
         "(the scenario-family batching gate: see docs/BENCHMARKS.md)",
     )
+    ap.add_argument(
+        "--audit", action="store_true",
+        help="run the jaxpr program audit (repro.analysis.jaxpr_audit) "
+        "over every bench family: dtype/effect/telemetry discipline plus "
+        "golden fingerprint pins — rows land in meta.audit and "
+        "AUDIT_report.json; any violation or fingerprint drift fails "
+        "the run (regen pins via `python -m repro.analysis.jaxpr_audit "
+        "--write` after an intended program change)",
+    )
     args = ap.parse_args(argv)
     if args.devices is not None:
         if args.devices < 1:
@@ -141,6 +150,45 @@ def main(argv=None) -> None:
         fn()
         timings[name] = round(time.time() - t0, 1)
         print(f"# {name} done in {timings[name]:.1f}s", file=sys.stderr)
+
+    audit_rows, audit_problems = [], []
+    if args.audit:
+        # static program audit: trace (don't compile) each family and check
+        # dtype/effect/telemetry discipline + the golden fingerprint pins
+        from repro.analysis import jaxpr_audit
+
+        print("# === jaxpr audit ===", file=sys.stderr)
+        t0 = time.time()
+        audit_results = jaxpr_audit.audit_all()
+        audit_rows = [r.row() for r in audit_results]
+        audit_problems = [
+            f"{r.family}: {v}" for r in audit_results for v in r.violations
+        ]
+        try:
+            golden = jaxpr_audit.load_golden()
+        except FileNotFoundError:
+            audit_problems.append(
+                f"{jaxpr_audit.GOLDEN_PATH} missing — run "
+                "`python -m repro.analysis.jaxpr_audit --write`"
+            )
+        else:
+            audit_problems.extend(
+                jaxpr_audit.check_against_golden(audit_results, golden)
+            )
+        report = {
+            "golden": jaxpr_audit.GOLDEN_PATH,
+            "ok": not audit_problems,
+            "problems": audit_problems,
+            "rows": audit_rows,
+        }
+        with open("AUDIT_report.json", "w") as f:
+            json.dump(report, f, indent=1)
+        print(
+            f"# jaxpr audit: {len(audit_rows)} families, "
+            f"{len(audit_problems)} problem(s) in {time.time() - t0:.1f}s "
+            "-> AUDIT_report.json",
+            file=sys.stderr,
+        )
 
     total_compiles = sum(r["compile_count"] for r in common.COMPILE_STATS)
     if args.json:
@@ -193,6 +241,14 @@ def main(argv=None) -> None:
                 "trace_dir": args.trace_dir,
                 "rows": common.TELEMETRY_STATS,
             }
+        if args.audit:
+            # static program audit: per-family jaxpr fingerprints + any
+            # dtype/effect/telemetry violations or golden-pin drift
+            payload["meta"]["audit"] = {
+                "ok": not audit_problems,
+                "problems": audit_problems,
+                "rows": audit_rows,
+            }
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=1)
         print(f"# wrote {len(common.RESULTS)} rows to {args.json}", file=sys.stderr)
@@ -210,6 +266,17 @@ def main(argv=None) -> None:
             f"{total_compiles}, aot_compile calls {common.AOT_COMPILES}) > "
             f"--max-compiles {args.max_compiles} (per-scenario compiles "
             f"have crept back in; see meta.compile rows)"
+        )
+
+    # jaxpr audit gate: a dtype/effect/telemetry violation or fingerprint
+    # drift fails the run loudly (details already in AUDIT_report.json)
+    if audit_problems:
+        for p in audit_problems:
+            print(f"# audit: {p}", file=sys.stderr)
+        raise SystemExit(
+            f"jaxpr audit gate: {len(audit_problems)} problem(s) — see "
+            "AUDIT_report.json; after an INTENDED program change regen "
+            "pins via `python -m repro.analysis.jaxpr_audit --write`"
         )
 
 

@@ -12,7 +12,6 @@ same colliding spine path.
     PYTHONPATH=src python examples/cluster_contention_demo.py
 """
 import jax
-import numpy as np
 
 from repro.net.cluster import run_cluster
 from repro.net.jobs import compile_job

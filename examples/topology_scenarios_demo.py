@@ -23,7 +23,6 @@ from repro.net import (
     TransportConfig,
     allreduce_cct_shared,
     policy_sweep_params,
-    ring_topology,
     sweep_flows,
 )
 from repro.net.scenarios import SCENARIOS, straggler_worker

@@ -8,11 +8,9 @@ pipeline -> train step (remat + microbatch) -> async atomic checkpoints ->
 kill-and-resume fault tolerance (rerun with --resume).
 """
 import argparse
-import dataclasses
 import time
 
 import jax
-import numpy as np
 
 from repro.ckpt import checkpoint as ckpt
 from repro.configs.base import ArchConfig, LayerSpec

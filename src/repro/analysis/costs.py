@@ -14,7 +14,6 @@ Hardware constants (TPU v5e class, per the brief): 197 TFLOP/s bf16,
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict
 
 import numpy as np

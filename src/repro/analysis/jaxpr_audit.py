@@ -1,0 +1,488 @@
+"""Level-2 static analysis: closed-jaxpr audit of every bench family.
+
+`tools/jaxlint` checks the *source*; this module checks the *traced
+program*.  Each bench family (topology / job / cluster / scaleout /
+bakeoff) is rebuilt here from the `repro.net` APIs at fixed canonical
+shapes — the bench smoke shapes — traced with `jax.make_jaxpr`, and the
+closed jaxpr is walked recursively (into scan/while/cond/pjit
+sub-jaxprs) to assert:
+
+  * no float64/complex128 avals anywhere (the engine is strictly f32 —
+    an accidental x64 promotion would silently change golden traces);
+  * no weak-typed program inputs or outputs (weak types make the jit
+    cache key depend on Python literal context);
+  * no callback/debug/io effects or primitives (host round-trips inside
+    a "pure" family program break determinism and AOT execution);
+  * telemetry-off programs contain zero telemetry ops (the
+    `TelemetryFrame` never appears in the output pytree).
+
+Each family also gets a canonical fingerprint — sha256 over the printed
+closed jaxpr plus the equation count and primitive histogram — stored in
+`tests/golden/program_fingerprints.json`.  An accidental program-structure
+or cache-key change diffs loudly there, complementing the runtime
+`benchmarks.common.compile_gate`.
+
+Regen workflow (after an INTENDED program change, e.g. a new engine
+feature):
+
+    PYTHONPATH=src python -m repro.analysis.jaxpr_audit --write
+    git diff tests/golden/program_fingerprints.json   # review the delta
+
+CLI exit: 0 clean, 1 violations or fingerprint drift, 2 bad usage.
+Importing this module is cheap; families import jax lazily on build.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import os
+import sys
+from collections import Counter
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+_REPO_ROOT = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "..", "..")
+)
+GOLDEN_PATH = os.path.join(
+    _REPO_ROOT, "tests", "golden", "program_fingerprints.json"
+)
+
+# primitives that imply a host round-trip or nondeterministic side channel
+_DENYLIST_PRIM_SUBSTRINGS = ("callback", "infeed", "outfeed", "debug_print")
+
+_BAD_DTYPES = ("float64", "complex128")
+
+
+@dataclasses.dataclass(frozen=True)
+class AuditResult:
+    family: str
+    fingerprint: str
+    n_eqns: int
+    primitives: Dict[str, int]
+    violations: Tuple[str, ...]
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def row(self) -> Dict[str, object]:
+        """The `meta.audit` row shape used by `benchmarks/run.py --audit`."""
+        return {
+            "family": self.family,
+            "fingerprint": self.fingerprint,
+            "n_eqns": self.n_eqns,
+            "ok": self.ok,
+            "violations": list(self.violations),
+        }
+
+
+# --------------------------------------------------------------------------
+# jaxpr walking
+
+
+def _iter_sub_jaxprs(params: Dict[str, object]):
+    """Yield every (Closed)Jaxpr reachable from an equation's params —
+    scan/while/cond bodies, pjit inner jaxprs, custom_* call bodies."""
+    for value in params.values():
+        items = value if isinstance(value, (tuple, list)) else (value,)
+        for item in items:
+            inner = getattr(item, "jaxpr", None)
+            if inner is not None and hasattr(inner, "eqns"):
+                yield inner       # ClosedJaxpr -> its Jaxpr
+            elif hasattr(item, "eqns"):
+                yield item        # bare Jaxpr
+
+
+def _walk_jaxpr(jaxpr, prims: Counter, violations: List[str]) -> int:
+    """Count primitives and collect dtype/denylist violations, recursively.
+    Returns the total (recursive) equation count."""
+    n = 0
+    for eqn in jaxpr.eqns:
+        n += 1
+        name = eqn.primitive.name
+        prims[name] += 1
+        if any(s in name for s in _DENYLIST_PRIM_SUBSTRINGS):
+            violations.append(f"denylisted primitive `{name}`")
+        for var in list(eqn.invars) + list(eqn.outvars):
+            aval = getattr(var, "aval", None)
+            dtype = str(getattr(aval, "dtype", ""))
+            if dtype in _BAD_DTYPES:
+                violations.append(f"{dtype} aval in `{name}`")
+        for sub in _iter_sub_jaxprs(eqn.params):
+            n += _walk_jaxpr(sub, prims, violations)
+    return n
+
+
+def _check_weak_types(closed, violations: List[str]) -> None:
+    for kind, avals in (
+        ("input", closed.in_avals),
+        ("output", closed.out_avals),
+    ):
+        for i, aval in enumerate(avals):
+            if getattr(aval, "weak_type", False):
+                violations.append(
+                    f"weak-typed program {kind} #{i} ({aval}) — the jit "
+                    "cache key would depend on Python literal context"
+                )
+
+
+def audit_program(
+    family: str,
+    fn: Callable,
+    args: Tuple,
+    expect_no_telemetry: bool = True,
+) -> AuditResult:
+    """Trace `fn(*args)` and run every audit check on the closed jaxpr.
+
+    `fn` must close over all static configuration (specs, shapes,
+    horizon) so the positional `args` are exactly the traced operands.
+    """
+    import jax
+
+    # Hermetic trace: the PRINTED form of a jaxpr is sensitive to jax's
+    # process-global tracing caches — a pjit sub-jaxpr reused from an
+    # earlier trace (e.g. a benchmark section that ran before the audit)
+    # prints with different variable/const bookkeeping than a fresh one,
+    # which would make the fingerprint depend on what ran first in the
+    # process.  Clearing the caches before each trace reproduces the
+    # clean-process fingerprint regardless of caller order.
+    jax.clear_caches()
+    closed = jax.make_jaxpr(fn)(*args)
+    prims: Counter = Counter()
+    violations: List[str] = []
+    n_eqns = _walk_jaxpr(closed.jaxpr, prims, violations)
+    _check_weak_types(closed, violations)
+    if closed.effects:
+        violations.append(f"program has effects: {sorted(map(str, closed.effects))}")
+    if expect_no_telemetry:
+        out_shape = jax.eval_shape(fn, *args)
+        structure = str(jax.tree_util.tree_structure(out_shape))
+        if "TelemetryFrame" in structure:
+            violations.append(
+                "telemetry-off program emits a TelemetryFrame output"
+            )
+    # dedupe violations, preserving first-seen order
+    seen = set()
+    uniq = [v for v in violations if not (v in seen or seen.add(v))]
+    canon = f"{closed}\nn_eqns={n_eqns}\nprims={sorted(prims.items())}"
+    fingerprint = hashlib.sha256(canon.encode()).hexdigest()
+    return AuditResult(
+        family=family,
+        fingerprint=fingerprint,
+        n_eqns=n_eqns,
+        primitives=dict(sorted(prims.items())),
+        violations=tuple(uniq),
+    )
+
+
+# --------------------------------------------------------------------------
+# Family programs — the bench smoke shapes, rebuilt from `repro.net` APIs
+# (NOT imported from `benchmarks/`: the audit must stay importable from
+# tests and `run.py` without executing bench mains).
+
+_RATE = 32
+_WORKERS = 4
+
+
+def _baseline_policies():
+    from repro.net.transport import Policy
+
+    return (
+        Policy.ECMP, Policy.RR, Policy.RAND_STATIC,
+        Policy.RAND_ADAPTIVE, Policy.WAM,
+    )
+
+
+def _family_topology():
+    import jax
+
+    from repro.net.scenarios import pair_scenarios, stack_scenarios
+    from repro.net.sender import (
+        SenderSpec, policy_sweep_params, sweep_flows_scenarios,
+    )
+
+    horizon, n_packets, draws = 1024, 256, 2
+    scens = pair_scenarios(8, 4, horizon=horizon)
+    topos, scheds = stack_scenarios(list(scens.values()))
+    spec = SenderSpec(rate_cap=_RATE, early_exit=True)
+    sp = policy_sweep_params(_baseline_policies(), rate=_RATE)
+    keys = jax.random.split(jax.random.PRNGKey(0), draws)
+
+    def program(topos, scheds, sp, keys):
+        return sweep_flows_scenarios(
+            topos, scheds, spec, sp, n_packets, keys, horizon=horizon
+        )
+
+    return program, (topos, scheds, sp, keys)
+
+
+def _family_job():
+    import jax
+
+    from repro.net.jobs import (
+        compile_job, job_step_inputs, sweep_job_steps_scenarios,
+    )
+    from repro.net.scenarios import job_scenarios, stack_pytrees
+    from repro.net.sender import SenderSpec, policy_sweep_params
+
+    horizon, max_shard, draws = 512, 96, 1
+    arches = ("xlstm-350m", "qwen3-8b", "dbrx-132b")
+    jobs = [
+        compile_job(
+            a, workers=_WORKERS, tp=8, iterations=1, rate=_RATE,
+            max_shard=max_shard,
+        )
+        for a in arches
+    ]
+    spec = SenderSpec(rate_cap=_RATE, early_exit=True, exit_chunk=16)
+    sp = policy_sweep_params(_baseline_policies(), rate=_RATE)
+    keys = jax.random.split(jax.random.PRNGKey(0), draws)
+    scens = job_scenarios(workers=_WORKERS, horizon=max(horizon, 2048))
+    inputs = [
+        job_step_inputs(jobs, sched, horizon) for _, sched in scens.values()
+    ]
+    scheds = stack_pytrees([sc for sc, _ in inputs])
+    topos = stack_pytrees([topo for topo, _ in scens.values()])
+    shard = inputs[0][1]
+
+    def program(topos, scheds, sp, shard, keys):
+        return sweep_job_steps_scenarios(
+            topos, scheds, spec, sp, shard, keys, horizon=horizon
+        )
+
+    return program, (topos, scheds, sp, shard, keys)
+
+
+def _family_cluster():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.net.cluster import cluster_inputs, sweep_cluster_rounds_scenarios
+    from repro.net.jobs import compile_job
+    from repro.net.scenarios import cluster_scenarios, stack_pytrees
+    from repro.net.sender import SenderSpec, policy_sweep_params
+
+    horizon, max_shard, draws = 384, 64, 1
+    arches = ("xlstm-350m", "qwen3-8b")
+    jobs = [
+        compile_job(
+            a, workers=_WORKERS, tp=8, iterations=1, rate=_RATE,
+            max_shard=max_shard,
+        )
+        for a in arches
+    ]
+    spec = SenderSpec(rate_cap=_RATE, early_exit=True, exit_chunk=16)
+    sp = policy_sweep_params(_baseline_policies(), rate=_RATE)
+    keys = jax.random.split(jax.random.PRNGKey(0), draws)
+    scens = cluster_scenarios(jobs, horizon=max(horizon, 2048))
+    r_max = max(c.rounds for c, _, _ in scens.values())
+    inputs = [
+        cluster_inputs(c, sched, horizon, rounds=r_max)
+        for c, _, sched in scens.values()
+    ]
+    scheds = stack_pytrees([sc for sc, _ in inputs])
+    sizes = jnp.stack([sz for _, sz in inputs])
+    topos = stack_pytrees([t for _, t, _ in scens.values()])
+
+    def program(topos, scheds, sp, sizes, keys):
+        return sweep_cluster_rounds_scenarios(
+            topos, scheds, spec, sp, sizes, keys, horizon=horizon
+        )
+
+    return program, (topos, scheds, sp, sizes, keys)
+
+
+def _family_scaleout():
+    import jax
+
+    from repro.net.scenarios import fat_tree_scenarios, stack_scenarios
+    from repro.net.sender import (
+        SenderSpec, policy_sweep_params, sweep_flows_scenarios,
+    )
+    from repro.net.transport import Policy
+
+    horizon, n_packets, draws = 1024, 4, 1
+    scens = fat_tree_scenarios(
+        flows=256, horizon=horizon, link_capacity=8.0, host_rate=32.0,
+        n_pods=4, leaves_per_pod=2, spines_per_pod=2, cores_per_spine=2,
+    )
+    topos, scheds = stack_scenarios(list(scens.values()))
+    spec = SenderSpec(rate_cap=_RATE, early_exit=True)
+    sp = policy_sweep_params((Policy.ECMP, Policy.WAM), rate=_RATE)
+    keys = jax.random.split(jax.random.PRNGKey(7), draws)
+
+    def program(topos, scheds, sp, keys):
+        return sweep_flows_scenarios(
+            topos, scheds, spec, sp, n_packets, keys, horizon=horizon
+        )
+
+    return program, (topos, scheds, sp, keys)
+
+
+def _family_bakeoff():
+    import jax
+
+    from repro.net.policies import ALL_POLICIES
+    from repro.net.scenarios import pair_scenarios, stack_scenarios
+    from repro.net.sender import (
+        SenderSpec, policy_sweep_params, spec_for_policies,
+        sweep_flows_scenarios,
+    )
+
+    horizon, n_packets, draws = 1024, 256, 2
+    scens = pair_scenarios(8, 4, horizon=horizon)
+    scens = dict(list(scens.items())[:2])  # the bakeoff smoke subset
+    topos, scheds = stack_scenarios(list(scens.values()))
+    spec = spec_for_policies(
+        SenderSpec(rate_cap=_RATE, early_exit=True), ALL_POLICIES
+    )
+    sp = policy_sweep_params(ALL_POLICIES, rate=_RATE)
+    keys = jax.random.split(jax.random.PRNGKey(0), draws)
+
+    def program(topos, scheds, sp, keys):
+        return sweep_flows_scenarios(
+            topos, scheds, spec, sp, n_packets, keys, horizon=horizon
+        )
+
+    return program, (topos, scheds, sp, keys)
+
+
+FAMILIES: Dict[str, Callable] = {
+    "topology": _family_topology,
+    "job": _family_job,
+    "cluster": _family_cluster,
+    "scaleout": _family_scaleout,
+    "bakeoff": _family_bakeoff,
+}
+
+
+def audit_family(name: str) -> AuditResult:
+    program, args = FAMILIES[name]()
+    return audit_program(name, program, args)
+
+
+def audit_all(families: Optional[Sequence[str]] = None) -> List[AuditResult]:
+    return [audit_family(name) for name in (families or FAMILIES)]
+
+
+# --------------------------------------------------------------------------
+# Golden fingerprints
+
+
+def load_golden(path: str = GOLDEN_PATH) -> Dict[str, Dict]:
+    with open(path, encoding="utf-8") as f:
+        return json.load(f)
+
+
+def write_golden(
+    results: Sequence[AuditResult], path: str = GOLDEN_PATH
+) -> None:
+    payload = {
+        r.family: {
+            "fingerprint": r.fingerprint,
+            "n_eqns": r.n_eqns,
+            "primitives": r.primitives,
+        }
+        for r in results
+    }
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def check_against_golden(
+    results: Sequence[AuditResult], golden: Dict[str, Dict]
+) -> List[str]:
+    """Human-readable mismatch messages (empty = all families pinned)."""
+    problems: List[str] = []
+    for r in results:
+        pin = golden.get(r.family)
+        if pin is None:
+            problems.append(f"{r.family}: no golden fingerprint recorded")
+            continue
+        if pin["fingerprint"] == r.fingerprint:
+            continue
+        detail = [f"{r.family}: fingerprint drift"]
+        if pin["n_eqns"] != r.n_eqns:
+            detail.append(f"n_eqns {pin['n_eqns']} -> {r.n_eqns}")
+        old_p, new_p = pin["primitives"], r.primitives
+        for prim in sorted(set(old_p) | set(new_p)):
+            if old_p.get(prim, 0) != new_p.get(prim, 0):
+                detail.append(
+                    f"`{prim}` x{old_p.get(prim, 0)} -> x{new_p.get(prim, 0)}"
+                )
+        if len(detail) == 1:
+            detail.append(
+                "same structure, different printed jaxpr (shapes/params)"
+            )
+        problems.append("; ".join(detail))
+    return problems
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.jaxpr_audit",
+        description="audit every bench family's closed jaxpr "
+        "(dtype/effect/telemetry discipline + golden fingerprints)",
+        epilog=(
+            "After an INTENDED program change, regenerate the pins with "
+            "`--write` and review the git diff of "
+            "tests/golden/program_fingerprints.json.  Exit: 0 clean, "
+            "1 violations or drift, 2 bad usage."
+        ),
+    )
+    ap.add_argument(
+        "families", nargs="*", default=None,
+        help=f"subset to audit (default: {' '.join(FAMILIES)})",
+    )
+    ap.add_argument(
+        "--write", action="store_true",
+        help="rewrite tests/golden/program_fingerprints.json from this run",
+    )
+    ap.add_argument("--golden", default=GOLDEN_PATH, help=argparse.SUPPRESS)
+    args = ap.parse_args(argv)
+    fams = args.families or list(FAMILIES)
+    unknown = [f for f in fams if f not in FAMILIES]
+    if unknown:
+        print(f"jaxpr_audit: unknown families {unknown}", file=sys.stderr)
+        return 2
+
+    results = audit_all(fams)
+    rc = 0
+    for r in results:
+        status = "ok" if r.ok else "FAIL"
+        print(
+            f"{r.family:9s} {status:4s} eqns={r.n_eqns:5d} "
+            f"fp={r.fingerprint[:16]}"
+        )
+        for v in r.violations:
+            print(f"  violation: {v}")
+            rc = 1
+
+    if args.write:
+        if rc:
+            print("jaxpr_audit: refusing to pin a failing audit",
+                  file=sys.stderr)
+            return 1
+        write_golden(results, args.golden)
+        print(f"jaxpr_audit: wrote {args.golden}")
+        return 0
+
+    try:
+        golden = load_golden(args.golden)
+    except FileNotFoundError:
+        print(
+            f"jaxpr_audit: {args.golden} missing — run with --write",
+            file=sys.stderr,
+        )
+        return 1
+    for msg in check_against_golden(results, golden):
+        print(f"  drift: {msg}")
+        rc = 1
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -10,7 +10,7 @@ alternation) compile as a single `lax.scan` over periods.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
 __all__ = ["ArchConfig", "LayerSpec", "ShapeSpec", "SHAPES", "shape_by_name"]
 

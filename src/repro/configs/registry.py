@@ -1,9 +1,7 @@
 """Architecture registry: --arch <id> resolution + smoke variants."""
 from __future__ import annotations
 
-import dataclasses
 import importlib
-from typing import Callable
 
 from repro.configs.base import ArchConfig
 

@@ -25,9 +25,8 @@ from typing import Tuple
 
 import numpy as np
 
-from repro.core.bitrev import theta
 from repro.core.profile import PathProfile
-from repro.core.spray import SprayMethod, spray_key
+from repro.core.spray import spray_key
 
 __all__ = [
     "spray_keys_np",

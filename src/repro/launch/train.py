@@ -15,7 +15,6 @@ import argparse
 import time
 
 import jax
-import numpy as np
 
 from repro.ckpt import checkpoint as ckpt
 from repro.configs.registry import get_config, get_smoke_config

@@ -23,7 +23,6 @@ from repro.configs.base import ArchConfig, LayerSpec, ShapeSpec
 from repro.dist.sharding import shard
 from repro.models.layers import COMPUTE_DTYPE, rms_norm
 from repro.models.transformer import (
-    cache_len_for,
     init_stack,
     init_stack_cache,
     run_stack_decode,

@@ -16,15 +16,12 @@ Sublayer kinds: attn (self), xattn (cross, enc-dec), mamba, mlstm, slstm.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ArchConfig, LayerSpec
-from repro.dist.sharding import shard
 from repro.models import moe as moe_mod
 from repro.models import ssm
 from repro.models.layers import (

@@ -42,7 +42,6 @@ from repro.net.fabric import FabricParams
 from repro.net.sender import SenderParams, SenderSpec, run_flows
 from repro.net.topology import EventSchedule, TopologyParams, leaf_spine
 from repro.net.transport import (
-    Policy,
     TransportConfig,
     simulate_flows,
     simulate_message,

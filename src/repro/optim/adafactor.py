@@ -8,7 +8,7 @@ update RMS clipping (d=1.0), optional momentum off, decoupled weight decay.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

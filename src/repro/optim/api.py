@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional, Tuple
+from typing import Callable, Tuple
 
 import jax
 import jax.numpy as jnp

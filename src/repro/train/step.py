@@ -14,7 +14,6 @@ examples and tested for exact equivalence with the GSPMD step.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable, Dict, Optional, Tuple
 
 import jax

@@ -3,7 +3,6 @@ import numpy as np
 import pytest
 
 from repro.analysis.costs import (
-    fwd_flops_per_token,
     model_flops,
     param_count,
     roofline_terms,

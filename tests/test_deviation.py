@@ -10,7 +10,7 @@ from repro.core.deviation import (
     max_deviation,
     path_deviations,
 )
-from repro.core.profile import make_profile, quantize_profile
+from repro.core.profile import quantize_profile
 from repro.core.spray import SprayMethod
 
 ELL = 8  # m=256 keeps the exact O(m^2) deviation computation fast

@@ -1,6 +1,5 @@
 """LT fountain code: 'any sufficiently large subset decodes' (paper §1-2)."""
 import numpy as np
-import pytest
 
 from repro.net.fountain import (
     decode_overhead_curve,

@@ -1,0 +1,221 @@
+"""tools/jaxlint: each rule R1-R5 fires on a minimal fixture, the
+suppression contract holds, and the repo itself lints clean."""
+import os
+import sys
+import textwrap
+
+import pytest
+
+_REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+if _REPO_ROOT not in sys.path:
+    sys.path.insert(0, _REPO_ROOT)
+
+from tools.jaxlint import LintError, lint_file, lint_paths  # noqa: E402
+
+
+def _lint_snippet(tmp_path, source, name="snippet.py"):
+    path = tmp_path / name
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(textwrap.dedent(source))
+    return lint_file(str(path))
+
+
+def _rules(findings):
+    return sorted({f.rule for f in findings})
+
+
+# --- one fixture per rule: trips exactly that rule --------------------------
+
+
+def test_r1_python_branch_in_scan_body(tmp_path):
+    findings = _lint_snippet(tmp_path, """
+        import jax
+
+        def tick(carry, x):
+            if x > 0:          # traced `x` in a Python branch
+                carry = carry + 1
+            return carry, x
+
+        def run(xs):
+            return jax.lax.scan(tick, 0, xs)
+    """)
+    assert _rules(findings) == ["R1"]
+    assert len(findings) == 1
+    assert "tick" in findings[0].message
+
+
+def test_r2_host_sync_in_jitted_path(tmp_path):
+    findings = _lint_snippet(tmp_path, """
+        import functools
+        import jax
+        import numpy as np
+
+        @functools.partial(jax.jit, static_argnames=("n",))
+        def f(x, n: int):
+            u = np.asarray(x)      # device->host transfer
+            v = float(x)           # implicit sync
+            w = x.item()           # explicit sync
+            return u + v + w + n
+    """)
+    assert _rules(findings) == ["R2"]
+    assert len(findings) == 3
+
+
+def test_r3_key_reuse(tmp_path):
+    findings = _lint_snippet(tmp_path, """
+        import jax
+
+        def draw(key):
+            a = jax.random.normal(key, (4,))
+            b = jax.random.uniform(key, (4,))   # replayed stream
+            return a + b
+    """)
+    assert _rules(findings) == ["R3"]
+    assert len(findings) == 1
+    assert "key" in findings[0].message
+
+
+def test_r4_static_traced_mismatches(tmp_path):
+    findings = _lint_snippet(tmp_path, """
+        import dataclasses
+        import functools
+        import jax
+
+        @dataclasses.dataclass(frozen=True)
+        class FooSpec:
+            rate: int
+            table: jax.Array            # unhashable leaf in a cache key
+
+        @jax.tree_util.register_dataclass
+        @dataclasses.dataclass
+        class FooState:
+            x: jax.Array
+            label: str                  # non-array traced leaf
+
+        @functools.partial(jax.jit, static_argnames=("st",))
+        def g(st: FooState, sp: FooSpec):   # static pytree + traced spec
+            return st.x * sp.rate
+    """)
+    assert _rules(findings) == ["R4"]
+    assert len(findings) == 4
+
+
+def test_r5_nondeterminism_sources(tmp_path):
+    # R5 applies to simulation modules: path must sit under net/ or core/
+    findings = _lint_snippet(tmp_path / "net", """
+        import time
+        import numpy as np
+
+        def jitter(n):
+            t = time.time()
+            u = np.random.rand(n)
+            rng = np.random.default_rng()
+            for x in {1, 2, 3}:
+                u = u + x
+            return u + t, rng
+    """)
+    assert _rules(findings) == ["R5"]
+    assert len(findings) == 4
+
+
+# --- negative space: repo idioms that must NOT fire -------------------------
+
+
+def test_clean_idioms_pass(tmp_path):
+    findings = _lint_snippet(tmp_path / "net", """
+        import dataclasses
+        import functools
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+
+        @jax.tree_util.register_dataclass
+        @dataclasses.dataclass
+        class State:
+            x: jax.Array
+            ell: int = dataclasses.field(metadata=dict(static=True))
+
+        def tick(carry, x):
+            y = jnp.where(x > 0, carry + 1, carry)   # branchless: fine
+            return y, x
+
+        @functools.partial(jax.jit, static_argnames=("horizon",))
+        def run(xs, key, pstate, horizon: int):
+            if pstate is None:                 # static structure check
+                pstate = 0
+            n = int(xs.shape[-1])              # shape access: static
+            k1, k2 = jax.random.split(key)     # split before each use
+            noise = jax.random.normal(k1, xs.shape)
+            out = jax.lax.scan(tick, 0, xs + noise)
+            keys = jax.random.split(k2, n)
+            a = jnp.stack([keys[i] for i in range(n)])  # distinct sub-keys
+            return out, a, pstate
+
+        def seeded_host(n):
+            rng = np.random.default_rng(1234)  # explicit seed: fine
+            return rng.uniform(size=n)
+    """)
+    assert findings == []
+
+
+def test_r3_branches_may_share_a_key(tmp_path):
+    # lax.switch branches are mutually exclusive: nested defs that each
+    # consume the same closure key are the policies.py idiom, not reuse
+    findings = _lint_snippet(tmp_path, """
+        import jax
+
+        def branches(key, x):
+            def a():
+                return jax.random.normal(key, (4,))
+            def b():
+                return jax.random.uniform(key, (4,))
+            return jax.lax.switch(x, [a, b])
+    """)
+    assert findings == []
+
+
+# --- suppressions -----------------------------------------------------------
+
+
+def test_justified_suppression_silences(tmp_path):
+    findings = _lint_snippet(tmp_path, """
+        import jax
+        import numpy as np
+
+        @jax.jit
+        def f(x):
+            u = np.asarray(x)  # jaxlint: disable=R2 host export boundary
+            return u
+    """)
+    assert findings == []
+
+
+def test_unjustified_suppression_is_an_error(tmp_path):
+    findings = _lint_snippet(tmp_path, """
+        import jax
+        import numpy as np
+
+        @jax.jit
+        def f(x):
+            u = np.asarray(x)  # jaxlint: disable=R2
+            return u
+    """)
+    # the bare suppression reports R0 AND does not silence the R2
+    assert _rules(findings) == ["R0", "R2"]
+
+
+def test_unreadable_input_raises_lint_error(tmp_path):
+    with pytest.raises(LintError):
+        lint_paths([str(tmp_path / "missing.py")])
+
+
+# --- the repo's own linted tree stays clean ---------------------------------
+
+
+def test_repo_lints_clean():
+    findings = lint_paths([
+        os.path.join(_REPO_ROOT, "src", "repro", "net"),
+        os.path.join(_REPO_ROOT, "src", "repro", "core"),
+        os.path.join(_REPO_ROOT, "src", "repro", "kernels"),
+    ])
+    assert findings == [], "\n".join(f.render() for f in findings)

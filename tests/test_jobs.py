@@ -21,7 +21,6 @@ from repro.net.jobs import (
     scheduled_events,
     step_table,
     sweep_job,
-    sweep_job_steps,
     total_packets,
 )
 from repro.net.scenarios import JOB_SCENARIO_NAMES, job_scenarios

@@ -4,13 +4,12 @@ All kernels run in interpret mode on CPU (the body executes in Python);
 integer kernels must match EXACTLY, float kernels to f32 accumulation tol.
 """
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core.profile import make_profile, quantize_profile
+from repro.core.profile import quantize_profile
 from repro.kernels import ops, ref
 
 RNG = np.random.default_rng(42)

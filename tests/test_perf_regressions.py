@@ -15,7 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.registry import ARCH_IDS, get_config
+from repro.configs.registry import get_config
 from repro.kernels import ref
 
 

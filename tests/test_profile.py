@@ -5,11 +5,9 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, strategies as st
 
 from repro.core.profile import (
-    PathProfile,
     cumulative,
     from_cumulative,
     make_profile,
-    quantize_counts,
     quantize_profile,
     uniform_profile,
     validate_profile,

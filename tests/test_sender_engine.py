@@ -16,7 +16,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.net.fabric import FabricParams
 from repro.net.sender import (
     BASELINE_POLICIES,
     Policy,

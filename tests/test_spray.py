@@ -1,5 +1,4 @@
 """Packet spraying (paper §4): selection rule, seeds, memorylessness."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -8,7 +7,7 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, strategies as st
 
-from repro.core.profile import make_profile, quantize_profile, uniform_profile
+from repro.core.profile import make_profile
 from repro.core.spray import (
     SprayMethod,
     make_spray_state,

@@ -62,9 +62,5 @@ def test_twophase_schedule_never_worse_than_static(l1, l2, b1, b2, mbit):
 
 
 def test_completion_raises_when_schedule_starves():
-    with np.errstate(all="ignore"):
-        try:
-            completion_time(10.0, PATHS, [Phase(1.0, (1, 0))])
-            assert False, "should have raised"
-        except ValueError:
-            pass
+    with np.errstate(all="ignore"), pytest.raises(ValueError):
+        completion_time(10.0, PATHS, [Phase(1.0, (1, 0))])

@@ -1,0 +1,48 @@
+"""CLI smoke tests: tools scripts exit non-zero (not traceback) on
+unreadable inputs and document themselves via --help epilogs."""
+import os
+import subprocess
+import sys
+
+_REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _run(*argv):
+    return subprocess.run(
+        [sys.executable, *argv], cwd=_REPO_ROOT,
+        capture_output=True, text=True, timeout=120,
+    )
+
+
+def test_check_links_unreadable_input_exits_2(tmp_path):
+    # a directory named like a file is the portable "unreadable" case
+    # (chmod 000 is a no-op for root); argparse epilog rides along
+    unreadable = tmp_path / "not_a_file.md"
+    unreadable.mkdir()
+    r = _run("tools/check_links.py", str(unreadable))
+    assert r.returncode == 2
+    assert "unreadable" in r.stderr
+    assert "Traceback" not in r.stderr
+
+    h = _run("tools/check_links.py", "--help")
+    assert h.returncode == 0
+    assert "Exit:" in h.stdout
+
+
+def test_trace_report_unreadable_input_exits_2(tmp_path):
+    r = _run(
+        "tools/trace_report.py", "--summary", str(tmp_path / "missing.jsonl")
+    )
+    assert r.returncode == 2
+    assert "unreadable" in r.stderr
+    assert "Traceback" not in r.stderr
+
+    unreadable = tmp_path / "not_a_trace.json"
+    unreadable.mkdir()
+    p = _run("tools/trace_report.py", "--check-perfetto", str(unreadable))
+    assert p.returncode == 2
+    assert "Traceback" not in p.stderr
+
+    h = _run("tools/trace_report.py", "--help")
+    assert h.returncode == 0
+    assert "Exit:" in h.stdout

@@ -1,0 +1,2 @@
+"""Repo tooling: standalone scripts (check_links, trace_report) and the
+`tools.jaxlint` package (`python -m tools.jaxlint` — see make lint-jax)."""

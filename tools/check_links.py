@@ -12,6 +12,7 @@ every broken link — the docs step of `make check` / CI.
 """
 from __future__ import annotations
 
+import argparse
 import glob
 import os
 import re
@@ -25,10 +26,20 @@ LINK_RE = re.compile(r"\[[^\]\[]*\]\(([^)\s]+)\)")
 DEFAULT_FILES = ("README.md", "ROADMAP.md", "docs/*.md")
 
 
+class UnreadableInput(Exception):
+    """Raised for inputs that exist in the arg list but cannot be read."""
+
+
 def check_file(path: str) -> list[str]:
     errors = []
     base = os.path.dirname(os.path.abspath(path))
-    with open(path, encoding="utf-8") as f:
+    try:
+        f = open(path, encoding="utf-8")
+    except OSError as e:
+        raise UnreadableInput(
+            f"{path}: unreadable ({e.strerror or e})"
+        ) from e
+    with f:
         for lineno, line in enumerate(f, 1):
             for target in LINK_RE.findall(line):
                 if target.startswith(("http://", "https://", "mailto:")):
@@ -41,15 +52,34 @@ def check_file(path: str) -> list[str]:
     return errors
 
 
-def main(argv: list[str]) -> int:
-    patterns = argv or list(DEFAULT_FILES)
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python tools/check_links.py",
+        description="relative-link checker for the repo's markdown docs",
+        epilog=(
+            "Globs are expanded by the script, so quoting 'docs/*.md' "
+            "works in any shell.  Exit: 0 all links resolve, 1 broken "
+            "links (each listed on stderr), 2 no matching or unreadable "
+            "input files.  Default file set: " + " ".join(DEFAULT_FILES)
+        ),
+    )
+    ap.add_argument(
+        "patterns", nargs="*", metavar="FILE_OR_GLOB",
+        help="markdown files or globs (default: the repo doc set)",
+    )
+    args = ap.parse_args(argv)
+    patterns = args.patterns or list(DEFAULT_FILES)
     files = sorted({f for p in patterns for f in glob.glob(p)})
     if not files:
         print(f"check_links: no files match {patterns}", file=sys.stderr)
         return 2
     errors = []
     for path in files:
-        errors.extend(check_file(path))
+        try:
+            errors.extend(check_file(path))
+        except UnreadableInput as e:
+            print(f"check_links: {e}", file=sys.stderr)
+            return 2
     for e in errors:
         print(e, file=sys.stderr)
     print(f"check_links: {len(files)} files, {len(errors)} broken links")
@@ -57,4 +87,4 @@ def main(argv: list[str]) -> int:
 
 
 if __name__ == "__main__":
-    raise SystemExit(main(sys.argv[1:]))
+    raise SystemExit(main())

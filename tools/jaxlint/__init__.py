@@ -1,0 +1,37 @@
+"""jaxlint — repo-specific AST rules for tracer discipline.
+
+The repo's core guarantees (bit-identical golden traces, one-compile-per-
+family sweeps, the static `SenderSpec` / traced `SenderParams` split) are
+invariants of HOW the jax code is written, not just of what it computes.
+This package checks the writing statically, before a runtime test has to
+catch the symptom:
+
+  R1  no Python `if`/`while` on traced values inside scan/tick bodies
+      (a traced branch either crashes at trace time or, worse, freezes one
+      branch into the compiled program);
+  R2  no host-sync calls (`.item()`, `float()`/`int()` on arrays,
+      `np.asarray` on traced values) inside jitted code paths;
+  R3  RNG key discipline: a key consumed twice without an interleaving
+      `split`/`fold_in` replays the stream (identical "random" draws);
+  R4  static-spec dataclasses hold only hashable leaves, traced pytrees
+      only array leaves, and jit `static_argnames` agree with the
+      annotations (the trace-boundary contract of `repro.net.sender`);
+  R5  no nondeterminism sources (`np.random.*` module calls, wall-clock
+      time, stdlib `random`, set iteration) in simulation modules.
+
+Findings are suppressible per line with a justification::
+
+    x = np.asarray(v)  # jaxlint: disable=R2 host-side export path
+
+A suppression without a justification is itself an error.  CLI:
+
+    python -m tools.jaxlint src/repro/net src/repro/core src/repro/kernels
+"""
+from tools.jaxlint.engine import (  # noqa: F401
+    Finding,
+    LintError,
+    RULES,
+    lint_file,
+    lint_paths,
+    main,
+)

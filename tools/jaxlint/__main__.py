@@ -1,0 +1,7 @@
+"""CLI entry: `python -m tools.jaxlint [paths...]` (see `make lint-jax`)."""
+import sys
+
+from tools.jaxlint.engine import main
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,419 @@
+"""jaxlint engine: file walking, suppression handling, cross-file registry.
+
+Two passes over the linted tree:
+
+  1. `collect_module` gathers the trace-boundary facts rules need across
+     file borders — dataclass field annotations (pytree-registered vs
+     plain), enum names, and every `jax.jit` callsite's static_argnames /
+     static_argnums with the jitted function's parameter annotations;
+  2. each file is linted with the merged `Registry` in scope, so R4 can
+     cross-check e.g. `SenderSpec` (defined in sender.py) against a jit
+     callsite in cluster.py.
+
+Suppressions are per line::
+
+    u = np.asarray(x)  # jaxlint: disable=R2 host export boundary
+
+and apply to the flagged line or the line directly above (for findings on
+wrapped statements).  The justification text is REQUIRED: a bare
+`# jaxlint: disable=R2` is reported as `R0` (unjustified suppression)
+instead of silencing anything.  `# jaxlint: disable-file=R5 <reason>`
+anywhere in a file suppresses a rule file-wide (same justification rule).
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import dataclasses
+import os
+import re
+import sys
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+RULES: Dict[str, str] = {
+    "R0": "suppression without justification",
+    "R1": "Python if/while on a traced value inside a scan/tick body",
+    "R2": "host-sync call inside a jitted code path",
+    "R3": "RNG key consumed twice without an interleaving split/fold_in",
+    "R4": "static/traced dataclass field or jit static_argnames mismatch",
+    "R5": "nondeterminism source in a simulation module",
+}
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*jaxlint:\s*disable(?P<scope>-file)?=(?P<rules>[A-Z0-9,]+)"
+    r"[ \t]*(?P<reason>[^\n]*)"
+)
+
+
+class LintError(Exception):
+    """Unreadable input or unparseable source — the CLI exits 2 on these."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+
+@dataclasses.dataclass(frozen=True)
+class FieldInfo:
+    name: str
+    anno: str          # ast.unparse of the annotation ("" if missing)
+    static: bool       # dataclasses.field(metadata=dict(static=True))
+    line: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ClassInfo:
+    name: str
+    path: str
+    line: int
+    pytree: bool       # @jax.tree_util.register_dataclass
+    is_dataclass: bool
+    is_enum: bool
+    fields: Tuple[FieldInfo, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class JitSite:
+    """A function wrapped in jax.jit (decorator or partial(jax.jit, ...))."""
+
+    name: str
+    path: str
+    line: int
+    static_names: Tuple[str, ...]
+    params: Tuple[Tuple[str, str], ...]  # (name, annotation string)
+
+
+@dataclasses.dataclass
+class Registry:
+    classes: Dict[str, ClassInfo] = dataclasses.field(default_factory=dict)
+    jit_sites: List[JitSite] = dataclasses.field(default_factory=list)
+
+    def merge(self, other: "Registry") -> None:
+        self.classes.update(other.classes)
+        self.jit_sites.extend(other.jit_sites)
+
+
+# --------------------------------------------------------------------------
+# AST helpers shared with rules.py
+
+
+def dotted_name(node: ast.AST) -> str:
+    """'jax.lax.scan' for Attribute/Name chains, '' for anything else."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def unparse(node: Optional[ast.AST]) -> str:
+    if node is None:
+        return ""
+    try:
+        return ast.unparse(node)
+    except Exception:
+        return ""
+
+
+def _is_jit_expr(node: ast.AST) -> bool:
+    return dotted_name(node).split(".")[-1] == "jit"
+
+
+def jit_static_names(dec: ast.AST, params: Sequence[str]) -> Optional[Tuple[str, ...]]:
+    """static_argnames of a jit decorator, or None if `dec` is not one.
+
+    Handles ``@jax.jit``, ``@functools.partial(jax.jit, static_argnames=
+    (...))`` and ``@jax.jit(... static_argnums=(...))``; argnums map to
+    `params` positions.
+    """
+    if _is_jit_expr(dec):
+        return ()
+    if not isinstance(dec, ast.Call):
+        return None
+    callee = dotted_name(dec.func)
+    is_partial = callee.split(".")[-1] == "partial"
+    if is_partial:
+        if not (dec.args and _is_jit_expr(dec.args[0])):
+            return None
+    elif not _is_jit_expr(dec.func):
+        return None
+    names: List[str] = []
+    for kw in dec.keywords:
+        if kw.arg == "static_argnames":
+            for el in ast.walk(kw.value):
+                if isinstance(el, ast.Constant) and isinstance(el.value, str):
+                    names.append(el.value)
+        if kw.arg == "static_argnums":
+            for el in ast.walk(kw.value):
+                if isinstance(el, ast.Constant) and isinstance(el.value, int):
+                    if 0 <= el.value < len(params):
+                        names.append(params[el.value])
+    return tuple(names)
+
+
+def func_params(fn: ast.FunctionDef) -> List[Tuple[str, str]]:
+    """[(name, annotation string)] over positional/kw-only args (self-free)."""
+    args = list(fn.args.posonlyargs) + list(fn.args.args) + list(fn.args.kwonlyargs)
+    out = []
+    for a in args:
+        if a.arg in ("self", "cls"):
+            continue
+        out.append((a.arg, unparse(a.annotation)))
+    return out
+
+
+def _field_is_static(value: Optional[ast.AST]) -> bool:
+    """True for `dataclasses.field(metadata=dict(static=True))`-style values
+    (the `jax.tree_util.register_dataclass` static-leaf convention)."""
+    if not isinstance(value, ast.Call):
+        return False
+    if dotted_name(value.func).split(".")[-1] != "field":
+        return False
+    for kw in value.keywords:
+        if kw.arg == "metadata":
+            text = unparse(kw.value)
+            if re.search(r"[\"']?static[\"']?\s*[:=]\s*True", text):
+                return True
+    return False
+
+
+_ENUM_BASES = {"Enum", "IntEnum", "IntFlag", "StrEnum", "Flag"}
+
+
+def collect_module(path: str, tree: ast.Module) -> Registry:
+    """Pass 1: dataclass/pytree/enum classes + jit callsites of one file."""
+    reg = Registry()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef):
+            dec_names = [dotted_name(d if not isinstance(d, ast.Call) else d.func)
+                         for d in node.decorator_list]
+            pytree = any(d.split(".")[-1] == "register_dataclass" for d in dec_names)
+            is_dc = any(d.split(".")[-1] == "dataclass" for d in dec_names)
+            is_enum = any(
+                dotted_name(b).split(".")[-1] in _ENUM_BASES for b in node.bases
+            )
+            fields = []
+            for stmt in node.body:
+                if isinstance(stmt, ast.AnnAssign) and isinstance(
+                    stmt.target, ast.Name
+                ):
+                    fields.append(
+                        FieldInfo(
+                            name=stmt.target.id,
+                            anno=unparse(stmt.annotation),
+                            static=_field_is_static(stmt.value),
+                            line=stmt.lineno,
+                        )
+                    )
+            reg.classes[node.name] = ClassInfo(
+                name=node.name, path=path, line=node.lineno, pytree=pytree,
+                is_dataclass=is_dc, is_enum=is_enum, fields=tuple(fields),
+            )
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            params = func_params(node)
+            for dec in node.decorator_list:
+                statics = jit_static_names(dec, [p for p, _ in params])
+                if statics is not None:
+                    reg.jit_sites.append(
+                        JitSite(
+                            name=node.name, path=path, line=node.lineno,
+                            static_names=statics, params=tuple(params),
+                        )
+                    )
+                    break
+    return reg
+
+
+# --------------------------------------------------------------------------
+# Suppressions
+
+
+@dataclasses.dataclass
+class Suppressions:
+    by_line: Dict[int, Set[str]]
+    file_wide: Set[str]
+    unjustified: List[Finding]
+
+    def covers(self, finding: Finding) -> bool:
+        if finding.rule in self.file_wide:
+            return True
+        for line in (finding.line, finding.line - 1):
+            if finding.rule in self.by_line.get(line, ()):
+                return True
+        return False
+
+
+def parse_suppressions(path: str, source: str) -> Suppressions:
+    by_line: Dict[int, Set[str]] = {}
+    file_wide: Set[str] = set()
+    unjustified: List[Finding] = []
+    for lineno, line in enumerate(source.splitlines(), 1):
+        m = _SUPPRESS_RE.search(line)
+        if not m:
+            continue
+        rules = {r for r in m.group("rules").split(",") if r}
+        if not m.group("reason").strip():
+            unjustified.append(
+                Finding(
+                    "R0", path, lineno,
+                    "suppression needs a justification: "
+                    "`# jaxlint: disable=<rule> <why this is safe>`",
+                )
+            )
+            continue
+        if m.group("scope"):
+            file_wide |= rules
+        else:
+            by_line.setdefault(lineno, set()).update(rules)
+    return Suppressions(by_line, file_wide, unjustified)
+
+
+# --------------------------------------------------------------------------
+# Linting drivers
+
+
+def _read(path: str) -> str:
+    try:
+        with open(path, encoding="utf-8") as f:
+            return f.read()
+    except OSError as e:
+        raise LintError(f"{path}: unreadable ({e.strerror or e})") from e
+
+
+def _parse(path: str, source: str) -> ast.Module:
+    try:
+        return ast.parse(source, filename=path)
+    except SyntaxError as e:
+        raise LintError(f"{path}:{e.lineno}: syntax error: {e.msg}") from e
+
+
+def iter_py_files(paths: Iterable[str]) -> List[str]:
+    files: List[str] = []
+    for p in paths:
+        if os.path.isdir(p):
+            for root, _dirs, names in os.walk(p):
+                files.extend(
+                    os.path.join(root, n) for n in names if n.endswith(".py")
+                )
+        elif p.endswith(".py"):
+            files.append(p)
+        else:
+            raise LintError(f"{p}: not a .py file or directory")
+    missing = [p for p in files if not os.path.exists(p)]
+    if missing:
+        raise LintError(f"{missing[0]}: no such file")
+    return sorted(set(files))
+
+
+def lint_file(
+    path: str,
+    registry: Optional[Registry] = None,
+    source: Optional[str] = None,
+    rules: Optional[Set[str]] = None,
+) -> List[Finding]:
+    """Lint one file.  With no `registry`, a single-file registry is built
+    (fixture mode — cross-file R4 checks then see only this file)."""
+    from tools.jaxlint import rules as rulemod
+
+    src = _read(path) if source is None else source
+    tree = _parse(path, src)
+    if registry is None:
+        registry = collect_module(path, tree)
+    sup = parse_suppressions(path, src)
+    findings = list(sup.unjustified)
+    for check in rulemod.ALL_CHECKS:
+        for f in check(path, tree, registry):
+            if rules is not None and f.rule not in rules:
+                continue
+            if not sup.covers(f):
+                findings.append(f)
+    if rules is not None:
+        findings = [f for f in findings if f.rule in rules or f.rule == "R0"]
+    return sorted(findings, key=lambda f: (f.path, f.line, f.rule))
+
+
+def lint_paths(
+    paths: Sequence[str], rules: Optional[Set[str]] = None
+) -> List[Finding]:
+    """Two-pass lint over files/directories with a shared registry."""
+    files = iter_py_files(paths)
+    registry = Registry()
+    parsed: List[Tuple[str, str, ast.Module]] = []
+    for path in files:
+        src = _read(path)
+        tree = _parse(path, src)
+        parsed.append((path, src, tree))
+        registry.merge(collect_module(path, tree))
+    findings: List[Finding] = []
+    for path, src, tree in parsed:
+        findings.extend(
+            lint_file(path, registry=registry, source=src, rules=rules)
+        )
+    return findings
+
+
+DEFAULT_PATHS = (
+    "src/repro/net",
+    "src/repro/core",
+    "src/repro/kernels",
+)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.jaxlint",
+        description="repo-specific jax tracer-discipline linter (R1-R5)",
+        epilog=(
+            "rules: "
+            + "; ".join(f"{k}={v}" for k, v in RULES.items())
+            + ".  Suppress per line with `# jaxlint: disable=R3 <reason>` "
+            "(justification required).  Exit: 0 clean, 1 findings, "
+            "2 unreadable/unparseable input."
+        ),
+    )
+    ap.add_argument(
+        "paths", nargs="*", default=list(DEFAULT_PATHS),
+        help=f"files/dirs to lint (default: {' '.join(DEFAULT_PATHS)})",
+    )
+    ap.add_argument(
+        "--select", metavar="RULES", default=None,
+        help="comma-separated rule subset, e.g. --select R1,R3",
+    )
+    ap.add_argument(
+        "--list-rules", action="store_true", help="print the rule catalog"
+    )
+    args = ap.parse_args(argv)
+    if args.list_rules:
+        for rid, desc in RULES.items():
+            print(f"{rid}  {desc}")
+        return 0
+    selected = None
+    if args.select:
+        selected = {r.strip() for r in args.select.split(",") if r.strip()}
+        unknown = selected - set(RULES)
+        if unknown:
+            print(f"jaxlint: unknown rule(s): {sorted(unknown)}", file=sys.stderr)
+            return 2
+    try:
+        findings = lint_paths(args.paths, rules=selected)
+    except LintError as e:
+        print(f"jaxlint: error: {e}", file=sys.stderr)
+        return 2
+    for f in findings:
+        print(f.render())
+    n_files = len(iter_py_files(args.paths))
+    print(
+        f"jaxlint: {n_files} files, {len(findings)} finding(s)",
+        file=sys.stderr,
+    )
+    return 1 if findings else 0

@@ -1,0 +1,782 @@
+"""jaxlint rule implementations (R1-R5).
+
+Each check is `check(path, tree, registry) -> list[Finding]`.  The checks
+are deliberately conservative: they follow annotations and module-local
+call edges only, and every exemption below exists because a legitimate
+repo idiom would otherwise fire (listed per rule).
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from tools.jaxlint.engine import (
+    Finding,
+    Registry,
+    dotted_name,
+    func_params,
+    unparse,
+)
+
+# --------------------------------------------------------------------------
+# Annotation classification
+#
+# "Static" annotations are hashable host values that jit can use as cache
+# keys; everything else (arrays, pytrees, unannotated) is assumed traced.
+
+_STATIC_ANNO_TOKENS = {
+    "int", "float", "bool", "str", "bytes", "None", "Optional", "Union",
+    "Tuple", "tuple", "FrozenSet", "frozenset", "Callable", "Sequence",
+    "Literal", "type", "Type", "Ellipsis",
+    # host-side jax objects that are never traced
+    "Mesh", "Sharding", "NamedSharding", "PartitionSpec",
+    "typing", "collections", "abc",
+}
+
+_ARRAY_ANNO_TOKENS = {
+    "jax", "jnp", "np", "numpy", "Array", "ndarray", "ArrayLike",
+    "Optional", "None", "Union",
+}
+
+_IDENT_RE = re.compile(r"[A-Za-z_][A-Za-z0-9_]*")
+
+
+def _anno_tokens(anno: str) -> List[str]:
+    return _IDENT_RE.findall(anno)
+
+
+def anno_is_static(anno: str, registry: Registry) -> bool:
+    """Annotation resolves entirely to hashable host types."""
+    toks = _anno_tokens(anno)
+    if not toks:
+        return False
+    for t in toks:
+        if t in _STATIC_ANNO_TOKENS:
+            continue
+        ci = registry.classes.get(t)
+        if ci is not None and (ci.is_enum or (ci.is_dataclass and not ci.pytree)):
+            continue
+        return False
+    return True
+
+
+def anno_is_array(anno: str, registry: Registry) -> bool:
+    """Annotation is an array (or Optional[array])."""
+    toks = _anno_tokens(anno)
+    if not toks:
+        return False
+    has_array = any(t in ("Array", "ndarray", "ArrayLike") for t in toks)
+    return has_array and all(t in _ARRAY_ANNO_TOKENS for t in toks)
+
+
+def anno_is_pytree(anno: str, registry: Registry) -> bool:
+    """Annotation names a register_dataclass pytree (possibly Optional)."""
+    toks = [
+        t for t in _anno_tokens(anno)
+        if t not in ("Optional", "Union", "None", "Tuple", "tuple", "List", "list")
+    ]
+    if not toks:
+        return False
+    return all(
+        t in registry.classes and registry.classes[t].pytree for t in toks
+    )
+
+
+def _param_is_traced(anno: str, registry: Registry) -> bool:
+    """Unannotated or array/pytree-annotated params are treated as traced."""
+    if not anno:
+        return True
+    return not anno_is_static(anno, registry)
+
+
+# --------------------------------------------------------------------------
+# Shared context discovery: which functions run under trace?
+
+
+_LOOP_CALLEES = ("scan", "while_loop", "fori_loop", "cond", "switch", "map")
+
+
+def _functions(tree: ast.Module) -> List[ast.FunctionDef]:
+    return [
+        n for n in ast.walk(tree)
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+    ]
+
+
+def _jit_function_names(registry: Registry, path: str) -> Set[str]:
+    return {s.name for s in registry.jit_sites if s.path == path}
+
+
+def _scan_body_names(tree: ast.Module) -> Set[str]:
+    """Local function names passed as callables into lax control-flow ops
+    (scan/while_loop/fori_loop/cond/switch/map) or *scan-like helpers
+    (any callee whose name contains 'scan')."""
+    names: Set[str] = set()
+    for call in ast.walk(tree):
+        if not isinstance(call, ast.Call):
+            continue
+        callee = dotted_name(call.func)
+        last = callee.split(".")[-1]
+        if last not in _LOOP_CALLEES and "scan" not in last:
+            continue
+        for arg in list(call.args) + [kw.value for kw in call.keywords]:
+            if isinstance(arg, ast.Name):
+                names.add(arg.id)
+            elif isinstance(arg, (ast.List, ast.Tuple)):
+                for el in arg.elts:
+                    if isinstance(el, ast.Name):
+                        names.add(el.id)
+    return names
+
+
+def _call_graph(tree: ast.Module) -> Dict[str, Set[str]]:
+    """caller name -> module-local callee Names used inside it (calls or
+    callable references), nested defs included under the outermost def."""
+    graph: Dict[str, Set[str]] = {}
+    defined = {f.name for f in _functions(tree)}
+    for fn in _functions(tree):
+        callees: Set[str] = set()
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                callee = dotted_name(node.func)
+                if callee in defined:
+                    callees.add(callee)
+            elif isinstance(node, ast.Name) and node.id in defined:
+                callees.add(node.id)
+        callees.discard(fn.name)
+        graph[fn.name] = callees
+    return graph
+
+
+def _traced_context_names(
+    tree: ast.Module, registry: Registry, path: str
+) -> Set[str]:
+    """Functions that execute under jax tracing: jit roots, scan bodies,
+    and everything reachable from them through module-local calls."""
+    roots = _jit_function_names(registry, path) | _scan_body_names(tree)
+    graph = _call_graph(tree)
+    seen = set(roots)
+    todo = list(roots)
+    while todo:
+        cur = todo.pop()
+        for nxt in graph.get(cur, ()):
+            if nxt not in seen:
+                seen.add(nxt)
+                todo.append(nxt)
+    return seen
+
+
+def _toplevel_defs(fn: ast.FunctionDef) -> List[ast.FunctionDef]:
+    out = []
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) and node is not fn:
+            out.append(node)
+    return out
+
+
+def _own_nodes(fn: ast.FunctionDef) -> Iterable[ast.AST]:
+    """Walk fn's body without descending into nested function/lambda bodies."""
+    nested = set()
+    for d in _toplevel_defs(fn):
+        nested.update(id(x) for x in ast.walk(d) if x is not d)
+    for l in [n for n in ast.walk(fn) if isinstance(n, ast.Lambda)]:
+        nested.update(id(x) for x in ast.walk(l.body))
+    for node in ast.walk(fn):
+        if id(node) not in nested:
+            yield node
+
+
+# --------------------------------------------------------------------------
+# Taint: which local names hold traced values?
+
+
+def _initial_taint(fn: ast.FunctionDef, registry: Registry) -> Set[str]:
+    return {
+        name for name, anno in func_params(fn)
+        if _param_is_traced(anno, registry)
+    }
+
+
+_UNTAINTING_CALLS = {
+    # calls whose results are host values even on traced args
+    "len", "range", "isinstance", "type", "enumerate", "zip",
+}
+
+_SHAPE_ATTRS = (".shape", ".ndim", ".dtype", ".size", "len(")
+
+
+def _expr_tainted(node: ast.AST, taint: Set[str]) -> bool:
+    """Does the expression (conservatively) involve a traced name?
+
+    Exemptions: `x is None` / `is not` tests, and anything routed through
+    `.shape` / `.ndim` / `.dtype` / `len()` — those are static under trace.
+    """
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Attribute) and sub.attr in (
+            "shape", "ndim", "dtype", "size",
+        ):
+            return False if sub is node else _expr_tainted_skip(node, taint, sub)
+        if isinstance(sub, ast.Name) and sub.id in taint:
+            return True
+    return False
+
+
+def _expr_tainted_skip(node: ast.AST, taint: Set[str], skip: ast.AST) -> bool:
+    dead = {id(x) for x in ast.walk(skip)}
+    for sub in ast.walk(node):
+        if id(sub) in dead:
+            continue
+        if isinstance(sub, ast.Name) and sub.id in taint:
+            return True
+    return False
+
+
+def _test_exempt(test: ast.AST) -> bool:
+    """`if x is None:` style structure checks are static, not traced."""
+    if isinstance(test, ast.Compare) and all(
+        isinstance(op, (ast.Is, ast.IsNot)) for op in test.ops
+    ):
+        return True
+    if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+        return _test_exempt(test.operand)
+    if isinstance(test, ast.BoolOp):
+        return all(_test_exempt(v) for v in test.values)
+    # `if spec.telemetry:` — attribute off an untraced spec handled by taint
+    return False
+
+
+def _propagate_taint(fn: ast.FunctionDef, registry: Registry) -> Set[str]:
+    """Forward-propagate taint through top-level assignments of `fn`."""
+    taint = _initial_taint(fn, registry)
+    nested = {d.name for d in _toplevel_defs(fn)}
+
+    def targets_of(stmt: ast.stmt) -> List[str]:
+        tgts: List[ast.expr] = []
+        if isinstance(stmt, ast.Assign):
+            tgts = list(stmt.targets)
+        elif isinstance(stmt, (ast.AnnAssign, ast.AugAssign)):
+            tgts = [stmt.target]
+        names = []
+        for t in tgts:
+            for sub in ast.walk(t):
+                if isinstance(sub, ast.Name):
+                    names.append(sub.id)
+        return names
+
+    def visit(stmts: Sequence[ast.stmt]) -> None:
+        for stmt in stmts:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if isinstance(stmt, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+                value = getattr(stmt, "value", None)
+                if value is None:
+                    continue
+                is_tainted = _expr_tainted(value, taint)
+                if isinstance(value, ast.Call):
+                    callee = dotted_name(value.func).split(".")[-1]
+                    if callee in _UNTAINTING_CALLS:
+                        is_tainted = False
+                for name in targets_of(stmt):
+                    if name in nested:
+                        continue
+                    if is_tainted:
+                        taint.add(name)
+                    else:
+                        taint.discard(name)
+            elif isinstance(stmt, ast.For):
+                if _expr_tainted(stmt.iter, taint):
+                    for sub in ast.walk(stmt.target):
+                        if isinstance(sub, ast.Name):
+                            taint.add(sub.id)
+                visit(stmt.body)
+                visit(stmt.orelse)
+            elif isinstance(stmt, (ast.If, ast.While)):
+                visit(stmt.body)
+                visit(stmt.orelse)
+            elif isinstance(stmt, ast.With):
+                visit(stmt.body)
+            elif isinstance(stmt, ast.Try):
+                visit(stmt.body)
+                for h in stmt.handlers:
+                    visit(h.body)
+                visit(stmt.orelse)
+                visit(stmt.finalbody)
+
+    visit(fn.body)
+    return taint
+
+
+# --------------------------------------------------------------------------
+# R1 — Python if/while on traced values inside scan/tick bodies
+
+
+def check_r1(path: str, tree: ast.Module, registry: Registry) -> List[Finding]:
+    findings: List[Finding] = []
+    bodies = _scan_body_names(tree)
+    for fn in _functions(tree):
+        if fn.name not in bodies:
+            continue
+        taint = _propagate_taint(fn, registry)
+        for node in _own_nodes(fn):
+            if not isinstance(node, (ast.If, ast.While)):
+                continue
+            if _test_exempt(node.test):
+                continue
+            if _expr_tainted(node.test, taint):
+                kind = "if" if isinstance(node, ast.If) else "while"
+                findings.append(
+                    Finding(
+                        "R1", path, node.lineno,
+                        f"Python `{kind}` on traced value "
+                        f"`{unparse(node.test)}` inside scan body "
+                        f"`{fn.name}` — use jnp.where/lax.cond",
+                    )
+                )
+    return findings
+
+
+# --------------------------------------------------------------------------
+# R2 — host-sync calls in jitted code paths
+
+
+_HOST_SYNC_ATTRS = {"item", "tolist", "block_until_ready", "copy_to_host_async"}
+_HOST_SYNC_NP = {"asarray", "array", "save", "savez", "asnumpy"}
+_CASTS = {"int", "float", "bool", "complex"}
+
+
+def _shape_routed(node: ast.AST) -> bool:
+    text = unparse(node)
+    return any(tok in text for tok in _SHAPE_ATTRS)
+
+
+def check_r2(path: str, tree: ast.Module, registry: Registry) -> List[Finding]:
+    findings: List[Finding] = []
+    traced = _traced_context_names(tree, registry, path)
+    for fn in _functions(tree):
+        if fn.name not in traced:
+            continue
+        taint = _propagate_taint(fn, registry)
+        for node in _own_nodes(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            callee = dotted_name(node.func)
+            parts = callee.split(".")
+            if isinstance(node.func, ast.Attribute) and node.func.attr in _HOST_SYNC_ATTRS:
+                if _expr_tainted(node.func.value, taint):
+                    findings.append(
+                        Finding(
+                            "R2", path, node.lineno,
+                            f"host sync `.{node.func.attr}()` on traced "
+                            f"value inside jitted `{fn.name}`",
+                        )
+                    )
+                continue
+            if parts[0] in ("np", "numpy") and len(parts) > 1 and parts[-1] in _HOST_SYNC_NP:
+                if any(_expr_tainted(a, taint) for a in node.args):
+                    findings.append(
+                        Finding(
+                            "R2", path, node.lineno,
+                            f"`{callee}` on traced value inside jitted "
+                            f"`{fn.name}` forces a device->host transfer",
+                        )
+                    )
+                continue
+            if callee == "jax.device_get":
+                findings.append(
+                    Finding(
+                        "R2", path, node.lineno,
+                        f"`jax.device_get` inside jitted `{fn.name}`",
+                    )
+                )
+                continue
+            if callee in _CASTS and node.args:
+                arg = node.args[0]
+                if _shape_routed(arg):
+                    continue
+                if _expr_tainted(arg, taint):
+                    findings.append(
+                        Finding(
+                            "R2", path, node.lineno,
+                            f"`{callee}()` on traced value inside jitted "
+                            f"`{fn.name}` is an implicit host sync",
+                        )
+                    )
+    return findings
+
+
+# --------------------------------------------------------------------------
+# R3 — RNG key discipline
+#
+# A tracked key consumed as a bare call argument twice, with no
+# interleaving rebind from split/fold_in, replays the stream.  Tracking is
+# provenance-first: params whose name says "key"/"rng", plus any local
+# assigned from jax.random.{PRNGKey,split,fold_in,...} or a subscript of a
+# tracked key.  Each def (incl. nested) is analyzed with fresh state —
+# mutually-exclusive lax.switch/cond branches legitimately share a closure
+# key.  Subscripted uses (`keys[s]`) address distinct sub-keys and are
+# exempt; an If arm ending in return does not leak its consumption into
+# the fall-through path.
+
+
+_KEY_SOURCES = {"PRNGKey", "key", "split", "fold_in", "wrap_key_data"}
+_KEY_PARAM_RE = re.compile(r"key|^rngs?$")
+
+_PRUNE_NODES = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+
+
+def _is_key_source_call(node: ast.AST) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    parts = dotted_name(node.func).split(".")
+    return parts[-1] in _KEY_SOURCES and ("random" in parts or len(parts) == 1)
+
+
+def _walk_prune(root: ast.AST) -> Iterable[ast.AST]:
+    """DFS walk that does not descend into nested defs/lambdas."""
+    stack = [root]
+    while stack:
+        node = stack.pop()
+        if node is not root and isinstance(node, _PRUNE_NODES):
+            continue
+        yield node
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def _bare_key_uses(arg: ast.AST, keys: Set[str]) -> Iterable[ast.Name]:
+    """Key Names used directly in `arg`: not behind a Subscript (distinct
+    sub-key) and not inside a nested call/lambda (counted at that call)."""
+    stack = [arg]
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.Call,) + _PRUNE_NODES):
+            continue
+        if isinstance(node, ast.Subscript):
+            stack.append(node.slice)
+            continue
+        if isinstance(node, ast.Name) and node.id in keys:
+            yield node
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def check_r3(path: str, tree: ast.Module, registry: Registry) -> List[Finding]:
+    findings: List[Finding] = []
+    for fn in _functions(tree):
+        findings.extend(_check_r3_fn(path, fn))
+    # dedupe (If-branch replays can double-report the same line)
+    seen: Set[Tuple[int, str]] = set()
+    out = []
+    for f in sorted(findings, key=lambda f: f.line):
+        if (f.line, f.message) in seen:
+            continue
+        seen.add((f.line, f.message))
+        out.append(f)
+    return out
+
+
+def _terminates(stmts: Sequence[ast.stmt]) -> bool:
+    return bool(stmts) and isinstance(
+        stmts[-1], (ast.Return, ast.Raise, ast.Continue, ast.Break)
+    )
+
+
+def _check_r3_fn(path: str, fn: ast.FunctionDef) -> List[Finding]:
+    findings: List[Finding] = []
+    keys: Set[str] = {
+        name for name, _anno in func_params(fn) if _KEY_PARAM_RE.search(name)
+    }
+    consumed: Dict[str, int] = {}  # key name -> line of first consumption
+
+    def handle_call(call: ast.Call) -> None:
+        for arg in list(call.args) + [kw.value for kw in call.keywords]:
+            for use in _bare_key_uses(arg, keys):
+                name = use.id
+                if name in consumed:
+                    findings.append(
+                        Finding(
+                            "R3", path, call.lineno,
+                            f"key `{name}` consumed again in `{fn.name}` "
+                            f"(first use line {consumed[name]}) without a "
+                            "fresh split/fold_in",
+                        )
+                    )
+                else:
+                    consumed[name] = call.lineno
+
+    def visit_expr(node: Optional[ast.AST]) -> None:
+        if node is None:
+            return
+        for sub in _walk_prune(node):
+            if isinstance(sub, ast.Call):
+                handle_call(sub)
+
+    def assign_names(target: ast.expr) -> List[str]:
+        return [s.id for s in ast.walk(target) if isinstance(s, ast.Name)]
+
+    def visit(stmts: Sequence[ast.stmt]) -> None:
+        nonlocal consumed, keys
+        for stmt in stmts:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if isinstance(stmt, (ast.Assign, ast.AnnAssign)):
+                value = getattr(stmt, "value", None)
+                visit_expr(value)
+                tgt_names: List[str] = []
+                if isinstance(stmt, ast.Assign):
+                    for t in stmt.targets:
+                        tgt_names.extend(assign_names(t))
+                else:
+                    tgt_names.extend(assign_names(stmt.target))
+                fresh = value is not None and (
+                    _is_key_source_call(value)
+                    or (
+                        isinstance(value, ast.Subscript)
+                        and isinstance(value.value, ast.Name)
+                        and value.value.id in keys
+                    )
+                    or (
+                        isinstance(value, (ast.Tuple, ast.List))
+                        and any(_is_key_source_call(e) for e in value.elts)
+                    )
+                )
+                for name in tgt_names:
+                    if fresh:
+                        keys.add(name)
+                        consumed.pop(name, None)
+                    elif name in keys:
+                        # rebound to a non-key value
+                        keys.discard(name)
+                        consumed.pop(name, None)
+            elif isinstance(stmt, ast.If):
+                visit_expr(stmt.test)
+                before = (dict(consumed), set(keys))
+                visit(stmt.body)
+                body_state = (dict(consumed), set(keys))
+                consumed, keys = dict(before[0]), set(before[1])
+                visit(stmt.orelse)
+                body_term = _terminates(stmt.body)
+                orelse_term = bool(stmt.orelse) and _terminates(stmt.orelse)
+                if body_term and not orelse_term:
+                    pass  # only the fall-through (orelse) state survives
+                elif orelse_term and not body_term:
+                    consumed, keys = body_state
+                else:  # conservative union
+                    for k, v in body_state[0].items():
+                        consumed.setdefault(k, v)
+                    keys |= body_state[1]
+            elif isinstance(stmt, (ast.For, ast.While)):
+                visit_expr(stmt.test if isinstance(stmt, ast.While) else stmt.iter)
+                visit(stmt.body)
+                visit(stmt.orelse)
+            elif isinstance(stmt, ast.With):
+                for item in stmt.items:
+                    visit_expr(item.context_expr)
+                visit(stmt.body)
+            elif isinstance(stmt, ast.Try):
+                visit(stmt.body)
+                for h in stmt.handlers:
+                    visit(h.body)
+                visit(stmt.orelse)
+                visit(stmt.finalbody)
+            elif isinstance(stmt, (ast.Expr, ast.Return)):
+                visit_expr(getattr(stmt, "value", None))
+            elif isinstance(stmt, ast.AugAssign):
+                visit_expr(stmt.value)
+
+    visit(fn.body)
+    return findings
+
+
+# --------------------------------------------------------------------------
+# R4 — static/traced dataclass leaf discipline + jit static_argnames
+#     cross-check
+
+
+def _static_class_names(registry: Registry) -> Set[str]:
+    """Plain (non-pytree) dataclasses used as jit cache keys: *Spec /
+    *Config / *Grid naming plus anything annotated on a static jit param."""
+    names = {
+        ci.name for ci in registry.classes.values()
+        if ci.is_dataclass and not ci.pytree
+        and ci.name.endswith(("Spec", "Config", "Grid"))
+    }
+    for site in registry.jit_sites:
+        for pname, anno in site.params:
+            if pname in site.static_names:
+                for tok in _anno_tokens(anno):
+                    ci = registry.classes.get(tok)
+                    if ci is not None and ci.is_dataclass and not ci.pytree:
+                        names.add(tok)
+    return names
+
+
+def check_r4(path: str, tree: ast.Module, registry: Registry) -> List[Finding]:
+    findings: List[Finding] = []
+    local = {
+        name: ci for name, ci in registry.classes.items() if ci.path == path
+    }
+    static_classes = _static_class_names(registry)
+
+    for name, ci in local.items():
+        if ci.pytree:
+            for f in ci.fields:
+                if f.static:
+                    if f.anno and not anno_is_static(f.anno, registry):
+                        findings.append(
+                            Finding(
+                                "R4", path, f.line,
+                                f"static field `{name}.{f.name}: {f.anno}` "
+                                "must be hashable (it is a jit cache key)",
+                            )
+                        )
+                else:
+                    if f.anno and not (
+                        anno_is_array(f.anno, registry)
+                        or anno_is_pytree(f.anno, registry)
+                    ):
+                        findings.append(
+                            Finding(
+                                "R4", path, f.line,
+                                f"traced pytree field `{name}.{f.name}: "
+                                f"{f.anno}` must be an array or registered "
+                                "pytree leaf (or be marked static)",
+                            )
+                        )
+        elif name in static_classes:
+            for f in ci.fields:
+                if f.anno and not anno_is_static(f.anno, registry):
+                    findings.append(
+                        Finding(
+                            "R4", path, f.line,
+                            f"static spec field `{name}.{f.name}: {f.anno}` "
+                            "must be hashable (jit cache key); use a pytree "
+                            "for traced leaves",
+                        )
+                    )
+
+    for site in registry.jit_sites:
+        if site.path != path:
+            continue
+        for pname, anno in site.params:
+            if not anno:
+                continue
+            if anno_is_pytree(anno, registry) and pname in site.static_names:
+                findings.append(
+                    Finding(
+                        "R4", path, site.line,
+                        f"jit `{site.name}` marks pytree param "
+                        f"`{pname}: {anno}` static — unhashable and "
+                        "defeats tracing",
+                    )
+                )
+            toks = _anno_tokens(anno)
+            if (
+                len(toks) == 1
+                and toks[0] in static_classes
+                and pname not in site.static_names
+            ):
+                findings.append(
+                    Finding(
+                        "R4", path, site.line,
+                        f"jit `{site.name}` takes static spec "
+                        f"`{pname}: {anno}` but omits it from "
+                        "static_argnames — it would be traced",
+                    )
+                )
+    return findings
+
+
+# --------------------------------------------------------------------------
+# R5 — nondeterminism sources in simulation modules
+
+
+_R5_DIRS = ("net", "core")
+
+_TIME_CALLS = {
+    "time.time", "time.time_ns", "time.perf_counter", "time.monotonic",
+    "time.process_time", "datetime.now", "datetime.utcnow",
+    "datetime.datetime.now", "datetime.datetime.utcnow", "datetime.today",
+    "os.urandom", "uuid.uuid1", "uuid.uuid4", "secrets.token_bytes",
+    "secrets.token_hex",
+}
+
+
+def _is_sim_module(path: str) -> bool:
+    parts = re.split(r"[\\/]", path)
+    return any(p in _R5_DIRS for p in parts)
+
+
+def check_r5(path: str, tree: ast.Module, registry: Registry) -> List[Finding]:
+    if not _is_sim_module(path):
+        return []
+    findings: List[Finding] = []
+    imports_random = any(
+        isinstance(n, ast.Import)
+        and any(a.name == "random" for a in n.names)
+        for n in ast.walk(tree)
+    )
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            callee = dotted_name(node.func)
+            parts = callee.split(".")
+            if len(parts) >= 3 and parts[0] in ("np", "numpy") and parts[1] == "random":
+                fn = parts[2]
+                if fn == "default_rng":
+                    if not node.args:
+                        findings.append(
+                            Finding(
+                                "R5", path, node.lineno,
+                                "`np.random.default_rng()` without an "
+                                "explicit seed is nondeterministic",
+                            )
+                        )
+                elif fn not in ("Generator",):
+                    findings.append(
+                        Finding(
+                            "R5", path, node.lineno,
+                            f"global-state `{callee}` in a simulation "
+                            "module — use jax.random or a seeded "
+                            "default_rng",
+                        )
+                    )
+            elif callee in _TIME_CALLS:
+                findings.append(
+                    Finding(
+                        "R5", path, node.lineno,
+                        f"wall-clock/nondeterministic `{callee}` in a "
+                        "simulation module",
+                    )
+                )
+            elif imports_random and parts[0] == "random" and len(parts) == 2:
+                findings.append(
+                    Finding(
+                        "R5", path, node.lineno,
+                        f"stdlib `{callee}` uses hidden global state — "
+                        "seeded jax.random/np generators only",
+                    )
+                )
+        # set iteration => nondeterministic order under hash randomization
+        iter_node: Optional[ast.AST] = None
+        if isinstance(node, ast.For):
+            iter_node = node.iter
+        elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp, ast.GeneratorExp)):
+            iter_node = node.generators[0].iter
+        if iter_node is not None:
+            is_set_literal = isinstance(iter_node, ast.Set)
+            is_set_call = (
+                isinstance(iter_node, ast.Call)
+                and dotted_name(iter_node.func) in ("set", "frozenset")
+            )
+            if is_set_literal or is_set_call:
+                findings.append(
+                    Finding(
+                        "R5", path, node.lineno,
+                        "iteration over a set has nondeterministic order — "
+                        "sort it or use a tuple/list",
+                    )
+                )
+    return findings
+
+
+ALL_CHECKS = (check_r1, check_r2, check_r3, check_r4, check_r5)

@@ -50,10 +50,27 @@ def _fmt(v: float) -> str:
     return f"{v:.3g}"
 
 
+class UnreadableInput(Exception):
+    """Raised for trace paths that cannot be read or parsed."""
+
+
+def _read_series(path: str):
+    """`read_series_jsonl` with unreadable/corrupt inputs turned into a
+    clean `UnreadableInput` (exit 2) instead of a traceback."""
+    try:
+        return read_series_jsonl(path)
+    except OSError as e:
+        raise UnreadableInput(
+            f"{path}: unreadable ({e.strerror or e})"
+        ) from e
+    except (json.JSONDecodeError, KeyError, ValueError) as e:
+        raise UnreadableInput(f"{path}: not a series JSONL ({e})") from e
+
+
 def summarize(paths: list[str]) -> int:
     rows = []
     for path in paths:
-        ser, meta = read_series_jsonl(path)
+        ser, meta = _read_series(path)
         ticks = ser["tick"]
         row = {
             "trace": os.path.basename(path),
@@ -93,8 +110,8 @@ def summarize(paths: list[str]) -> int:
 
 
 def diff(path_a: str, path_b: str) -> int:
-    ser_a, _ = read_series_jsonl(path_a)
-    ser_b, _ = read_series_jsonl(path_b)
+    ser_a, _ = _read_series(path_a)
+    ser_b, _ = _read_series(path_b)
     ticks_a, ticks_b = ser_a["tick"], ser_b["tick"]
     common, ia, ib = np.intersect1d(ticks_a, ticks_b, return_indices=True)
     print(
@@ -137,7 +154,13 @@ def check_perfetto(paths: list[str]) -> int:
     bad = 0
     for path in paths:
         try:
-            with open(path) as f:
+            f = open(path)
+        except OSError as e:
+            raise UnreadableInput(
+                f"{path}: unreadable ({e.strerror or e})"
+            ) from e
+        try:
+            with f:
                 doc = json.load(f)
             events = doc["traceEvents"]
             if not isinstance(events, list) or not events:
@@ -160,7 +183,17 @@ def check_perfetto(paths: list[str]) -> int:
 
 
 def main(argv=None) -> int:
-    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p = argparse.ArgumentParser(
+        prog="python tools/trace_report.py",
+        description=__doc__.splitlines()[0],
+        epilog=(
+            "Inputs are the artifacts `make perf-smoke` drops under "
+            "traces/: *.jsonl series stores (--summary/--diff) and "
+            "*.trace.json Perfetto exports (--check-perfetto).  Exit: "
+            "0 ok, 1 traces differ (--diff) or fail validation "
+            "(--check-perfetto), 2 unreadable/corrupt input."
+        ),
+    )
     mode = p.add_mutually_exclusive_group(required=True)
     mode.add_argument("--summary", action="store_true",
                       help="one stats row per trace")
@@ -170,13 +203,17 @@ def main(argv=None) -> int:
                       help="validate Perfetto/Chrome trace JSON files")
     p.add_argument("paths", nargs="+", help="trace files")
     args = p.parse_args(argv)
-    if args.diff:
-        if len(args.paths) != 2:
-            p.error("--diff needs exactly two trace files")
-        return diff(*args.paths)
-    if args.check_perfetto:
-        return check_perfetto(args.paths)
-    return summarize(args.paths)
+    try:
+        if args.diff:
+            if len(args.paths) != 2:
+                p.error("--diff needs exactly two trace files")
+            return diff(*args.paths)
+        if args.check_perfetto:
+            return check_perfetto(args.paths)
+        return summarize(args.paths)
+    except UnreadableInput as e:
+        print(f"trace_report: {e}", file=sys.stderr)
+        return 2
 
 
 if __name__ == "__main__":
