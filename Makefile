@@ -39,8 +39,11 @@ bench-smoke:
 # the CI perf gate: every family sweep must stay ONE compiled program
 # (--max-compiles bounds the whole run: 8 family programs + 3 telemetry
 # programs + 2 scale-out scaling workers + 5 bake-off programs — the four
-# 8-policy family sweeps and the recovery pulse — with headroom) and every
-# gated flow must finish (check_finished fails loudly inside the benches);
+# 8-policy family sweeps and the recovery pulse — + 2 correlated-failure
+# recovery programs (pair + fat-tree, telemetry riding the carry) — with
+# headroom) and every gated flow must finish (check_finished fails loudly
+# inside the benches; the recovery blackout scenarios strand flows BY
+# DESIGN and route through allow_unfinished into meta.degraded instead);
 # the bake-off section also writes the BAKEOFF_ranking.json artifact; the
 # telemetry pass adds meta.telemetry recovery rows + traces/ artifacts,
 # and the exported traces must survive their own reader (trace_report
@@ -52,8 +55,10 @@ bench-smoke:
 # in tests/golden/program_fingerprints.json (meta.audit + AUDIT_report.json).
 perf-smoke:
 	python -m benchmarks.run --smoke --devices 2 --json BENCH_smoke.json \
-	  --telemetry --trace-dir traces --max-compiles 21 --audit
+	  --telemetry --trace-dir traces --max-compiles 23 --audit
 	python tools/trace_report.py --summary traces/*.jsonl
+	python tools/trace_report.py --summary traces/recovery_*.jsonl \
+	  --max-recovery-ticks 200
 	python tools/trace_report.py --check-perfetto traces/*.trace.json
 
 trace-demo:

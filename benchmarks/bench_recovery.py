@@ -1,0 +1,461 @@
+"""Recovery dynamics under correlated failures: SRLGs, cascades, bursts.
+
+The bake-off (bench_bakeoff) ranks endpoint metrics and measures recovery
+on ONE controlled two-path pulse.  This bench measures the *recovery
+dynamics* the paper's whack/restore controller is actually for, under the
+correlated failure processes of `repro.net.failures`: shared-risk link
+groups failing as one unit, PFC storms cascading hop-by-hop across tiers,
+and Hawkes burst flaps — on both the 2-tier leaf–spine grid
+(`correlated_pair_scenarios`) and the 3-tier fat-tree
+(`correlated_fat_tree_scenarios`), all 8 policies, each fabric family ONE
+compiled program (scenarios stacked on a vmap axis, policies on the traced
+`lax.switch`, in-scan telemetry riding the carry).
+
+Three metrics per (fabric, scenario, policy), derived from the telemetry
+series (host-side, observation-only):
+
+  * rate_recovery_ticks — onset -> goodput re-convergence: ticks from each
+    correlated incident onset (merged cascade/burst waves count ONCE, via
+    `merge_onsets` over `degrade_onsets`) until the fabric-wide delivery
+    rate returns to RATE_FRAC of its pre-incident baseline.  This is the
+    metric the gates run on: an allocation-profile clock reads ~0 for
+    static policies (their profile never moves while their packets
+    blackhole), goodput reads what the application feels.  The row value
+    is the WORST incident (max; -1 when an incident never re-converged).
+  * cct_p99 — degraded-window CCT p99: every flow here lives through the
+    incident window, so its completion time IS a degraded-window CCT.
+    Computed over finished flows only via `sentinel_free_p99`; None when
+    a scenario stranded every flow of that policy.
+  * profile_distance — post-recovery allocation-profile distance: total
+    variation between the pre-incident and end-of-run mean profiles.  WAM
+    deliberately re-ramps a restored path partially (one probe ramp, then
+    the recovery gate closes), STrack decays back toward the full split —
+    this column keeps that contrast visible instead of calling either
+    "wrong".
+
+Graceful degradation: blackout scenarios (whole-fabric / whole-core SRLG
+down with NO restore) strand flows BY DESIGN — completion runs through
+`check_finished(allow_unfinished=True)`, stranded flows land in
+``meta.degraded`` rows naming scenario/policy/flow, their sentinel CCTs
+are excluded from every percentile (asserted by `sentinel_free_p99`), and
+those scenarios are excluded from the recovery gates.
+
+Honest gates (RuntimeError on violation — CI fails, nobody averages it
+away):
+  * per gated scenario, WAM's worst-incident rate recovery must beat the
+    spraying statics (RR, RAND_STATIC) — these deterministically keep
+    spraying into the hole, so a loss to them means the controller did not
+    whack;
+  * over the gated scenarios, WAM's median must beat EVERY static policy's
+    median, ECMP included (per-scenario, ECMP can dodge an SRLG by hash
+    luck — that shows up as an annotated per-row result, not a gate
+    bypass).
+Scenarios where NO surviving path exists for the affected flows
+(`srlg_pod_isolated`) are exempt BY NAME and annotated: recovery there is
+the physical repair time for every policy, WAM cannot and should not win.
+Rows land in `common.RECOVERY_STATS` (``meta.recovery``) and in a
+standalone ``RECOVERY_rows.json`` ($RECOVERY_ROWS_JSON overrides) that CI
+uploads; where STrack/CC_COUPLED beat WAM the row says so (`wam_wins`
+false, winner named).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from benchmarks.common import (
+    aot_compile,
+    check_finished,
+    compile_gate,
+    emit,
+    sentinel_free_p99,
+    timed_call,
+)
+from repro.net.policies import ALL_POLICIES, Policy
+from repro.net.scenarios import (
+    correlated_fat_tree_scenarios,
+    correlated_pair_scenarios,
+    stack_scenarios,
+)
+from repro.net.sender import (
+    SenderSpec,
+    policy_sweep_params,
+    spec_for_policies,
+    sweep_flows_scenarios,
+)
+from repro.net.telemetry import (
+    TelemetrySpec,
+    degrade_onsets,
+    frame_select,
+    merge_onsets,
+    profile_distance,
+    rate_recovery_ticks,
+    recovery_ticks,
+    series,
+    summarize_recovery,
+    write_series_jsonl,
+)
+
+POLICY_NAMES = [p.name for p in ALL_POLICIES]
+
+# sized so the recovery comparison is FAIR: per-flow demand (RATE) stays
+# below every gated scenario's surviving aggregate capacity, so adaptive
+# policies can fully re-converge mid-outage while the spraying statics
+# keep losing the dead paths' share until the physical restore — the gap
+# the gates assert is the controller's, not the provisioning's.
+RATE = 4
+PAIR_FLOWS = 8
+N_SPINES = 4
+FT_FLOWS = 16
+
+# goodput recovery threshold: recovered when the windowed delivery rate is
+# back to this fraction of the pre-incident baseline (sustained).  High
+# enough that one blackholed flow out of PAIR_FLOWS registers (7/8 =
+# 0.875 < 0.9), low enough to sit clear of steady-state jitter.
+RATE_FRAC = 0.9
+# the hold is a DURATION, not a sample count: cascade wave transitions
+# drain paused queues in bursts that push the windowed rate over the
+# threshold for a sample or two, and a 2-sample hold at stride 4 would
+# latch that 8-tick spike as a static policy "recovering" mid-storm
+MIN_HOLD_TICKS = 24
+
+# severity for the correlated derate scenarios: per-path capacity must
+# fall BELOW the static per-path share (RATE / n_paths) or a brown-out is
+# invisible at this load — 0.95 of an 8-capacity link leaves 0.4 < 1.
+DERATE_SEVERITY = 0.95
+
+# PFC pause is all-or-nothing: a paused queue serves ZERO, so cascade
+# waves do not attenuate hop-to-hop (decay < 1 models partial pause duty
+# cycles — covered by the cascade_caps unit tests, but at this fabric's
+# ~12% per-link utilization a partially-derated wave never moves fabric
+# goodput, and a failure the goodput clock cannot see cannot gate)
+CASCADE_DECAY = 1.0
+
+# scenarios stranded-by-design (no restore): degraded rows, not gates
+BLACKOUTS = ("blackout", "core_blackout")
+# scenarios whose affected flows keep NO surviving path: every policy
+# recovers at the physical restore, so WAM-beats-static is exempt (the
+# row is still emitted and annotated)
+NO_SURVIVING_PATH = ("srlg_pod_isolated",)
+# scenarios whose outages are SHORTER than any controller's detection
+# latency: the flap is over before a whack could land, so parity with the
+# statics is the expected result, not a controller failure — the row
+# stays (it shows whether whacking mid-flap actively hurts) but the
+# beats-the-statics gates skip it
+PARITY_EXPECTED = ("burst_flaps",)
+
+STATIC_SPRAYERS = (Policy.RR, Policy.RAND_STATIC)
+STATIC_ALL = (Policy.ECMP, Policy.RR, Policy.RAND_STATIC)
+
+# WAM "wins" a row within one capture stride of the best (sampling
+# granularity), or within this fraction of it — beyond that the row is an
+# honest loss with its margin.
+TIE_PCT = 1.0
+
+
+def _shapes(smoke: bool):
+    horizon = 512 if smoke else 1024
+    stride = 2 if smoke else 4
+    # emission stays active past the last gated restore (5H/8) so the
+    # post-incident rate is demand-driven, then flows drain and finish —
+    # 3/5 (not more) leaves the tail room to drain the retransmit backlog
+    # a static policy accumulates over a 3H/8 maintenance window
+    n_packets = RATE * horizon * 3 // 5
+    return horizon, stride, n_packets
+
+
+def _recovery_spec(horizon: int, stride: int) -> SenderSpec:
+    # links/discrepancy channels off: the recovery metrics read alloc +
+    # received + tick only, and the link buffers dominate frame memory
+    return spec_for_policies(
+        SenderSpec(
+            rate_cap=RATE,
+            early_exit=True,
+            telemetry=TelemetrySpec(
+                stride=stride, window=-(-horizon // stride),
+                links=False, discrepancy=False,
+            ),
+        ),
+        ALL_POLICIES,
+    )
+
+
+def _incident_onsets(sched, horizon: int) -> list[int]:
+    """Merged correlated-incident onsets of one scenario's schedule:
+    degradation edges only (restores are not incidents), gap-chained over
+    a window covering the cascade hop delay and the burst flap length."""
+    window = max(horizon // 64, horizon // 128 + 1)
+    return [int(t) for t in merge_onsets(degrade_onsets(sched), window)]
+
+
+def _policy_metrics(
+    ser, onsets, fin, cct, horizon: int, tol: float, stride: int
+):
+    """The three per-(scenario, policy) metrics from one run's series."""
+    tick, alloc, received = ser["tick"], ser["alloc"], ser["received"]
+    hold = max(2, MIN_HOLD_TICKS // stride)
+    rate_rec = rate_recovery_ticks(
+        tick, received, onsets, frac=RATE_FRAC, min_hold=hold
+    )
+    alloc_rec = summarize_recovery(
+        recovery_ticks(tick, alloc, onsets, tol=tol, min_hold=hold)
+    )
+    dist = (
+        profile_distance(tick, alloc, before=onsets[0])
+        if onsets and int(np.searchsorted(tick, onsets[0])) >= 1
+        else 0.0
+    )
+    worst = float(rate_rec.max()) if rate_rec.size else 0.0
+    if (rate_rec < 0).any():
+        worst = -1.0
+    return {
+        "rate_recovery_ticks": worst,
+        "rate_recovery_per_incident": [float(v) for v in rate_rec],
+        "alloc_recovery": alloc_rec,
+        "profile_distance": round(dist, 4),
+        "cct_p99": sentinel_free_p99(cct, fin, horizon),
+        "unfinished_flows": int((~fin).sum()),
+        "degraded": bool((~fin).any()),
+    }
+
+
+def _rank(family: str, scenario: str, policies: dict, stride: int) -> dict:
+    """Fold per-policy metrics into one meta.recovery row with the
+    explicit wam_wins verdict on worst-incident rate recovery (lower
+    wins; censored -1 ranks last and cannot win)."""
+    vals = {p: m["rate_recovery_ticks"] for p, m in policies.items()}
+    scored = sorted(
+        ((p, v) for p, v in vals.items() if v >= 0), key=lambda pv: pv[1]
+    )
+    censored = [p for p, v in vals.items() if v < 0]
+    wam = vals["WAM"]
+    if not scored:
+        winner, best, margin, wins = None, None, None, None
+    elif wam < 0:
+        winner, best = scored[0]
+        margin, wins = None, False
+    else:
+        winner, best = scored[0]
+        margin = round(float(wam - best), 2)
+        wins = wam <= best + max(float(stride), TIE_PCT / 100.0 * best)
+    row = {
+        "family": family,
+        "scenario": scenario,
+        "metric": "rate_recovery_ticks",
+        "better": "lower",
+        "winner": winner,
+        "best_value": best,
+        "wam_value": None if wam < 0 else wam,
+        "margin_ticks": margin,
+        "wam_wins": wins,
+        "censored": censored,
+        "policies": policies,
+    }
+    return row
+
+
+def _recovery_family(family: str, scens: dict, smoke: bool) -> None:
+    horizon, stride, n_packets = _shapes(smoke)
+    topos, scheds = stack_scenarios(list(scens.values()))
+    spec = _recovery_spec(horizon, stride)
+    sp = policy_sweep_params(ALL_POLICIES, rate=RATE)
+    keys = jax.random.split(jax.random.PRNGKey(7), 1)
+    with compile_gate(f"recovery {family} family", max_compiles=1):
+        swept, compile_s = aot_compile(
+            sweep_flows_scenarios, topos, scheds, spec, sp, n_packets, keys,
+            horizon=horizon,
+        )
+        (r, frame), run_s = timed_call(swept, topos, scheds, sp, keys)
+    finished = check_finished(
+        f"recovery {family} family", r.finished,
+        axes=("scenario", "policy", "draw", "flow"),
+        labels={"scenario": list(scens), "policy": POLICY_NAMES},
+        allow_unfinished=True,
+    )
+    ccts = np.asarray(r.cct)  # [C, 8, 1, F]
+    flows = ccts.shape[-1]
+    common.perf(
+        f"recovery_{family}_family",
+        fabric_ticks=ccts.size // flows * horizon,
+        path_decisions=float(np.asarray(r.sent_total).sum()),
+        compile_s=compile_s,
+        run_s=run_s,
+    )
+    tol = (1 << spec.ell) / 32
+    rows = []
+    for si, (scen_name, (_, sched)) in enumerate(scens.items()):
+        onsets = _incident_onsets(sched, horizon)
+        restored = bool(
+            np.asarray(sched.cap_scale)[-1].min() > 0.0
+        )
+        policies = {}
+        for pi, pol in enumerate(ALL_POLICIES):
+            ser = series(frame_select(frame, (si, pi, 0)))
+            policies[pol.name] = _policy_metrics(
+                ser, onsets, finished[si, pi, 0], ccts[si, pi, 0],
+                horizon, tol, stride,
+            )
+            if (
+                common.TRACE_DIR
+                and family == "pair"
+                and scen_name == "srlg_spine_down"
+            ):
+                stem = os.path.join(
+                    common.TRACE_DIR, f"recovery_{family}_{pol.name}.jsonl"
+                )
+                write_series_jsonl(
+                    stem, ser,
+                    meta={"family": family, "scenario": scen_name,
+                          "policy": pol.name, "onsets": onsets, "tol": tol,
+                          "rate_frac": RATE_FRAC,
+                          "min_hold": max(2, MIN_HOLD_TICKS // stride)},
+                )
+        row = _rank(family, scen_name, policies, stride)
+        row["onsets"] = onsets
+        row["restored"] = restored
+        if scen_name in BLACKOUTS:
+            row["note"] = (
+                "no restore: flows strand by design — graceful-degradation "
+                "row, excluded from recovery gates"
+            )
+        elif scen_name in NO_SURVIVING_PATH:
+            row["note"] = (
+                "affected flows keep no surviving path: recovery is the "
+                "physical repair time for EVERY policy, so beating the "
+                "statics is not expected here"
+            )
+        elif scen_name in PARITY_EXPECTED:
+            row["note"] = (
+                "flaps end before any controller can detect them: parity "
+                "with the statics is the expected result — gate-exempt, "
+                "kept to show whether whacking mid-flap hurts"
+            )
+        common.RECOVERY_STATS.append(row)
+        rows.append(row)
+        wam = row["policies"]["WAM"]
+        emit(
+            f"recovery/{family}/{scen_name}",
+            0.0,
+            f"wam_rate_rec={row['wam_value']}"
+            f";winner={row['winner']};wam_wins={row['wam_wins']}"
+            f";cct_p99={wam['cct_p99']}"
+            f";profile_dist={wam['profile_distance']}"
+            f";degraded={int(wam['degraded'])}",
+        )
+    emit(
+        f"recovery/{family}/family/sweep",
+        (compile_s + run_s) * 1e6,
+        f"compiles=1_for_{len(scens)}_scenarios_x_{len(ALL_POLICIES)}"
+        f"_policies",
+        compile_count=1,
+        compile_s=round(compile_s, 3),
+        run_s=round(run_s, 3),
+    )
+    _gate(family, rows)
+
+
+def _gate(family: str, rows: list) -> None:
+    """The honest recovery gates (module docstring): per-scenario vs the
+    spraying statics, family-median vs every static."""
+    gated = [
+        r for r in rows
+        if r["scenario"] not in BLACKOUTS
+        and r["scenario"] not in NO_SURVIVING_PATH
+        and r["scenario"] not in PARITY_EXPECTED
+    ]
+    problems = []
+    for r in gated:
+        wam = r["policies"]["WAM"]["rate_recovery_ticks"]
+        if wam < 0:
+            problems.append(
+                f"{r['scenario']}: WAM never re-converged (censored)"
+            )
+            continue
+        for pol in STATIC_SPRAYERS:
+            v = r["policies"][pol.name]["rate_recovery_ticks"]
+            if 0 <= v <= wam:
+                problems.append(
+                    f"{r['scenario']}: WAM ({wam:.0f} ticks) does not beat "
+                    f"{pol.name} ({v:.0f}) — the controller did not whack"
+                )
+    med = {
+        p.name: float(np.median([
+            # censored = never re-converged = worse than any finite time
+            np.inf if (v := r["policies"][p.name]["rate_recovery_ticks"]) < 0
+            else v
+            for r in gated
+        ]))
+        for p in (Policy.WAM,) + STATIC_ALL
+    }
+    for pol in STATIC_ALL:
+        if med[pol.name] <= med["WAM"]:
+            problems.append(
+                f"family median: WAM ({med['WAM']:.0f}) does not beat "
+                f"{pol.name} ({med[pol.name]:.0f})"
+            )
+    if problems:
+        raise RuntimeError(
+            f"recovery {family} gate: " + "; ".join(problems)
+        )
+    emit(
+        f"recovery/{family}/gate",
+        0.0,
+        f"wam_median={med['WAM']:.0f};"
+        + ";".join(f"{p.name.lower()}_median={med[p.name]:.0f}"
+                   for p in STATIC_ALL)
+        + f";gated_scenarios={len(gated)}",
+    )
+
+
+def _write_rows(smoke: bool) -> None:
+    path = os.environ.get("RECOVERY_ROWS_JSON", "RECOVERY_rows.json")
+    rows = common.RECOVERY_STATS
+    wins = sum(1 for r in rows if r["wam_wins"])
+    payload = {
+        "smoke": bool(smoke),
+        "policies": POLICY_NAMES,
+        "rate_frac": RATE_FRAC,
+        "rows": rows,
+        "degraded": common.DEGRADED_STATS,
+        "wam_wins": wins,
+        "wam_losses": sum(1 for r in rows if r["wam_wins"] is False),
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    emit(
+        "recovery/rows",
+        0.0,
+        f"rows={len(rows)};wam_wins={wins}"
+        f";degraded_flows={len(common.DEGRADED_STATS)};json={path}",
+    )
+
+
+def main() -> None:
+    smoke = common.SMOKE
+    horizon, _, _ = _shapes(smoke)
+    _recovery_family(
+        "pair",
+        correlated_pair_scenarios(
+            PAIR_FLOWS, N_SPINES, horizon=horizon,
+            derate_severity=DERATE_SEVERITY, cascade_decay=CASCADE_DECAY,
+        ),
+        smoke,
+    )
+    _recovery_family(
+        "fat_tree",
+        correlated_fat_tree_scenarios(
+            flows=FT_FLOWS, n_pods=4, leaves_per_pod=2, spines_per_pod=2,
+            cores_per_spine=2, horizon=horizon,
+            derate_severity=DERATE_SEVERITY, cascade_decay=CASCADE_DECAY,
+        ),
+        smoke,
+    )
+    _write_rows(smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -35,12 +35,15 @@ __all__ = [
     "compile_gate",
     "timed_call",
     "check_finished",
+    "sentinel_free_p99",
     "telemetry_row",
     "RESULTS",
     "COMPILE_STATS",
     "PERF_STATS",
     "TELEMETRY_STATS",
     "BAKEOFF_STATS",
+    "RECOVERY_STATS",
+    "DEGRADED_STATS",
     "SMOKE",
     "TELEMETRY",
     "TRACE_DIR",
@@ -80,6 +83,17 @@ TELEMETRY_STATS: List[Dict[str, object]] = []
 # per (family, scenario, metric) appended by bench_bakeoff — schema in
 # docs/BENCHMARKS.md (`meta.bakeoff`)
 BAKEOFF_STATS: List[Dict[str, object]] = []
+
+# recovery-dynamics rows (meta.recovery in the bench JSON): one row per
+# (fabric family, correlated scenario) appended by bench_recovery —
+# schema in docs/BENCHMARKS.md (`meta.recovery`)
+RECOVERY_STATS: List[Dict[str, object]] = []
+
+# graceful-degradation rows (meta.degraded in the bench JSON): one row per
+# flow that `check_finished(..., allow_unfinished=True)` found stranded at
+# the horizon sentinel, naming its scenario/policy/flow indices — schema
+# in docs/BENCHMARKS.md (`meta.degraded`)
+DEGRADED_STATS: List[Dict[str, object]] = []
 
 
 def set_smoke(value: bool) -> None:
@@ -136,7 +150,9 @@ def check_finished(
     finished,
     axes: Tuple[str, ...] | None = None,
     labels: Dict[str, List[str]] | None = None,
-) -> None:
+    *,
+    allow_unfinished: bool = False,
+) -> np.ndarray:
     """Fail LOUDLY when any gated flow hit the horizon sentinel.
 
     An unfinished flow reports `cct == horizon`, which silently flattens
@@ -154,11 +170,21 @@ def check_finished(
     sweep's OWN axis order, never by assuming the historical five-policy
     enum order (an 8-policy bake-off sweep and a baseline sweep put
     different policies at the same index).
+
+    `allow_unfinished=True` is the graceful-degradation escape for benches
+    whose scenarios can LEGITIMATELY strand flows (a full-SRLG blackout
+    window never restores a path): instead of raising, every stranded
+    index becomes one `DEGRADED_STATS` row (surfaced as ``meta.degraded``)
+    naming its scenario/policy/flow, and the boolean mask is returned so
+    the caller can exclude the sentinel CCTs from its percentile gates —
+    pair the mask with `sentinel_free_p99`, which hard-asserts no sentinel
+    leaked through.  Returns the mask in every case (all-True when nothing
+    stranded).
     """
-    arr = np.asarray(finished)
+    arr = np.asarray(finished).astype(bool)
     if arr.size and not arr.all():
         frac = float(1.0 - arr.mean())
-        bad = np.argwhere(~arr.astype(bool))
+        bad = np.argwhere(~arr)
         if axes is not None and len(axes) != arr.ndim:
             raise ValueError(
                 f"{name}: {len(axes)} axis names for a {arr.ndim}-d mask"
@@ -177,6 +203,16 @@ def check_finished(
                 f"{a}={tag(a, int(i))}" for a, i in zip(axes, idx)
             ) + "]"
 
+        if allow_unfinished:
+            for idx in bad:
+                index = (
+                    {a: tag(a, int(i)) for a, i in zip(axes, idx)}
+                    if axes is not None
+                    else {str(d): int(i) for d, i in enumerate(idx)}
+                )
+                DEGRADED_STATS.append({"name": name, "index": index})
+            return arr
+
         shown = ", ".join(fmt(i) for i in bad[:8])
         more = f" (+{len(bad) - 8} more)" if len(bad) > 8 else ""
         raise RuntimeError(
@@ -184,6 +220,43 @@ def check_finished(
             f"sentinel) — the gate would compare sentinels, not completions; "
             f"raise the horizon.  Offending indices: {shown}{more}"
         )
+    return arr
+
+
+def sentinel_free_p99(
+    cct, finished, horizon: int, q: float = 99.0
+) -> float | None:
+    """Percentile over FINISHED flows only, sentinel leakage asserted out.
+
+    The companion to `check_finished(allow_unfinished=True)`: a degraded
+    cell's p99 must be computed over the flows that completed, with the
+    horizon sentinels of the stranded flows asserted OUT of the sample.
+    `finished` is the only disambiguator — a flow completing on the very
+    last tick legitimately records ``cct == horizon``, the same value the
+    sentinel uses (see `SimResult.finished`) — so the leak check is the
+    inverse: every flow OUTSIDE the mask must carry the sentinel.  An
+    unfinished flow with ``cct < horizon`` means the mask and the ccts
+    came from different runs (or axes got transposed), and admitting it
+    would silently flatten the tail — it raises here instead of polluting
+    the gate.  Returns None when NO flow finished (the metric does not
+    exist for that cell).
+    """
+    cct = np.asarray(cct, np.float64)
+    fin = np.asarray(finished).astype(bool)
+    if cct.shape != fin.shape:
+        raise ValueError(
+            f"cct shape {cct.shape} != finished shape {fin.shape}"
+        )
+    if (cct[~fin] < horizon).any():
+        raise RuntimeError(
+            f"non-sentinel CCT (< horizon {horizon}) outside the finished "
+            f"mask — cct and finished disagree, the degraded-row exclusion "
+            f"would drop real completions or admit sentinels"
+        )
+    good = cct[fin]
+    if good.size == 0:
+        return None
+    return float(np.percentile(good, q))
 
 
 def telemetry_row(

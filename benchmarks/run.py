@@ -36,6 +36,7 @@ SECTION_MODULES = [
     ("job_ettr", "bench_job_ettr"),
     ("cluster_contention", "bench_cluster"),
     ("policy_bakeoff", "bench_bakeoff"),
+    ("recovery_dynamics", "bench_recovery"),
     ("spray_throughput", "bench_spray_throughput"),
     ("sprayed_collective_tpu", "bench_sprayed_collective"),
     ("fountain_transport", "bench_fountain"),
@@ -233,6 +234,15 @@ def main(argv=None) -> None:
             # metric), with the full 8-policy ordering and the explicit
             # wam_wins/margin verdict (see docs/BENCHMARKS.md meta.bakeoff)
             payload["meta"]["bakeoff"] = {"rows": common.BAKEOFF_STATS}
+        if common.RECOVERY_STATS:
+            # correlated-failure recovery rows: one per (fabric, scenario),
+            # all 8 policies' onset -> re-convergence clocks plus the
+            # wam_wins verdict (see docs/BENCHMARKS.md meta.recovery)
+            payload["meta"]["recovery"] = {"rows": common.RECOVERY_STATS}
+        if common.DEGRADED_STATS:
+            # stranded-by-design flows from allow_unfinished cells, named
+            # by scenario/policy/flow (see docs/BENCHMARKS.md meta.degraded)
+            payload["meta"]["degraded"] = {"rows": common.DEGRADED_STATS}
         if args.telemetry:
             # observability rows: recovery ticks per fault-injection event
             # (onset -> allocation re-converged), discrepancy-gauge max,

@@ -2,10 +2,10 @@
 
 `tools/jaxlint` checks the *source*; this module checks the *traced
 program*.  Each bench family (topology / job / cluster / scaleout /
-bakeoff) is rebuilt here from the `repro.net` APIs at fixed canonical
-shapes — the bench smoke shapes — traced with `jax.make_jaxpr`, and the
-closed jaxpr is walked recursively (into scan/while/cond/pjit
-sub-jaxprs) to assert:
+bakeoff / recovery) is rebuilt here from the `repro.net` APIs at fixed
+canonical shapes — the bench smoke shapes — traced with
+`jax.make_jaxpr`, and the closed jaxpr is walked recursively (into
+scan/while/cond/pjit sub-jaxprs) to assert:
 
   * no float64/complex128 avals anywhere (the engine is strictly f32 —
     an accidental x64 promotion would silently change golden traces);
@@ -14,7 +14,11 @@ sub-jaxprs) to assert:
   * no callback/debug/io effects or primitives (host round-trips inside
     a "pure" family program break determinism and AOT execution);
   * telemetry-off programs contain zero telemetry ops (the
-    `TelemetryFrame` never appears in the output pytree).
+    `TelemetryFrame` never appears in the output pytree), while the
+    telemetry-carrying families (`_TELEMETRY_FAMILIES`, e.g. the
+    correlated-failure recovery bench) must emit one — its metrics are
+    computed host-side from the frame, so a program that silently
+    dropped it would pass every other check and return nothing.
 
 Each family also gets a canonical fingerprint — sha256 over the printed
 closed jaxpr plus the equation count and primitive histogram — stored in
@@ -156,13 +160,17 @@ def audit_program(
     _check_weak_types(closed, violations)
     if closed.effects:
         violations.append(f"program has effects: {sorted(map(str, closed.effects))}")
+    out_shape = jax.eval_shape(fn, *args)
+    structure = str(jax.tree_util.tree_structure(out_shape))
     if expect_no_telemetry:
-        out_shape = jax.eval_shape(fn, *args)
-        structure = str(jax.tree_util.tree_structure(out_shape))
         if "TelemetryFrame" in structure:
             violations.append(
                 "telemetry-off program emits a TelemetryFrame output"
             )
+    elif "TelemetryFrame" not in structure:
+        violations.append(
+            "telemetry-carrying program emits no TelemetryFrame output"
+        )
     # dedupe violations, preserving first-seen order
     seen = set()
     uniq = [v for v in violations if not (v in seen or seen.add(v))]
@@ -349,18 +357,69 @@ def _family_bakeoff():
     return program, (topos, scheds, sp, keys)
 
 
+def _family_recovery():
+    import jax
+
+    from repro.net.policies import ALL_POLICIES
+    from repro.net.scenarios import (
+        correlated_pair_scenarios, stack_scenarios,
+    )
+    from repro.net.sender import (
+        SenderSpec, policy_sweep_params, spec_for_policies,
+        sweep_flows_scenarios,
+    )
+    from repro.net.telemetry import TelemetrySpec
+
+    # benchmarks/bench_recovery.py pair family at its smoke shapes: the
+    # in-scan telemetry frame rides the carry, so the program's output is
+    # (SimResult, TelemetryFrame) — the telemetry-carrying audit path
+    horizon, stride, rate, draws = 512, 2, 4, 1
+    n_packets = rate * horizon * 3 // 5
+    scens = correlated_pair_scenarios(
+        8, 4, horizon=horizon, derate_severity=0.95, cascade_decay=1.0,
+    )
+    topos, scheds = stack_scenarios(list(scens.values()))
+    spec = spec_for_policies(
+        SenderSpec(
+            rate_cap=rate, early_exit=True,
+            telemetry=TelemetrySpec(
+                stride=stride, window=-(-horizon // stride),
+                links=False, discrepancy=False,
+            ),
+        ),
+        ALL_POLICIES,
+    )
+    sp = policy_sweep_params(ALL_POLICIES, rate=rate)
+    keys = jax.random.split(jax.random.PRNGKey(7), draws)
+
+    def program(topos, scheds, sp, keys):
+        return sweep_flows_scenarios(
+            topos, scheds, spec, sp, n_packets, keys, horizon=horizon
+        )
+
+    return program, (topos, scheds, sp, keys)
+
+
 FAMILIES: Dict[str, Callable] = {
     "topology": _family_topology,
     "job": _family_job,
     "cluster": _family_cluster,
     "scaleout": _family_scaleout,
     "bakeoff": _family_bakeoff,
+    "recovery": _family_recovery,
 }
+
+# families whose program carries the in-scan TelemetryFrame BY DESIGN:
+# the audit asserts its presence instead of its absence
+_TELEMETRY_FAMILIES = frozenset({"recovery"})
 
 
 def audit_family(name: str) -> AuditResult:
     program, args = FAMILIES[name]()
-    return audit_program(name, program, args)
+    return audit_program(
+        name, program, args,
+        expect_no_telemetry=name not in _TELEMETRY_FAMILIES,
+    )
 
 
 def audit_all(families: Optional[Sequence[str]] = None) -> List[AuditResult]:

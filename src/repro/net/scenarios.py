@@ -46,6 +46,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.net.cluster import Cluster, cluster_topology, place_jobs
+from repro.net.failures import (
+    SRLGEvent,
+    burst_flap_caps,
+    cascade_caps,
+    compose_caps,
+    fat_tree_cascade_waves,
+    fat_tree_srlgs,
+    hawkes_times,
+    leaf_spine_cascade_waves,
+    leaf_spine_srlgs,
+    srlg_caps,
+)
 from repro.net.jobs import JobSchedule
 from repro.net.topology import (
     EventSchedule,
@@ -77,6 +89,15 @@ __all__ = [
     "JOB_SCENARIO_NAMES",
     "cluster_scenarios",
     "CLUSTER_SCENARIO_NAMES",
+    "correlated_pair_scenarios",
+    "CORRELATED_PAIR_SCENARIO_NAMES",
+    "correlated_fat_tree_scenarios",
+    "CORRELATED_FAT_TREE_SCENARIO_NAMES",
+    "correlated_job_scenarios",
+    "CORRELATED_JOB_SCENARIO_NAMES",
+    "correlated_cluster_scenarios",
+    "CORRELATED_CLUSTER_SCENARIO_NAMES",
+    "CORRELATED_SCENARIOS",
 ]
 
 Scenario = Tuple[TopologyParams, EventSchedule]
@@ -807,3 +828,450 @@ def cluster_scenarios(
     }
     assert tuple(out) == CLUSTER_SCENARIO_NAMES
     return out
+
+
+# --- correlated failure scenarios (repro.net.failures) --------------------
+#
+# The libraries above inject INDEPENDENT faults: one spine's duty-cycle
+# flap, one hand-written storm, per-link background bursts.  The families
+# below place the correlated processes of `repro.net.failures` — SRLG
+# group events, hop-by-hop PFC cascades, Hawkes burst flaps — on the same
+# uniform grids, so they stack and sweep exactly like their independent
+# counterparts (one topology shape per family, schedules differ per
+# entry).  Event timing is expressed in fractions of `horizon` (onset at
+# H/4, restore at H/2) so every family keeps a pre-onset baseline window
+# and post-restore headroom for the recovery-dynamics bench regardless of
+# the horizon it is sized at.  Each family ends with a *blackout* entry —
+# every relevant SRLG hard-down from H/4 with NO restore — which
+# deterministically strands in-flight flows: that row exercises the
+# benches' graceful-degradation path (`check_finished(allow_unfinished=)`)
+# and is excluded from recovery gates.
+
+CORRELATED_PAIR_SCENARIO_NAMES = (
+    "srlg_spine_down",
+    "srlg_spine_derate",
+    "srlg_double_fault",
+    "pfc_cascade",
+    "burst_flaps",
+    "derate_cascade",
+    "blackout",
+)
+
+
+def correlated_pair_scenarios(
+    flows: int = 8,
+    n_spines: int = 4,
+    *,
+    horizon: int = 2048,
+    link_capacity: float = 8.0,
+    derate_severity: float = 0.75,
+    cascade_hop_delay: Optional[int] = None,
+    cascade_decay: float = 0.6,
+    flap_mu: Optional[float] = None,
+    flap_branching: float = 0.7,
+    flap_tau: Optional[float] = None,
+    flap_len: Optional[int] = None,
+    flap_seed: int = 0,
+    **kw,
+) -> Dict[str, Scenario]:
+    """Correlated failures on the uniform leaf–spine pair grid.
+
+    Disjoint pairs (2f -> 2f+1) on the `pair_scenarios` grid; every entry
+    shares ONE topology and differs only in its event schedule, so the
+    family stacks on a vmap axis and compiles once.
+
+      * srlg_spine_down    — spine 0's SRLG (all 2*n_leaves links) hard
+                             down over [H/4, H/2): one ASIC event removes
+                             a whole path plane at once, then restores.
+      * srlg_spine_derate  — spines 0 AND 1 derated to
+                             ``1 - derate_severity`` of nominal over the
+                             same window (correlated brown-out, no path
+                             fully dies).
+      * srlg_double_fault  — spine 0 down [H/4, H/2), spine 1 down
+                             [3H/8, 5H/8): overlapping windows, staggered
+                             onsets — the second fault lands inside the
+                             first one's recovery.
+      * pfc_cascade        — `leaf_spine_cascade_waves` back-pressure:
+                             root egress freezes at H/4, waves engage
+                             every `cascade_hop_delay` ticks upstream with
+                             severity decaying by `cascade_decay` per hop,
+                             all clearing at H/2.
+      * burst_flaps        — Hawkes burst flaps (`hawkes_times`): each
+                             event hard-flaps a seeded spine SRLG for
+                             `flap_len` ticks; arrivals cluster after a
+                             parent event.  Times materialized on
+                             [H/4, 5H/8): a clean steady-state baseline
+                             precedes the first flap and the tail of the
+                             run is flap-free.
+      * derate_cascade     — compound: spine 1 derated to
+                             ``1 - derate_severity`` for a maintenance
+                             window [H/8, 5H/8) with the PFC cascade
+                             firing inside it (schedules composed
+                             multiplicatively).
+      * blackout           — EVERY spine SRLG hard down from H/4 with no
+                             restore: all flows strand (the graceful-
+                             degradation row; excluded from recovery
+                             gates).
+    """
+    n_leaves = 2 * flows
+    pairs = [(2 * f, 2 * f + 1) for f in range(flows)]
+    topo = leaf_spine(
+        n_leaves, n_spines, pairs, uplink_capacity=link_capacity, **kw
+    )
+    L, H = topo.links, horizon
+    t_on, t_off = H // 4, H // 2
+    groups = leaf_spine_srlgs(n_leaves, n_spines)
+    spine0, spine1 = groups["spine0"], groups["spine1"]
+    waves = leaf_spine_cascade_waves(n_leaves, n_spines)
+    hop = cascade_hop_delay if cascade_hop_delay is not None else max(1, H // 128)
+    f_len = flap_len if flap_len is not None else max(4, H // 64)
+    times = t_on + hawkes_times(
+        H * 3 // 8,
+        mu=flap_mu if flap_mu is not None else 4.0 / H,
+        branching=flap_branching,
+        tau=flap_tau if flap_tau is not None else max(8.0, H / 64),
+        seed=flap_seed,
+    )
+    zeros = np.zeros((H, L), np.float32)
+    sched = lambda cap: _schedule(cap, zeros)  # noqa: E731
+    cascade = cascade_caps(
+        L, H, waves, start=t_on, duration=t_off - t_on,
+        hop_delay=hop, severity=1.0, decay=cascade_decay,
+    )
+    out: Dict[str, Scenario] = {
+        "srlg_spine_down": (
+            topo, sched(srlg_caps(L, H, [SRLGEvent(spine0, t_on, t_off)])),
+        ),
+        "srlg_spine_derate": (
+            topo,
+            sched(srlg_caps(L, H, [
+                SRLGEvent(spine0, t_on, t_off, derate_severity),
+                SRLGEvent(spine1, t_on, t_off, derate_severity),
+            ])),
+        ),
+        "srlg_double_fault": (
+            topo,
+            sched(srlg_caps(L, H, [
+                SRLGEvent(spine0, t_on, t_off),
+                SRLGEvent(spine1, H * 3 // 8, H * 5 // 8),
+            ])),
+        ),
+        "pfc_cascade": (topo, sched(cascade)),
+        "burst_flaps": (
+            topo,
+            sched(burst_flap_caps(
+                L, H, list(groups.values()), times,
+                flap_len=f_len, seed=flap_seed,
+            )),
+        ),
+        "derate_cascade": (
+            topo,
+            sched(compose_caps(
+                srlg_caps(
+                    L, H,
+                    [SRLGEvent(spine1, H // 8, H * 5 // 8, derate_severity)],
+                ),
+                cascade,
+            )),
+        ),
+        "blackout": (
+            topo,
+            sched(srlg_caps(
+                L, H, [SRLGEvent(g, t_on, H) for g in groups.values()]
+            )),
+        ),
+    }
+    assert tuple(out) == CORRELATED_PAIR_SCENARIO_NAMES
+    return out
+
+
+CORRELATED_FAT_TREE_SCENARIO_NAMES = (
+    "srlg_pod_spine_down",
+    "srlg_core_plane_down",
+    "srlg_pod_isolated",
+    "pfc_cascade",
+    "burst_flaps",
+    "plane_maintenance_cascade",
+    "core_blackout",
+)
+
+
+def correlated_fat_tree_scenarios(
+    flows: int = 16,
+    n_pods: int = 4,
+    leaves_per_pod: int = 2,
+    spines_per_pod: int = 2,
+    cores_per_spine: int = 2,
+    *,
+    horizon: int = 2048,
+    link_capacity: float = 8.0,
+    derate_severity: float = 0.75,
+    cascade_hop_delay: Optional[int] = None,
+    cascade_decay: float = 0.6,
+    flap_mu: Optional[float] = None,
+    flap_branching: float = 0.7,
+    flap_tau: Optional[float] = None,
+    flap_len: Optional[int] = None,
+    flap_seed: int = 0,
+    **kw,
+) -> Dict[str, Scenario]:
+    """Correlated failures on the 3-tier fat-tree grid.
+
+    Uniform inter-pod placement (`fat_tree_scenarios`' balanced
+    all-pods-talk pattern) — every flow has n = spines_per_pod *
+    cores_per_spine 4-hop paths, so SRLG events here remove *correlated
+    slices* of that diversity:
+
+      * srlg_pod_spine_down       — pod 0 / spine 0's ASIC SRLG hard down
+                                    [H/4, H/2): pod 0's flows lose plane
+                                    0 entirely (both directions).
+      * srlg_core_plane_down      — core plane 0's optics SRLG down over
+                                    the same window: EVERY inter-pod flow
+                                    loses `cores_per_spine` paths at once.
+      * srlg_pod_isolated         — pod 0's uplink cable bundle hard down
+                                    over the same window: its flows keep
+                                    NO surviving path, so recovery is the
+                                    physical repair time for EVERY policy
+                                    (the honest nobody-can-whack-this
+                                    row), while other pods' flows ride on
+                                    untouched.
+      * pfc_cascade               — `fat_tree_cascade_waves`: egress
+                                    freeze in pod 0 backs up four tiers
+                                    (spine->leaf, core->spine,
+                                    spine->core fabric-wide, leaf->spine)
+                                    with per-hop delay + decaying
+                                    severity.
+      * burst_flaps               — Hawkes burst flaps over the pod-spine
+                                    ASIC SRLGs, materialized on
+                                    [H/4, 5H/8) past a clean baseline.
+      * plane_maintenance_cascade — compound: core plane 1 derated to
+                                    ``1 - derate_severity`` for
+                                    [H/8, 5H/8) with the cascade firing
+                                    inside it.
+      * core_blackout             — BOTH core-plane SRLGs down from H/4,
+                                    no restore: every inter-pod flow
+                                    strands (graceful-degradation row).
+    """
+    grid = FatTreeGrid(n_pods, leaves_per_pod, spines_per_pod, cores_per_spine)
+    if n_pods < 2:
+        raise ValueError("correlated fat-tree scenarios need >= 2 pods")
+    n_leaves = grid.n_leaves
+    uniform = [
+        (f % n_leaves, (f + leaves_per_pod) % n_leaves) for f in range(flows)
+    ]
+    topo = fat_tree(
+        n_pods, leaves_per_pod, spines_per_pod, cores_per_spine, uniform,
+        uplink_capacity=link_capacity, **kw,
+    )
+    L, H = topo.links, horizon
+    t_on, t_off = H // 4, H // 2
+    srlgs = fat_tree_srlgs(grid)
+    waves = fat_tree_cascade_waves(grid)
+    hop = cascade_hop_delay if cascade_hop_delay is not None else max(1, H // 128)
+    f_len = flap_len if flap_len is not None else max(4, H // 64)
+    pod_spine_groups = [
+        srlgs[f"pod{p}_spine{s}"]
+        for p in range(n_pods) for s in range(spines_per_pod)
+    ]
+    times = t_on + hawkes_times(
+        H * 3 // 8,
+        mu=flap_mu if flap_mu is not None else 4.0 / H,
+        branching=flap_branching,
+        tau=flap_tau if flap_tau is not None else max(8.0, H / 64),
+        seed=flap_seed,
+    )
+    zeros = np.zeros((H, L), np.float32)
+    sched = lambda cap: _schedule(cap, zeros)  # noqa: E731
+    cascade = cascade_caps(
+        L, H, waves, start=t_on, duration=t_off - t_on,
+        hop_delay=hop, severity=1.0, decay=cascade_decay,
+    )
+    out: Dict[str, Scenario] = {
+        "srlg_pod_spine_down": (
+            topo,
+            sched(srlg_caps(
+                L, H, [SRLGEvent(srlgs["pod0_spine0"], t_on, t_off)]
+            )),
+        ),
+        "srlg_core_plane_down": (
+            topo,
+            sched(srlg_caps(
+                L, H, [SRLGEvent(srlgs["core_plane0"], t_on, t_off)]
+            )),
+        ),
+        "srlg_pod_isolated": (
+            topo,
+            sched(srlg_caps(L, H, [
+                SRLGEvent(srlgs["pod0_uplinks"], t_on, t_off)
+            ])),
+        ),
+        "pfc_cascade": (topo, sched(cascade)),
+        "burst_flaps": (
+            topo,
+            sched(burst_flap_caps(
+                L, H, pod_spine_groups, times, flap_len=f_len, seed=flap_seed,
+            )),
+        ),
+        "plane_maintenance_cascade": (
+            topo,
+            sched(compose_caps(
+                srlg_caps(L, H, [
+                    SRLGEvent(
+                        srlgs[f"core_plane{min(1, spines_per_pod - 1)}"],
+                        H // 8, H * 5 // 8, derate_severity,
+                    )
+                ]),
+                cascade,
+            )),
+        ),
+        "core_blackout": (
+            topo,
+            sched(srlg_caps(L, H, [
+                SRLGEvent(srlgs[f"core_plane{s}"], t_on, H)
+                for s in range(spines_per_pod)
+            ])),
+        ),
+    }
+    assert tuple(out) == CORRELATED_FAT_TREE_SCENARIO_NAMES
+    return out
+
+
+CORRELATED_JOB_SCENARIO_NAMES = (
+    "srlg_spine_down",
+    "pfc_cascade",
+    "burst_flaps",
+)
+
+
+def correlated_job_scenarios(
+    workers: int = 4,
+    n_spines: int = 4,
+    *,
+    horizon: int = 2048,
+    link_capacity: float = 8.0,
+    cascade_hop_delay: Optional[int] = None,
+    cascade_decay: float = 0.6,
+    flap_seed: int = 0,
+    **kw,
+) -> Dict[str, Scenario]:
+    """The correlated processes re-placed on a training job's ring (worker
+    w -> worker (w+1) % workers), for `repro.net.jobs` composition: one
+    spine-ASIC SRLG outage [H/4, H/2), the upstream PFC cascade, and
+    Hawkes burst flaps over the spine SRLGs — every entry shares the ring
+    topology, so the family stacks like `job_scenarios`."""
+    pairs = [(w, (w + 1) % workers) for w in range(workers)]
+    topo = leaf_spine(
+        workers, n_spines, pairs, uplink_capacity=link_capacity, **kw
+    )
+    L, H = topo.links, horizon
+    t_on, t_off = H // 4, H // 2
+    groups = leaf_spine_srlgs(workers, n_spines)
+    waves = leaf_spine_cascade_waves(
+        workers, n_spines, root_leaf=1 % workers
+    )
+    hop = cascade_hop_delay if cascade_hop_delay is not None else max(1, H // 128)
+    times = t_on + hawkes_times(
+        H * 3 // 8, mu=4.0 / H, branching=0.7,
+        tau=max(8.0, H / 64), seed=flap_seed,
+    )
+    zeros = np.zeros((H, L), np.float32)
+    sched = lambda cap: _schedule(cap, zeros)  # noqa: E731
+    out: Dict[str, Scenario] = {
+        "srlg_spine_down": (
+            topo,
+            sched(srlg_caps(L, H, [SRLGEvent(groups["spine0"], t_on, t_off)])),
+        ),
+        "pfc_cascade": (
+            topo,
+            sched(cascade_caps(
+                L, H, waves, start=t_on, duration=t_off - t_on,
+                hop_delay=hop, severity=1.0, decay=cascade_decay,
+            )),
+        ),
+        "burst_flaps": (
+            topo,
+            sched(burst_flap_caps(
+                L, H, list(groups.values()), times,
+                flap_len=max(4, H // 64), seed=flap_seed,
+            )),
+        ),
+    }
+    assert tuple(out) == CORRELATED_JOB_SCENARIO_NAMES
+    return out
+
+
+CORRELATED_CLUSTER_SCENARIO_NAMES = (
+    "srlg_spine_down",
+    "pfc_cascade",
+    "burst_flaps",
+)
+
+
+def correlated_cluster_scenarios(
+    jobs: Sequence[JobSchedule],
+    n_spines: int = 4,
+    *,
+    horizon: int = 2048,
+    link_capacity: float = 8.0,
+    cascade_hop_delay: Optional[int] = None,
+    cascade_decay: float = 0.6,
+    flap_seed: int = 0,
+    **kw,
+) -> Dict[str, ClusterScenario]:
+    """Correlated failures under co-scheduled jobs: the overlapped-rings
+    placement of `cluster_scenarios` (interference is the other job's
+    actual collectives) with a spine-ASIC SRLG outage, the PFC cascade,
+    and Hawkes burst flaps layered on top — BOTH jobs' controllers now
+    whack the same correlated mole."""
+    jobs = list(jobs)
+    coloc = place_jobs(jobs, colocated=True)
+    n_leaves = coloc.n_leaves
+    topo = cluster_topology(
+        coloc, n_spines, n_leaves=n_leaves,
+        uplink_capacity=link_capacity, **kw,
+    )
+    L, H = topo.links, horizon
+    t_on, t_off = H // 4, H // 2
+    groups = leaf_spine_srlgs(n_leaves, n_spines)
+    waves = leaf_spine_cascade_waves(
+        n_leaves, n_spines, root_leaf=1 % n_leaves
+    )
+    hop = cascade_hop_delay if cascade_hop_delay is not None else max(1, H // 128)
+    times = t_on + hawkes_times(
+        H * 3 // 8, mu=4.0 / H, branching=0.7,
+        tau=max(8.0, H / 64), seed=flap_seed,
+    )
+    zeros = np.zeros((H, L), np.float32)
+    sched = lambda cap: _schedule(cap, zeros)  # noqa: E731
+    out: Dict[str, ClusterScenario] = {
+        "srlg_spine_down": (
+            coloc, topo,
+            sched(srlg_caps(L, H, [SRLGEvent(groups["spine0"], t_on, t_off)])),
+        ),
+        "pfc_cascade": (
+            coloc, topo,
+            sched(cascade_caps(
+                L, H, waves, start=t_on, duration=t_off - t_on,
+                hop_delay=hop, severity=1.0, decay=cascade_decay,
+            )),
+        ),
+        "burst_flaps": (
+            coloc, topo,
+            sched(burst_flap_caps(
+                L, H, list(groups.values()), times,
+                flap_len=max(4, H // 64), seed=flap_seed,
+            )),
+        ),
+    }
+    assert tuple(out) == CORRELATED_CLUSTER_SCENARIO_NAMES
+    return out
+
+
+# family name -> correlated library constructor (registry-style use:
+# benches and tools iterate this to cover every fabric/placement family)
+CORRELATED_SCENARIOS: Dict[str, callable] = {
+    "pair": correlated_pair_scenarios,
+    "fat_tree": correlated_fat_tree_scenarios,
+    "job": correlated_job_scenarios,
+    "cluster": correlated_cluster_scenarios,
+}

@@ -79,7 +79,12 @@ __all__ = [
     "frame_select",
     "series",
     "event_onsets",
+    "degrade_onsets",
+    "restore_onsets",
+    "merge_onsets",
     "recovery_ticks",
+    "rate_recovery_ticks",
+    "profile_distance",
     "summarize_recovery",
     "queue_percentiles",
     "write_series_jsonl",
@@ -353,6 +358,62 @@ def event_onsets(sched: EventSchedule) -> np.ndarray:
     return np.flatnonzero(change).astype(np.int64) + 1
 
 
+def degrade_onsets(sched: EventSchedule) -> np.ndarray:
+    """Ticks where the environment got WORSE: some link's capacity scale
+    decreased or its background load increased between consecutive rows.
+
+    `event_onsets` fires on EVERY row change — including restores, which
+    are not failures and whose "recovery" is instant by construction.  The
+    correlated-failure bench measures recovery from degradations only, so
+    this is its onset set.  Returns sorted int64 ticks (subset of
+    `event_onsets`)."""
+    cap = np.asarray(sched.cap_scale)
+    bg = np.asarray(sched.bg_arrivals)
+    if cap.shape[0] < 2:
+        return np.zeros((0,), np.int64)
+    worse = np.any(cap[1:] < cap[:-1], axis=-1) | np.any(
+        bg[1:] > bg[:-1], axis=-1
+    )
+    return np.flatnonzero(worse).astype(np.int64) + 1
+
+
+def restore_onsets(sched: EventSchedule) -> np.ndarray:
+    """Ticks where some link's capacity scale INCREASED (or background
+    decreased) — the restore edges.  With `degrade_onsets` this splits
+    `event_onsets` into failure and repair events (a tick can be both:
+    one SRLG restoring while another fails)."""
+    cap = np.asarray(sched.cap_scale)
+    bg = np.asarray(sched.bg_arrivals)
+    if cap.shape[0] < 2:
+        return np.zeros((0,), np.int64)
+    better = np.any(cap[1:] > cap[:-1], axis=-1) | np.any(
+        bg[1:] < bg[:-1], axis=-1
+    )
+    return np.flatnonzero(better).astype(np.int64) + 1
+
+
+def merge_onsets(onsets: Sequence[int], window: int) -> np.ndarray:
+    """Cluster onset ticks by gap-chaining: cascade onset detection.
+
+    A hop-by-hop PFC cascade or a burst-flap cluster changes the schedule
+    at EVERY wave/flap edge, but the fabric experiences ONE correlated
+    incident — measuring recovery from each interior wave would start the
+    clock inside the storm.  Merge chains onsets whose gap from the
+    previous onset is <= `window` into one cluster and returns each
+    cluster's FIRST tick (sorted int64): the incident onsets.  `window`
+    should cover the process's intra-incident spacing (cascade
+    ``hop_delay``, flap ``flap_len``) and sit well under the
+    inter-incident spacing; `window=0` is the identity."""
+    onsets = np.sort(np.asarray(list(onsets), np.int64))
+    if window < 0:
+        raise ValueError(f"merge window must be >= 0, got {window}")
+    if onsets.size == 0:
+        return onsets
+    gaps = np.diff(onsets)
+    starts = np.concatenate([[True], gaps > window])
+    return onsets[starts]
+
+
 def recovery_ticks(
     tick: np.ndarray,
     alloc: np.ndarray,
@@ -403,6 +464,126 @@ def recovery_ticks(
         rec = tick[k0 + first].astype(np.float64) - float(t0)
         out[i] = np.where(hold >= min_hold, rec, -1.0)
     return out
+
+
+def rate_recovery_ticks(
+    tick: np.ndarray,
+    received: np.ndarray,
+    onsets: Sequence[int],
+    *,
+    frac: float = 0.8,
+    min_hold: int = 2,
+) -> np.ndarray:
+    """Goodput-based recovery: ticks from each onset until the fabric-wide
+    delivery rate returns to `frac` of its pre-incident baseline.
+
+    `recovery_ticks` watches the allocation PROFILE, which never moves for
+    static policies (ECMP / RR / RAND_STATIC keep spraying into the hole)
+    — their profile "recovers" in zero ticks while their packets blackhole
+    until the physical restore.  This metric watches what the application
+    feels instead: the windowed delivery rate, computed from the cumulative
+    `received` channel summed over all flow axes (rate of sample k covers
+    the capture window ending at ``tick[k]``).
+
+    The baseline is the mean rate over the samples strictly before the
+    first onset (the pre-incident steady state; at least one such rate
+    sample is required or everything is censored).  For each onset the
+    clock demands a DIP first:
+    the rate sample ending at the onset tick still counts pre-onset
+    deliveries, and the fabric's pipeline latency keeps goodput at
+    baseline for a few ticks after the caps drop — so recovery is only
+    declared from the first sample at/after the onset whose rate falls
+    BELOW ``frac * baseline``.  The dip is searched before the NEXT onset
+    (a later incident's own dip must not be mis-attributed); if none, the
+    incident did not touch this policy's goodput (e.g. ECMP's hash dodged
+    the failed SRLG) and the recovery is an honest 0.  After the dip,
+    recovery is the first sample whose rate is >= ``frac * baseline`` for
+    `min_hold` CONSECUTIVE samples, searched to the END of the series:
+    overlapping incidents (a double fault striking mid-recovery) push an
+    onset's re-convergence past the next onset, which is degradation the
+    clock must keep counting, not censor.  The run demand is a run, not a
+    stable suffix: goodput legitimately falls to zero later when flows
+    complete, which must not un-recover an incident.  Recovery is
+    reported as ticks since the ONSET — detection and re-spray latency
+    both count, identically for every policy.  Censored (dipped but never
+    re-converged, or too few samples) is -1; like `recovery_ticks`,
+    onsets past the last captured sample are dropped.  Returns float64
+    ``[n_observed_onsets]``.
+    """
+    tick = np.asarray(tick)
+    received = np.asarray(received, np.float64)
+    onsets = np.asarray(list(onsets), np.int64)
+    onsets = onsets[onsets <= int(tick[-1])] if tick.size else onsets[:0]
+    out = np.full((len(onsets),), -1.0)
+    if tick.size < 2 or len(onsets) == 0:
+        return out
+    total = received.reshape(received.shape[0], -1).sum(axis=-1)
+    dt = np.diff(tick).astype(np.float64)
+    rate = np.diff(total) / np.maximum(dt, 1.0)   # rate[k-1] ends at tick[k]
+    rtick = tick[1:]                              # tick of each rate sample
+    pre = rate[rtick < onsets[0]]
+    if pre.size == 0:
+        return out
+    need = frac * float(pre.mean())
+    ok = rate >= need
+    bounds = np.concatenate([onsets[1:], [np.iinfo(np.int64).max]])
+    for i, (t0, t1) in enumerate(zip(onsets, bounds)):
+        k0 = int(np.searchsorted(rtick, t0))
+        k1 = int(np.searchsorted(rtick, t1))
+        dips = np.flatnonzero(~ok[k0:k1])
+        if dips.size == 0:          # never dipped: goodput untouched
+            out[i] = 0.0
+            continue
+        for k in range(k0 + int(dips[0]), rate.size - min_hold + 1):
+            if ok[k: k + min_hold].all():
+                out[i] = float(rtick[k]) - float(t0)
+                break
+    return out
+
+
+def profile_distance(
+    tick: np.ndarray,
+    alloc: np.ndarray,
+    *,
+    before: int,
+    after: Optional[int] = None,
+    window: int = 8,
+) -> float:
+    """Total-variation distance between allocation profiles at two times.
+
+    Answers "did the controller RETURN to its pre-incident spraying
+    pattern, or settle somewhere else?" — WAM's restore probing walks the
+    profile back, STrack's decayed penalties may leave residue, and a
+    static policy trivially scores 0.  Takes the mean profile over the
+    (up to) `window` samples strictly before tick `before` (pre-incident)
+    and the `window` samples at or before tick `after` (post-recovery;
+    None = end of series), L1-normalizes each over the path axis, and
+    returns the mean over flows of the total-variation distance
+    ``0.5 * sum_i |p_i - q_i|`` — 0 when identical, 1 when disjoint.
+    Flows whose window-mean profile is all-zero compare as uniform.
+    """
+    tick = np.asarray(tick)
+    alloc = np.asarray(alloc, np.float64)
+    k0 = int(np.searchsorted(tick, before))
+    if k0 < 1:
+        raise ValueError(
+            f"no samples before tick {before} to take a baseline from"
+        )
+    k1 = alloc.shape[0] if after is None else int(
+        np.searchsorted(tick, after, side="right")
+    )
+    if k1 < 1:
+        raise ValueError(f"no samples at or before tick {after}")
+    pre = alloc[max(0, k0 - window): k0].mean(axis=0)    # [*lead, n]
+    post = alloc[max(0, k1 - window): k1].mean(axis=0)
+
+    def norm(p):
+        s = p.sum(axis=-1, keepdims=True)
+        n = p.shape[-1]
+        return np.where(s > 0, p / np.where(s > 0, s, 1.0), 1.0 / n)
+
+    tv = 0.5 * np.abs(norm(pre) - norm(post)).sum(axis=-1)
+    return float(tv.mean())
 
 
 def summarize_recovery(rec: np.ndarray) -> Dict[str, float]:

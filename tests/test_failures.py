@@ -1,0 +1,298 @@
+"""Correlated failure process suite (`repro.net.failures`).
+
+Pins the three host-side processes against closed forms the simulator
+never sees:
+
+  * SRLG membership follows the topology builders' id arithmetic exactly
+    (leaf–spine `uplink_id`/`downlink_id`, fat-tree `tier_slices`) —
+    a drifted id helper must fail HERE, not as a mystery miss in a bench;
+  * `cascade_caps` equals its per-wave closed form (onset staggering,
+    per-hop decay, common clear, dead waves), matching
+    `cascade_onset_ticks`;
+  * `hawkes_times` is deterministic per seed and genuinely clustered
+    (over-dispersed versus a branching-free process of the same seed);
+  * composition is multiplicative, associative, and shape-checked.
+"""
+import numpy as np
+import pytest
+
+from repro.net.failures import (
+    LinkGroup,
+    SRLGEvent,
+    burst_flap_caps,
+    cascade_caps,
+    cascade_onset_ticks,
+    compose_caps,
+    fat_tree_cascade_waves,
+    fat_tree_srlgs,
+    hawkes_times,
+    leaf_spine_cascade_waves,
+    leaf_spine_srlgs,
+    srlg_caps,
+)
+from repro.net.topology import FatTreeGrid, downlink_id, uplink_id
+
+GRID = FatTreeGrid(4, 2, 2, 2)
+
+
+# --- link groups ----------------------------------------------------------
+
+
+def test_link_group_canonicalizes_and_validates():
+    g = LinkGroup("g", (5, 1, 3, 1))
+    assert g.links == (1, 3, 5)          # sorted, deduped
+    assert g.ids.dtype == np.int64
+    with pytest.raises(ValueError, match="empty"):
+        LinkGroup("empty", ())
+    with pytest.raises(ValueError, match="negative"):
+        LinkGroup("neg", (0, -1))
+
+
+def test_leaf_spine_srlgs_match_id_arithmetic():
+    n_leaves, n_spines = 6, 3
+    groups = leaf_spine_srlgs(n_leaves, n_spines)
+    assert set(groups) == {f"spine{s}" for s in range(n_spines)}
+    for s in range(n_spines):
+        want = {uplink_id(lf, s, n_leaves, n_spines) for lf in range(n_leaves)}
+        want |= {
+            downlink_id(s, lf, n_leaves, n_spines) for lf in range(n_leaves)
+        }
+        assert set(groups[f"spine{s}"].links) == want
+        assert len(groups[f"spine{s}"].links) == 2 * n_leaves
+    # the spine SRLGs partition the full link set (no bypass in this grid)
+    all_ids = np.concatenate([g.ids for g in groups.values()])
+    assert len(all_ids) == len(set(all_ids.tolist())) == 2 * n_leaves * n_spines
+
+
+def test_fat_tree_srlgs_membership_vs_tier_slices():
+    srlgs = fat_tree_srlgs(GRID)
+    tiers = GRID.tier_slices()
+    up = set(range(*tiers["spine_core_up"].indices(GRID.links)))
+    down = set(range(*tiers["core_spine_down"].indices(GRID.links)))
+    leaf_up = set(range(*tiers["leaf_spine_up"].indices(GRID.links)))
+    leaf_down = set(range(*tiers["spine_leaf_down"].indices(GRID.links)))
+    bypass = GRID.bypass
+
+    # pod-spine ASIC groups: disjoint, cover every non-bypass link exactly
+    # once, and each one touches all four tiers
+    asic = [
+        srlgs[f"pod{p}_spine{s}"]
+        for p in range(GRID.n_pods) for s in range(GRID.spines_per_pod)
+    ]
+    seen = np.concatenate([g.ids for g in asic])
+    assert len(seen) == len(set(seen.tolist()))
+    assert set(seen.tolist()) == (up | down | leaf_up | leaf_down)
+    assert bypass not in set(seen.tolist())
+    for g in asic:
+        ids = set(g.ids.tolist())
+        assert ids & up and ids & down and ids & leaf_up and ids & leaf_down
+
+    # core planes: only core-tier links, partitioning them by spine plane
+    planes = [srlgs[f"core_plane{s}"] for s in range(GRID.spines_per_pod)]
+    plane_ids = np.concatenate([g.ids for g in planes])
+    assert set(plane_ids.tolist()) == (up | down)
+    assert len(plane_ids) == len(set(plane_ids.tolist()))
+
+    # pod uplink bundles: only core-tier links, partitioning them by pod
+    bundles = [srlgs[f"pod{p}_uplinks"] for p in range(GRID.n_pods)]
+    bundle_ids = np.concatenate([g.ids for g in bundles])
+    assert set(bundle_ids.tolist()) == (up | down)
+    assert len(bundle_ids) == len(set(bundle_ids.tolist()))
+
+
+# --- SRLG events ----------------------------------------------------------
+
+
+def test_srlg_event_validation():
+    g = LinkGroup("g", (0, 1))
+    with pytest.raises(ValueError, match="empty"):
+        SRLGEvent(g, 10, 10)
+    with pytest.raises(ValueError, match="empty"):
+        SRLGEvent(g, -1, 5)
+    with pytest.raises(ValueError, match="severity"):
+        SRLGEvent(g, 0, 5, severity=0.0)
+    with pytest.raises(ValueError, match="severity"):
+        SRLGEvent(g, 0, 5, severity=1.5)
+
+
+def test_srlg_caps_closed_form_and_composition():
+    a = LinkGroup("a", (0, 2))
+    b = LinkGroup("b", (2, 3))
+    cap = srlg_caps(5, 64, [
+        SRLGEvent(a, 8, 16, 0.5),
+        SRLGEvent(b, 12, 20, 0.25),
+    ])
+    assert cap.shape == (64, 5) and cap.dtype == np.float32
+    assert cap[7].tolist() == [1, 1, 1, 1, 1]
+    assert cap[8, 0] == np.float32(0.5) and cap[8, 2] == np.float32(0.5)
+    # overlap on link 2 composes multiplicatively
+    assert cap[12, 2] == np.float32(0.5) * np.float32(0.75)
+    assert cap[12, 3] == np.float32(0.75)
+    assert cap[16, 0] == 1.0 and cap[19, 3] == np.float32(0.75)
+    assert (cap[20:] == 1.0).all()
+
+
+def test_srlg_caps_rejects_bad_events():
+    g = LinkGroup("g", (0, 7))
+    with pytest.raises(ValueError, match="references link"):
+        srlg_caps(4, 64, [SRLGEvent(g, 0, 8)])
+    with pytest.raises(ValueError, match="never fire"):
+        srlg_caps(8, 64, [SRLGEvent(g, 64, 128)])
+
+
+# --- cascades -------------------------------------------------------------
+
+
+def test_cascade_caps_matches_closed_form():
+    waves = leaf_spine_cascade_waves(4, 2, root_leaf=1, root_spine=0)
+    links = 2 * 4 * 2
+    start, duration, hop, sev, decay = 16, 40, 8, 1.0, 0.5
+    cap = cascade_caps(
+        links, 128, waves, start=start, duration=duration,
+        hop_delay=hop, severity=sev, decay=decay,
+    )
+    onsets = cascade_onset_ticks(
+        waves, start=start, duration=duration, hop_delay=hop
+    )
+    assert onsets.tolist() == [16, 24, 32]
+    want = np.ones((128, links), np.float32)
+    for w, g in enumerate(waves):
+        for t in range(start + w * hop, start + duration):
+            want[t, g.ids] *= np.float32(1.0 - sev * decay**w)
+    np.testing.assert_array_equal(cap, want)
+    # everything clears together
+    assert (cap[start + duration:] == 1.0).all()
+
+
+def test_cascade_dead_waves_never_engage():
+    waves = leaf_spine_cascade_waves(4, 2)
+    # hop_delay pushes waves 1+ past the clear: only wave 0 fires
+    cap = cascade_caps(
+        16, 128, waves, start=16, duration=10, hop_delay=50, severity=1.0,
+    )
+    onsets = cascade_onset_ticks(waves, start=16, duration=10, hop_delay=50)
+    assert onsets.tolist() == [16]
+    touched = np.flatnonzero((cap < 1.0).any(axis=0))
+    assert set(touched.tolist()) == set(waves[0].ids.tolist())
+
+
+def test_cascade_validation():
+    waves = leaf_spine_cascade_waves(4, 2)
+    with pytest.raises(ValueError, match="duration"):
+        cascade_caps(16, 64, waves, start=0, duration=0)
+    with pytest.raises(ValueError, match="hop_delay"):
+        cascade_caps(16, 64, waves, start=0, duration=8, hop_delay=-1)
+    with pytest.raises(ValueError, match="severity"):
+        cascade_caps(16, 64, waves, start=0, duration=8, severity=0.0)
+    with pytest.raises(ValueError, match="decay"):
+        cascade_caps(16, 64, waves, start=0, duration=8, decay=1.5)
+
+
+def test_fat_tree_cascade_waves_tiers():
+    waves = fat_tree_cascade_waves(GRID, root_pod=0, root_spine=0)
+    tiers = GRID.tier_slices()
+    names = [w.name for w in waves]
+    assert names == [
+        "cascade_egress", "cascade_core_down", "cascade_core_up",
+        "cascade_leaf_up",
+    ]
+    spans = {
+        "cascade_egress": tiers["spine_leaf_down"],
+        "cascade_core_down": tiers["core_spine_down"],
+        "cascade_core_up": tiers["spine_core_up"],
+        "cascade_leaf_up": tiers["leaf_spine_up"],
+    }
+    for w in waves:
+        sl = spans[w.name]
+        tier = set(range(*sl.indices(GRID.links)))
+        assert set(w.ids.tolist()) <= tier
+    # the core_up and leaf_up waves are fabric-wide (every pod pauses)
+    assert len(waves[2].links) == GRID.n_pods * GRID.cores_per_spine
+    assert len(waves[3].links) == GRID.n_pods * GRID.leaves_per_pod
+
+
+# --- Hawkes burst flaps ---------------------------------------------------
+
+
+def test_hawkes_times_deterministic_sorted_unique():
+    a = hawkes_times(2048, mu=8 / 2048, branching=0.7, tau=32.0, seed=3)
+    b = hawkes_times(2048, mu=8 / 2048, branching=0.7, tau=32.0, seed=3)
+    np.testing.assert_array_equal(a, b)
+    assert a.dtype == np.int64
+    assert (np.diff(a) > 0).all()
+    assert a.min() >= 0 and a.max() < 2048
+    c = hawkes_times(2048, mu=8 / 2048, branching=0.7, tau=32.0, seed=4)
+    assert not np.array_equal(a, c)
+
+
+def test_hawkes_clustering_is_overdispersed():
+    """Branching makes the counting process burstier than its own
+    immigrant stream: the index of dispersion of windowed counts (var /
+    mean over fixed windows, pooled across seeds) must exceed the
+    branching-free baseline's."""
+    H, W = 4096, 256
+
+    def dispersion(branching):
+        counts = []
+        for seed in range(8):
+            t = hawkes_times(H, mu=24 / H, branching=branching, tau=16.0,
+                             seed=seed)
+            counts += np.bincount(t // W, minlength=H // W).tolist()
+        counts = np.asarray(counts, np.float64)
+        return counts.var() / counts.mean()
+
+    assert dispersion(0.8) > dispersion(0.0) * 1.5
+
+
+def test_hawkes_validation_and_runaway_guard():
+    with pytest.raises(ValueError, match="horizon"):
+        hawkes_times(0, mu=0.1)
+    with pytest.raises(ValueError, match="mu"):
+        hawkes_times(64, mu=0.0)
+    with pytest.raises(ValueError, match="branching"):
+        hawkes_times(64, mu=0.1, branching=1.0)
+    with pytest.raises(ValueError, match="tau"):
+        hawkes_times(64, mu=0.1, tau=0.0)
+    with pytest.raises(ValueError, match="max_events"):
+        hawkes_times(4096, mu=0.5, branching=0.9, max_events=64)
+
+
+def test_burst_flap_caps_windows_and_composition():
+    g0, g1 = LinkGroup("g0", (0,)), LinkGroup("g1", (1,))
+    times = np.asarray([10, 12, 50], np.int64)
+    cap = burst_flap_caps(4, 64, [g0, g1], times, flap_len=8, severity=0.5)
+    # every flap writes exactly its [t, t+flap_len) window on ONE group;
+    # the two early flaps overlap, so if they landed on the same group the
+    # overlap region composes to 0.25
+    degraded = cap < 1.0
+    assert degraded[:, 2:].sum() == 0            # untargeted links untouched
+    assert degraded.any()
+    rows = np.flatnonzero(degraded.any(axis=1))
+    assert rows.min() >= 10 and rows.max() < 58
+    vals = set(np.unique(cap).tolist())
+    assert vals <= {np.float32(0.25), np.float32(0.5), np.float32(1.0)}
+    # deterministic per seed
+    np.testing.assert_array_equal(
+        cap, burst_flap_caps(4, 64, [g0, g1], times, flap_len=8, severity=0.5)
+    )
+    with pytest.raises(ValueError, match="flap_len"):
+        burst_flap_caps(4, 64, [g0], times, flap_len=0)
+    with pytest.raises(ValueError, match="at least one target"):
+        burst_flap_caps(4, 64, [], times)
+
+
+def test_compose_caps_is_multiplicative_and_shape_checked():
+    a = np.full((8, 3), 0.5, np.float32)
+    b = np.full((8, 3), 0.5, np.float32)
+    c = compose_caps(a, b)
+    assert (c == np.float32(0.25)).all()
+    # associative / order-independent
+    d = np.random.default_rng(0).uniform(0.1, 1.0, (8, 3)).astype(np.float32)
+    np.testing.assert_allclose(
+        compose_caps(a, compose_caps(b, d)), compose_caps(compose_caps(a, b), d),
+        rtol=1e-6,
+    )
+    with pytest.raises(ValueError, match="at least one"):
+        compose_caps()
+    with pytest.raises(ValueError, match="shapes differ"):
+        compose_caps(a, np.ones((4, 3), np.float32))

@@ -34,7 +34,12 @@ from repro.net.sender import (
 )
 from repro.net.fabric import FabricParams
 from repro.net.scenarios import pair_scenarios, stack_scenarios
-from repro.net.topology import leaf_spine, null_schedule, scatter_delivery
+from repro.net.topology import (
+    EventSchedule,
+    leaf_spine,
+    null_schedule,
+    scatter_delivery,
+)
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -243,6 +248,61 @@ def test_stack_scenarios_rejects_mismatched_shapes():
         stack_scenarios([a, b])
 
 
+def test_stack_scenarios_rejects_mismatched_statics():
+    topo, sched = pair_scenarios(flows=2, n_spines=2, horizon=32)["incast"]
+    other = dataclasses.replace(topo, fb_delay=topo.fb_delay + 1)
+    with pytest.raises(ValueError, match="statics differ"):
+        stack_scenarios([(topo, sched), (other, sched)])
+
+
+def _check_stack_last_row_persistence(seed: int) -> None:
+    """Schedule extension is invisible to the fabric: for every tick t the
+    extended schedule's read row min(t, T-1) is bit-identical to the
+    original's read row min(t, T_i - 1) — the exact invariant that lets
+    `stack_scenarios` batch unequal-horizon failure scenarios into one
+    compiled family."""
+    rng = np.random.default_rng(seed)
+    topo = leaf_spine(2, 2, [(0, 1)])
+    L = int(topo.capacity.shape[0])
+    horizons = [int(h) for h in rng.integers(1, 24, size=3)]
+    scens = []
+    for T in horizons:
+        scens.append((topo, EventSchedule(
+            cap_scale=jnp.asarray(
+                rng.uniform(0.1, 1.0, (T, L)).astype(np.float32)
+            ),
+            bg_arrivals=jnp.asarray(
+                rng.uniform(0.0, 2.0, (T, L)).astype(np.float32)
+            ),
+        )))
+    _, stacked = stack_scenarios(scens)
+    Tmax = max(horizons)
+    assert stacked.cap_scale.shape[:2] == (len(scens), Tmax)
+    for i, (_, orig) in enumerate(scens):
+        for field in ("cap_scale", "bg_arrivals"):
+            ext = np.asarray(getattr(stacked, field))[i]
+            src = np.asarray(getattr(orig, field))
+            Ti = src.shape[0]
+            for t in range(Tmax + 4):  # overrun past Tmax: both clamp
+                got = ext[min(t, Tmax - 1)]
+                want = src[min(t, Ti - 1)]
+                assert np.array_equal(got, want), (seed, i, field, t)
+
+
+if HAVE_HYPOTHESIS:
+
+    @given(st.integers(0, 2**20))
+    @settings(max_examples=20, deadline=None)
+    def test_stack_scenarios_read_equivalence(seed):
+        _check_stack_last_row_persistence(seed)
+
+else:
+
+    @pytest.mark.parametrize("seed", list(range(20)))
+    def test_stack_scenarios_read_equivalence(seed):
+        _check_stack_last_row_persistence(seed)
+
+
 # ---------------------------------------------------------------------------
 # spray_select: padded final block + interpret auto-detect
 # ---------------------------------------------------------------------------
@@ -301,3 +361,71 @@ def test_compile_gate_trips_on_extra_compiles():
         with common.compile_gate("one allowed", max_compiles=1):
             common.aot_compile(f, x)
             common.aot_compile(f, jnp.ones((8,)))
+
+
+# ---------------------------------------------------------------------------
+# graceful-degradation escape (benchmarks.common)
+# ---------------------------------------------------------------------------
+def test_check_finished_allow_unfinished_records_degraded_rows():
+    common = pytest.importorskip("benchmarks.common")
+
+    fin = np.ones((2, 2, 3), bool)
+    fin[1, 0, 2] = False
+    fin[0, 1, 1] = False
+    before = len(common.DEGRADED_STATS)
+    try:
+        mask = common.check_finished(
+            "degradation test", fin,
+            axes=("scenario", "policy", "flow"),
+            labels={"policy": ["ECMP", "WAM"]},
+            allow_unfinished=True,
+        )
+        np.testing.assert_array_equal(mask, fin)
+        rows = common.DEGRADED_STATS[before:]
+        assert {tuple(sorted(r["index"].items())) for r in rows} == {
+            (("flow", "1"), ("policy", "WAM"), ("scenario", "0")),
+            (("flow", "2"), ("policy", "ECMP"), ("scenario", "1")),
+        }
+        assert all(r["name"] == "degradation test" for r in rows)
+    finally:
+        del common.DEGRADED_STATS[before:]
+
+    # without the escape the same mask raises, naming the stranded index
+    with pytest.raises(RuntimeError, match="policy=WAM"):
+        common.check_finished(
+            "degradation test", fin,
+            axes=("scenario", "policy", "flow"),
+            labels={"policy": ["ECMP", "WAM"]},
+        )
+
+    # an all-finished mask is returned unchanged and records nothing
+    n0 = len(common.DEGRADED_STATS)
+    mask = common.check_finished(
+        "clean", np.ones((4,), bool), allow_unfinished=True
+    )
+    assert mask.all() and len(common.DEGRADED_STATS) == n0
+
+
+def test_sentinel_free_p99_contract():
+    common = pytest.importorskip("benchmarks.common")
+
+    horizon = 100
+    cct = np.asarray([10.0, 20.0, 100.0, 100.0])
+    fin = np.asarray([True, True, False, True])
+    # the finished flow at cct == horizon (completed on the last tick) is a
+    # legitimate sample; the unfinished sentinel is excluded
+    got = common.sentinel_free_p99(cct, fin, horizon, q=50.0)
+    assert got == pytest.approx(20.0)
+
+    # nothing finished (all sentinels) -> the metric does not exist
+    sentinels = np.full(4, float(horizon))
+    assert common.sentinel_free_p99(sentinels, np.zeros(4, bool), horizon) is None
+
+    # an unfinished flow with a sub-horizon cct means mask and ccts came
+    # from different runs: hard error, not silent admission
+    with pytest.raises(RuntimeError, match="outside the finished mask"):
+        common.sentinel_free_p99(
+            np.asarray([10.0, 50.0]), np.asarray([True, False]), horizon
+        )
+    with pytest.raises(ValueError, match="shape"):
+        common.sentinel_free_p99(cct, fin[:2], horizon)

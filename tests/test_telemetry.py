@@ -46,11 +46,16 @@ from repro.net.sender import (
 from repro.net.telemetry import (
     TelemetrySpec,
     chrome_trace,
+    degrade_onsets,
     event_onsets,
     frame_select,
+    merge_onsets,
+    profile_distance,
     queue_percentiles,
+    rate_recovery_ticks,
     read_series_jsonl,
     recovery_ticks,
+    restore_onsets,
     series,
     summarize_recovery,
     write_series_jsonl,
@@ -244,6 +249,109 @@ def test_summarize_recovery_folds_censoring():
     assert s["max"] == pytest.approx(8.0)
     empty = summarize_recovery(np.zeros((0,)))
     assert empty["events"] == 0 and empty["recovered_frac"] == 1.0
+
+
+def _rates_to_series(rates):
+    """Cumulative `received` whose windowed rate at tick k (k >= 1) is
+    ``rates[k - 1]`` — the synthetic inverse of the diff in
+    `rate_recovery_ticks`."""
+    total = np.concatenate([[0.0], np.cumsum(np.asarray(rates, np.float64))])
+    return np.arange(len(total), dtype=np.int64), total
+
+
+def test_rate_recovery_dip_then_hold():
+    # baseline 10 for ticks 1..9, dip to 2 over 10..14, back to 10 from 15
+    tick, total = _rates_to_series([10.0] * 9 + [2.0] * 5 + [10.0] * 10)
+    rec = rate_recovery_ticks(tick, total, [10], frac=0.8, min_hold=2)
+    np.testing.assert_array_equal(rec, [5.0])   # recovers at tick 15
+
+
+def test_rate_recovery_no_dip_is_honest_zero():
+    # the incident never touches goodput (ECMP's hash dodged the SRLG)
+    tick, total = _rates_to_series([10.0] * 20)
+    rec = rate_recovery_ticks(tick, total, [10], frac=0.8)
+    np.testing.assert_array_equal(rec, [0.0])
+
+
+def test_rate_recovery_censoring_and_baseline():
+    # dipped and never came back -> censored
+    tick, total = _rates_to_series([10.0] * 9 + [2.0] * 11)
+    rec = rate_recovery_ticks(tick, total, [10], frac=0.8)
+    np.testing.assert_array_equal(rec, [-1.0])
+    # no rate sample strictly before the first onset -> no baseline,
+    # everything censored
+    rec = rate_recovery_ticks(tick, total, [1, 10], frac=0.8)
+    np.testing.assert_array_equal(rec, [-1.0, -1.0])
+    # onsets past the last captured sample are dropped, not censored
+    rec = rate_recovery_ticks(tick, total, [10, 999], frac=0.8)
+    assert rec.shape == (1,)
+
+
+def test_rate_recovery_overlapping_onsets_counted_past_next():
+    # double fault: onset 10's degradation persists through onset 18; its
+    # recovery (tick 25) lands PAST the second onset and must be counted
+    # there, not censored at the segment boundary
+    tick, total = _rates_to_series(
+        [10.0] * 9 + [2.0] * 15 + [10.0] * 8
+    )
+    rec = rate_recovery_ticks(tick, total, [10, 18], frac=0.8, min_hold=2)
+    np.testing.assert_array_equal(rec, [15.0, 7.0])
+
+
+def test_rate_recovery_min_hold_run_not_suffix():
+    # a one-sample blip at tick 11 inside the dip must not latch as
+    # recovery under min_hold=2; and the zero-rate tail (flows completed)
+    # must not un-recover the incident — the hold is a run, not a suffix
+    rates = [10.0] * 9 + [2.0, 10.0, 2.0] + [10.0] * 4 + [0.0] * 4
+    tick, total = _rates_to_series(rates)
+    rec = rate_recovery_ticks(tick, total, [10], frac=0.8, min_hold=2)
+    np.testing.assert_array_equal(rec, [3.0])   # first 2-run starts tick 13
+    rec = rate_recovery_ticks(tick, total, [10], frac=0.8, min_hold=1)
+    np.testing.assert_array_equal(rec, [1.0])   # the blip itself latches
+
+
+def test_merge_onsets_gap_chaining():
+    # gaps <= window chain into one incident reported at its first tick
+    np.testing.assert_array_equal(
+        merge_onsets([0, 4, 8, 30, 33], window=4), [0, 30]
+    )
+    # window 0 is the identity (and sorts)
+    np.testing.assert_array_equal(
+        merge_onsets([8, 0, 4], window=0), [0, 4, 8]
+    )
+    assert merge_onsets([], window=4).size == 0
+    with pytest.raises(ValueError, match=">= 0"):
+        merge_onsets([0, 4], window=-1)
+
+
+def test_degrade_restore_onsets_split_event_onsets():
+    cap = np.ones((8, 2), np.float32)
+    bg = np.zeros((8, 2), np.float32)
+    cap[3:6, 0] = 0.5          # degrade at 3, restore at 6
+    bg[5:, 1] = 2.0            # background load step (worse) at 5
+    sched = EventSchedule(cap_scale=jnp.asarray(cap),
+                          bg_arrivals=jnp.asarray(bg))
+    np.testing.assert_array_equal(degrade_onsets(sched), [3, 5])
+    np.testing.assert_array_equal(restore_onsets(sched), [6])
+    # degrade + restore partition every row change here
+    np.testing.assert_array_equal(event_onsets(sched), [3, 5, 6])
+
+
+def test_profile_distance_closed_form():
+    tick = np.arange(0, 32, 2)
+    alloc = np.zeros((16, 2), np.float64)
+    alloc[:8] = [10.0, 10.0]       # pre: uniform
+    alloc[8:] = [20.0, 0.0]        # post: one-hot
+    # TV( [.5,.5], [1,0] ) = 0.5, independent of scale
+    assert profile_distance(tick, alloc, before=16, window=4) == pytest.approx(0.5)
+    # identical windows -> 0
+    assert profile_distance(tick, alloc, before=8, after=10, window=2) == 0.0
+    # an all-zero window-mean profile compares as uniform
+    dead = np.zeros((16, 2), np.float64)
+    dead[:8] = [10.0, 10.0]
+    assert profile_distance(tick, dead, before=16, window=4) == pytest.approx(0.0)
+    with pytest.raises(ValueError, match="before tick"):
+        profile_distance(tick, alloc, before=0)
 
 
 def test_strack_penalty_decay_closed_form():

@@ -1,8 +1,14 @@
 """CLI smoke tests: tools scripts exit non-zero (not traceback) on
-unreadable inputs and document themselves via --help epilogs."""
+unreadable inputs and document themselves via --help epilogs, and the
+trace_report recovery gate (--max-recovery-ticks) enforces its exit-code
+contract over per-policy trace artifacts."""
 import os
 import subprocess
 import sys
+
+import numpy as np
+
+from repro.net.telemetry import write_series_jsonl
 
 _REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
@@ -27,6 +33,76 @@ def test_check_links_unreadable_input_exits_2(tmp_path):
     h = _run("tools/check_links.py", "--help")
     assert h.returncode == 0
     assert "Exit:" in h.stdout
+
+
+def _write_recovery_trace(path, policy, rates, onsets):
+    """A minimal per-policy recovery trace: flat allocation profile plus a
+    cumulative `received` channel whose windowed rate at tick k is
+    ``rates[k - 1]`` — the same meta contract the recovery bench exports."""
+    total = np.concatenate([[0.0], np.cumsum(np.asarray(rates, np.float64))])
+    ser = {
+        "tick": np.arange(len(total), dtype=np.int64),
+        "alloc": np.tile(np.asarray([3.0, 5.0]), (len(total), 1)),
+        "received": total,
+    }
+    write_series_jsonl(str(path), ser, meta={
+        "policy": policy, "onsets": list(onsets), "tol": 0.0,
+        "rate_frac": 0.8, "min_hold": 2,
+    })
+
+
+def test_trace_report_recovery_gate(tmp_path):
+    # WAM dips at onset 10 and re-converges at tick 15; RR dips and never
+    # comes back (censored)
+    wam = tmp_path / "recovery_pair_WAM.jsonl"
+    rr = tmp_path / "recovery_pair_RR.jsonl"
+    _write_recovery_trace(wam, "WAM", [10.0] * 9 + [2.0] * 5 + [10.0] * 10, [10])
+    _write_recovery_trace(rr, "RR", [10.0] * 9 + [2.0] * 16, [10])
+
+    # plain summary: per-trace columns + the pooled per-policy table
+    r = _run("tools/trace_report.py", "--summary", str(wam), str(rr))
+    assert r.returncode == 0, r.stderr
+    for col in ("rec_p99", "rate_rec", "censored"):
+        assert col in r.stdout
+    assert "WAM" in r.stdout and "RR" in r.stdout
+
+    # gate: the censored policy fails regardless of the threshold
+    r = _run("tools/trace_report.py", "--summary",
+             "--max-recovery-ticks", "100", str(wam), str(rr))
+    assert r.returncode == 1
+    assert "RR: never re-converged" in r.stderr
+
+    # a recovering policy under the threshold passes ...
+    r = _run("tools/trace_report.py", "--summary",
+             "--max-recovery-ticks", "100", str(wam))
+    assert r.returncode == 0, r.stderr
+
+    # ... and fails when its worst recovery exceeds it
+    r = _run("tools/trace_report.py", "--summary",
+             "--max-recovery-ticks", "2", str(wam))
+    assert r.returncode == 1
+    assert "worst recovery" in r.stderr
+
+
+def test_trace_report_gate_needs_policy_meta(tmp_path):
+    # a trace without policy/onsets meta cannot feed the gate: exit 2, not
+    # a silent pass
+    bare = tmp_path / "bare.jsonl"
+    ser = {
+        "tick": np.arange(8, dtype=np.int64),
+        "alloc": np.tile(np.asarray([1.0, 1.0]), (8, 1)),
+    }
+    write_series_jsonl(str(bare), ser, meta={})
+    r = _run("tools/trace_report.py", "--summary",
+             "--max-recovery-ticks", "10", str(bare))
+    assert r.returncode == 2
+    assert "no trace" in r.stderr
+
+    # the flag is --summary-only: argparse rejects other modes
+    r = _run("tools/trace_report.py", "--check-perfetto",
+             "--max-recovery-ticks", "10", str(bare))
+    assert r.returncode == 2
+    assert "only applies to --summary" in r.stderr
 
 
 def test_trace_report_unreadable_input_exits_2(tmp_path):

@@ -8,7 +8,15 @@ and sanity-checks Perfetto trace JSON.  Three modes:
     python tools/trace_report.py --summary traces/*.jsonl
         One table row per trace: samples, tick span, channels, final
         allocation profile, discrepancy gauge max, queue p50/p99,
-        recovery stats (when the meta block carries event onsets).
+        recovery stats (when the meta block carries event onsets) —
+        profile re-convergence p50/p99/max plus the goodput clock
+        (`rate_recovery_ticks`) when the trace has a `received` channel.
+        Traces whose meta names a `policy` (the recovery bench's
+        per-policy exports) are also pooled into a per-policy table:
+        rec_p50 / rec_p99 / worst across that policy's traces.  With
+        --max-recovery-ticks N, exit 1 if any pooled recovery exceeds N
+        ticks or never re-converged (the shell-scriptable regression
+        gate over exported trace artifacts).
 
     python tools/trace_report.py --diff A.jsonl B.jsonl
         Channel-by-channel comparison of two traces on their common
@@ -38,6 +46,7 @@ sys.path.insert(0, os.path.join(_HERE, "..", "src"))
 
 from repro.net.telemetry import (  # noqa: E402
     queue_percentiles,
+    rate_recovery_ticks,
     read_series_jsonl,
     recovery_ticks,
     summarize_recovery,
@@ -67,8 +76,21 @@ def _read_series(path: str):
         raise UnreadableInput(f"{path}: not a series JSONL ({e})") from e
 
 
-def summarize(paths: list[str]) -> int:
+def _print_table(rows: list[dict]) -> None:
+    cols: list[str] = []
+    for r in rows:
+        cols += [c for c in r if c not in cols]
+    widths = {
+        c: max(len(c), *(len(str(r.get(c, "-"))) for r in rows)) for c in cols
+    }
+    print("  ".join(c.ljust(widths[c]) for c in cols))
+    for r in rows:
+        print("  ".join(str(r.get(c, "-")).ljust(widths[c]) for c in cols))
+
+
+def summarize(paths: list[str], max_recovery_ticks: float | None = None) -> int:
     rows = []
+    pooled: dict[str, list[float]] = {}
     for path in paths:
         ser, meta = _read_series(path)
         ticks = ser["tick"]
@@ -85,6 +107,7 @@ def summarize(paths: list[str]) -> int:
             row["q_p50"] = _fmt(qp["hot_p50"])
             row["q_p99"] = _fmt(qp["hot_p99"])
         onsets = meta.get("onsets", [])
+        trace_rec: list[float] = []
         if onsets and "alloc" in ser and ser["alloc"].size:
             # honor the exporter's convergence ball when it recorded one
             rec = recovery_ticks(
@@ -95,17 +118,62 @@ def summarize(paths: list[str]) -> int:
             row["events"] = s["events"]
             row["recov%"] = _fmt(100 * s["recovered_frac"])
             row["rec_p50"] = _fmt(s["p50"])
+            row["rec_p99"] = _fmt(s["p99"])
             row["rec_max"] = _fmt(s["max"])
+            trace_rec += [float(v) for v in np.ravel(rec)]
+        if onsets and "received" in ser and ser["received"].size:
+            # the goodput clock over the same onsets (worst incident;
+            # -1 = an incident never re-converged inside this trace),
+            # honoring the exporter's threshold/hold when recorded
+            rr = rate_recovery_ticks(
+                ticks, ser["received"], onsets,
+                frac=float(meta.get("rate_frac", 0.8)),
+                min_hold=int(meta.get("min_hold", 2)),
+            )
+            if rr.size:
+                worst = -1.0 if (rr < 0).any() else float(rr.max())
+                row["rate_rec"] = _fmt(worst)
+                trace_rec += [float(v) for v in rr]
+        if "policy" in meta and trace_rec:
+            pooled.setdefault(str(meta["policy"]), []).extend(trace_rec)
         rows.append(row)
-    cols: list[str] = []
-    for r in rows:
-        cols += [c for c in r if c not in cols]
-    widths = {
-        c: max(len(c), *(len(str(r.get(c, "-"))) for r in rows)) for c in cols
-    }
-    print("  ".join(c.ljust(widths[c]) for c in cols))
-    for r in rows:
-        print("  ".join(str(r.get(c, "-")).ljust(widths[c]) for c in cols))
+    _print_table(rows)
+    violations = []
+    if pooled:
+        print()
+        agg = []
+        for policy in sorted(pooled):
+            vals = np.asarray(pooled[policy], np.float64)
+            seen = vals[vals >= 0]
+            agg.append({
+                "policy": policy,
+                "events": vals.size,
+                "censored": int((vals < 0).sum()),
+                "rec_p50": _fmt(float(np.percentile(seen, 50))) if seen.size else "-",
+                "rec_p99": _fmt(float(np.percentile(seen, 99))) if seen.size else "-",
+                "rec_max": _fmt(float(seen.max())) if seen.size else "-",
+            })
+            if max_recovery_ticks is not None:
+                if (vals < 0).any():
+                    violations.append(f"{policy}: never re-converged")
+                elif seen.size and seen.max() > max_recovery_ticks:
+                    violations.append(
+                        f"{policy}: worst recovery {_fmt(float(seen.max()))} "
+                        f"> {_fmt(max_recovery_ticks)} ticks"
+                    )
+        _print_table(agg)
+    if max_recovery_ticks is not None and not pooled:
+        # the gate is meaningless without per-policy recovery traces —
+        # passing silently would hide a broken exporter
+        print(
+            "trace_report: --max-recovery-ticks given but no trace "
+            "carries policy + onsets meta", file=sys.stderr,
+        )
+        return 2
+    if violations:
+        for v in violations:
+            print(f"recovery gate: {v}", file=sys.stderr)
+        return 1
     return 0
 
 
@@ -201,8 +269,16 @@ def main(argv=None) -> int:
                       help="compare exactly two traces channel by channel")
     mode.add_argument("--check-perfetto", action="store_true",
                       help="validate Perfetto/Chrome trace JSON files")
+    p.add_argument(
+        "--max-recovery-ticks", type=float, metavar="N", default=None,
+        help="with --summary: exit 1 if any per-policy pooled recovery "
+        "exceeds N ticks or never re-converged; exit 2 if no trace "
+        "carries the policy/onsets meta the gate needs",
+    )
     p.add_argument("paths", nargs="+", help="trace files")
     args = p.parse_args(argv)
+    if args.max_recovery_ticks is not None and not args.summary:
+        p.error("--max-recovery-ticks only applies to --summary")
     try:
         if args.diff:
             if len(args.paths) != 2:
@@ -210,7 +286,7 @@ def main(argv=None) -> int:
             return diff(*args.paths)
         if args.check_perfetto:
             return check_perfetto(args.paths)
-        return summarize(args.paths)
+        return summarize(args.paths, args.max_recovery_ticks)
     except UnreadableInput as e:
         print(f"trace_report: {e}", file=sys.stderr)
         return 2
